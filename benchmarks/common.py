@@ -1,0 +1,34 @@
+"""Shared benchmark plumbing: timing, CSV emission, hardware constants."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+# TPU v5e target (per chip)
+PEAK_FLOPS = 197e12            # bf16
+HBM_BW = 819e9                 # bytes/s
+ICI_BW = 50e9                  # bytes/s/link
+LINE_RATE_GBPS = 400.0         # per simulated NIC port (SPX testbed scale)
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.3f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timeit(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def pctl(x, q) -> float:
+    return float(np.quantile(np.asarray(x), q))

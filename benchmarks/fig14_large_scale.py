@@ -1,0 +1,78 @@
+"""Fig 14 — large-scale resiliency (the paper's NSX compositional method).
+
+(a) Fabric flaps, 64K single-plane 2-level FT: P99 CCT of 256-rank ring
+collectives vs concurrent failed links k, expectation-weighted by the
+Poisson pmf of concurrent failures (10 flaps/min fleet, 10 s duration).
+(b) 256K multi-plane endpoint flaps: P99 CCT slowdown as a function of the
+NIC's plane-failover convergence time (pristine/failed/degraded NIC-state
+composition)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.fault_tolerance import concurrent_failure_pmf
+from repro.netsim import LeafSpine, ring_neighbors
+from repro.netsim.sim import SimConfig, run_sim
+
+from .common import emit, pctl
+
+
+def _ring_p99_cct(t: LeafSpine, k_failed: int, rng) -> float:
+    """P99 per-flow completion proxy for ring traffic with k random fabric
+    link failures, AR routing (scaled-down proxy of the 64K sim)."""
+    topo = t.copy()
+    for _ in range(k_failed):
+        topo.fail_uplink(0, rng.integers(topo.n_leaves),
+                         rng.integers(topo.n_spines))
+    hosts = rng.permutation(topo.n_hosts)[:64]
+    flows = ring_neighbors(hosts)
+    r = run_sim(topo, flows, SimConfig(slots=300, nic="spx", routing="war",
+                                       seed=int(rng.integers(1 << 30))))
+    gp = np.maximum(r.mean_goodput, 1e-3)
+    return float(1.0 / np.quantile(gp, 0.01))      # slowest flow gates CCT
+
+
+def run() -> None:
+    rng = np.random.default_rng(11)
+    base = LeafSpine(n_leaves=16, n_spines=16, hosts_per_leaf=8,
+                     n_planes=1)
+    pmf = concurrent_failure_pmf(flaps_per_minute=10, duration_s=10,
+                                 max_k=10)
+    cct_k = [_ring_p99_cct(base, k, rng) for k in range(11)]
+    cct0 = cct_k[0]
+    expected = float(np.dot(pmf, cct_k))
+    emit("fig14a.fabric_flaps.p99cct", 0.0,
+         f"normalized={expected / cct0:.4f},worst_k10="
+         f"{cct_k[10] / cct0:.3f}")
+
+    # ---- (b) endpoint flaps: paper's NIC-state composition ----
+    # states: pristine (bw 1.0), failed (bw 0 until converged), degraded
+    # (0.75 of line after convergence). One failure per 256-rank ring.
+    flap_rate_per_s = 10.0 / 60.0
+    duration_s = 10.0
+    n_collectives, iters = 1024, 200
+    cct_base = 1.0
+    for conv_ms in (1, 10, 30, 100, 300):
+        conv_s = conv_ms / 1000.0
+        rng2 = np.random.default_rng(13)
+        p99s = []
+        for _ in range(iters):
+            # fraction of collectives touched by >=1 flapped NIC this iter
+            lam = flap_rate_per_s * (duration_s + conv_s)
+            n_fail = rng2.poisson(lam * 16)       # fleet-scaled proxy
+            ccts = np.full(n_collectives, cct_base)
+            hit = rng2.choice(n_collectives, size=min(n_fail,
+                                                      n_collectives),
+                              replace=False)
+            # during convergence the ring stalls; after, it runs at 0.75
+            frac_stalled = conv_s / (conv_s + duration_s)
+            cct_hit = frac_stalled * 60.0 + (1 - frac_stalled) / 0.75
+            ccts[hit] = cct_hit
+            p99s.append(np.quantile(ccts, 0.99))
+        slow = float(np.mean(p99s))
+        emit(f"fig14b.endpoint_flap.conv{conv_ms}ms", conv_ms * 1e3,
+             f"p99cct_slowdown={slow:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,24 @@
+"""Fig 1a — impact of network latency on All2All collective bandwidth
+(256-endpoint analytic model over the simulator's CCT law)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.netsim.workloads import all2all_cct_us, bus_bandwidth_gbps
+
+from .common import LINE_RATE_GBPS, emit
+
+
+def run() -> None:
+    n = 256
+    for lat_us in (4.0, 8.0, 16.0, 32.0, 64.0):
+        for msg_mb in (1, 8, 64, 512):
+            msg = msg_mb * (1 << 20)
+            cct = all2all_cct_us(msg, n, LINE_RATE_GBPS, lat_us)
+            bw = bus_bandwidth_gbps(msg, cct, n)
+            emit(f"fig1a.all2all.lat{lat_us:g}us.msg{msg_mb}MB", cct,
+                 f"busbw_gbps={bw:.1f}")
+
+
+if __name__ == "__main__":
+    run()

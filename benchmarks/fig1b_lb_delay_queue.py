@@ -1,0 +1,23 @@
+"""Fig 1b — switch JSQ load-balancing decision delay vs queue depth
+(slot-accurate 256-port microsimulation, 100 ns slots)."""
+from __future__ import annotations
+
+from repro.netsim.queuesim import jsq_delay_sim
+
+from .common import emit
+
+
+def run() -> None:
+    base = None
+    for delay_ns in (100, 500, 1000, 2500, 5000):
+        r = jsq_delay_sim(n_ports=256, load=0.92,
+                          decision_delay_ns=delay_ns, slots=40_000)
+        if base is None:
+            base = max(r.mean_queue, 1e-9)
+        emit(f"fig1b.jsq.delay{delay_ns}ns", r.mean_delay_us,
+             f"mean_queue={r.mean_queue:.2f}pkts,"
+             f"growth_x={r.mean_queue / base:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Pallas kernel microbenchmarks vs their jnp oracles.
+
+On this CPU container the kernels run in interpret mode, so the µs numbers
+measure the oracle and the kernel-structure dispatch — the artifact that
+matters for TPU is the BlockSpec tiling, benchmarked here for shape
+coverage and numerics only."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from .common import emit, timeit
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    B, H, S, D = 1, 4, 512, 128
+    q = jax.random.normal(key, (B, H, S, D), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, H, S, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, H, S, D))
+
+    us = timeit(lambda: jax.block_until_ready(
+        ref.flash_attention_ref(q, k, v)), iters=3)
+    emit("kernels.flash_attention.ref_jnp", us, f"B{B}H{H}S{S}D{D}")
+    us = timeit(lambda: jax.block_until_ready(
+        ops.flash_attention(q, k, v, bq=128, bk=128)), iters=1)
+    emit("kernels.flash_attention.pallas_interpret", us, "bq128_bk128")
+
+    lengths = jnp.full((B,), S, jnp.int32)
+    us = timeit(lambda: jax.block_until_ready(
+        ops.decode_attention(q[:, :, :1], k, v, lengths, bk=256)), iters=1)
+    emit("kernels.decode_attention.pallas_interpret", us, "bk256")
+
+    queues = jax.random.uniform(key, (256,))
+    up = jnp.ones(256)
+    w = jnp.ones(256)
+    h = jax.random.randint(key, (4096,), 0, 1 << 30).astype(jnp.uint32)
+    us = timeit(lambda: jax.block_until_ready(
+        ops.jsq_route(queues, up, w, h)), iters=2)
+    emit("kernels.jsq_route.pallas_interpret", us, "ports256_pkts4096")
+
+    ra = jnp.ones(4) * 0.8
+    el = jnp.ones(4)
+    lq = jax.random.uniform(key, (4,))
+    tx = jnp.full((4096,), 0.25)
+    us = timeit(lambda: jax.block_until_ready(
+        ops.plb_select(ra, el, lq, tx, h)), iters=2)
+    emit("kernels.plb_select.pallas_interpret", us, "planes4_pkts4096")
+
+    x = jax.random.normal(key, (4096, 512))
+    noise = jax.random.uniform(jax.random.fold_in(key, 3), x.shape,
+                               minval=-0.5, maxval=0.5)
+    us = timeit(lambda: jax.block_until_ready(
+        ops.int8_encode(x, noise)), iters=2)
+    emit("kernels.int8_encode.pallas_interpret", us, "4096x512")
+
+
+if __name__ == "__main__":
+    run()

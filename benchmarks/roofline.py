@@ -1,0 +1,234 @@
+"""Roofline analysis from the dry-run artifacts (§Roofline).
+
+Per (arch x shape x mesh) cell:
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs            [s]
+  memory term     = HLO_bytes_per_device / HBM_bw                [s]
+  collective term = collective_wire_bytes_per_device / ICI_bw    [s]
+(plus MODEL_FLOPS = 6*N*D / 6*N_active*D and the useful-compute ratio).
+
+HLO numbers are per-device (SPMD module); chips cancel out of the
+assignment's formulas.  'bytes accessed' from the CPU HLO pass is an
+upper bound on TPU HBM traffic (CPU applies fewer fusions) — stated in
+EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs import ARCHS, ASSIGNED, SHAPES, get_config
+
+from .common import HBM_BW, ICI_BW, PEAK_FLOPS, emit
+
+ICI_LINKS = 4          # v5e: 4 usable ICI links per chip in a 2D torus
+
+
+def active_params(name: str) -> float:
+    """N (dense) or N_active (MoE) — analytic from the config."""
+    cfg = get_config(name)
+    d, v = cfg.d_model, cfg.vocab
+    n = v * d * (1 if cfg.tie_embeddings else 2)
+    for pos, kind in enumerate(cfg.block_pattern * cfg.n_periods):
+        pos = pos % cfg.pattern_len
+        if kind == "m":
+            din = cfg.ssm_heads * cfg.ssm_head_dim
+            g, s = cfg.ssm_groups, cfg.ssm_state
+            n += 2 * d * din + d * (2 * g * s) + d * cfg.ssm_heads + \
+                din * d
+        elif cfg.use_mla:
+            n += d * cfg.q_lora + cfg.q_lora * cfg.n_heads * \
+                (cfg.nope_head_dim + cfg.rope_head_dim)
+            n += d * (cfg.kv_lora + cfg.rope_head_dim) + \
+                cfg.kv_lora * cfg.n_heads * \
+                (cfg.nope_head_dim + cfg.v_head_dim)
+            n += cfg.n_heads * cfg.v_head_dim * d
+        else:
+            n += d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim + \
+                cfg.n_heads * cfg.head_dim * d
+        if cfg.is_moe_pos(pos) and cfg.moe_experts:
+            per = (3 if True else 2) * d * cfg.moe_d_ff
+            n += cfg.moe_topk * per + cfg.moe_shared * per
+        elif cfg.d_ff:
+            n += (3 if cfg.gated_mlp else 2) * d * cfg.d_ff
+    for _ in range(cfg.n_prefix_layers):
+        n += d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim
+        n += (3 if cfg.gated_mlp else 2) * d * cfg.d_ff
+    return float(n)
+
+
+def _attn_layer_counts(cfg):
+    """(#full-attn layers, #window layers, #ssm layers) per model."""
+    full = win = ssm = 0
+    pattern = list(cfg.block_pattern) * cfg.n_periods
+    for kind in pattern:
+        if kind == "m":
+            ssm += 1
+        elif kind == "l":
+            win += 1
+        else:
+            full += 1
+    full += cfg.n_prefix_layers
+    return full, win, ssm
+
+
+def attention_flops(arch: str, shape_name: str) -> float:
+    """Global attention-score/PV FLOPs (not captured by 6N*D)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    full, win, ssm = _attn_layer_counts(cfg)
+    qk = cfg.n_heads * cfg.head_dim if not cfg.use_mla else \
+        cfg.n_heads * (cfg.nope_head_dim + cfg.rope_head_dim)
+    if shape.mode in ("train", "prefill"):
+        # causal: S^2/2 per layer pair; window: S*W
+        per_full = 4 * B * (S * S // 2) * qk
+        per_win = 4 * B * S * min(cfg.window, S) * qk
+        f = (per_full * full + per_win * win)
+        if shape.mode == "train":
+            f *= 3          # fwd + 2x bwd
+        # SSD intra-chunk quadratic + state path
+        if ssm:
+            l = cfg.ssm_chunk
+            din = cfg.ssm_heads * cfg.ssm_head_dim
+            per_ssm = (2 * B * S * l * cfg.ssm_groups * cfg.ssm_state +
+                       2 * B * S * l * din +
+                       4 * B * S * din * cfg.ssm_state)
+            f += per_ssm * ssm * (3 if shape.mode == "train" else 1)
+        return f
+    # decode: one token attends the whole cache
+    per_full = 4 * B * S * qk
+    per_win = 4 * B * min(cfg.window, S) * qk
+    per_ssm = 4 * B * (cfg.ssm_heads * cfg.ssm_head_dim) * cfg.ssm_state
+    return per_full * full + per_win * win + per_ssm * ssm
+
+
+def model_flops(arch: str, shape_name: str, train: bool = False) -> float:
+    """Useful FLOPs: 6/2 x N_active x tokens + attention term."""
+    shape = SHAPES[shape_name]
+    n_act = active_params(arch)
+    attn = attention_flops(arch, shape_name)
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens + attn
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens + attn
+    return 2.0 * n_act * shape.global_batch + attn
+
+
+def _kv_bytes_per_token(cfg) -> float:
+    """KV-cache bytes per (token, all layers), bf16."""
+    full, win, ssm = _attn_layer_counts(cfg)
+    if cfg.use_mla:
+        per = (cfg.kv_lora + cfg.rope_head_dim) * 2
+        return per * (full + win)
+    per = 2 * cfg.n_kv_heads * cfg.head_dim * 2
+    return per * (full + win)      # window layers capped at W tokens
+
+
+def analytic_hbm_bytes(arch: str, shape_name: str, chips: int) -> float:
+    """Per-device HBM traffic model (TPU-fused program):
+
+    train   ~ 12 passes over fp32 params+opt (fwd, bwd, remat, grad, Adam
+              m/v r+w, param w) + ~8 passes over bf16 activations
+    prefill ~ params once (bf16) + 4x activations + KV write
+    decode  ~ params once + full KV-cache read (the decode bottleneck)
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    n = active_params(arch)
+    # total (not active) params move through HBM for MoE weights
+    n_total = _total_params(cfg)
+    p_dev = n_total / min(chips, 256)          # pod-replicated
+    d, L = cfg.d_model, cfg.n_layers
+    full, win, ssm = _attn_layer_counts(cfg)
+    if shape.mode == "train":
+        tok_dev = B * S / chips
+        act = 8.0 * tok_dev * d * L * 2
+        return 12.0 * p_dev * 4 + act
+    if shape.mode == "prefill":
+        tok_dev = B * S / chips
+        act = 4.0 * tok_dev * d * L * 2
+        kv = tok_dev * _kv_bytes_per_token(cfg)
+        return p_dev * 2 + act + kv
+    # decode
+    kv_tokens = (full * S + win * min(cfg.window, S)) * B / chips
+    per_layer = ((cfg.kv_lora + cfg.rope_head_dim) * 2 if cfg.use_mla
+                 else 2 * cfg.n_kv_heads * cfg.head_dim * 2)
+    kv = kv_tokens * per_layer
+    ssm_state = (ssm * B * cfg.ssm_heads * cfg.ssm_head_dim *
+                 cfg.ssm_state * 4 * 2) / chips
+    return p_dev * 2 + kv + ssm_state + B * d * L * 2 * 8 / chips
+
+
+def _total_params(cfg) -> float:
+    shapes = None
+    import jax as _jax
+    from repro.models import init_params as _ip
+    shapes = _jax.eval_shape(lambda: _ip(_jax.random.PRNGKey(0), cfg))
+    return float(sum(int(np.prod(x.shape))
+                     for x in _jax.tree.leaves(shapes)))
+
+
+def load_cells(out_dir: str = "experiments/dryrun") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def roofline_row(rec: Dict) -> Optional[Dict]:
+    if not rec.get("ok") or rec.get("skipped"):
+        return None
+    mesh_kind = rec["mesh"]
+    chips = 512 if mesh_kind == "multi" else 256
+    cost = rec.get("acct_cost") or rec.get("cost") or {}
+    coll = rec.get("acct_collective_wire_bytes",
+                   rec.get("collective_wire_bytes", 0.0))
+    flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+    t_comp = flops / PEAK_FLOPS
+    # memory term: analytic fused-program HBM traffic (the CPU HLO
+    # 'bytes accessed' is fusion-blind and 10-100x inflated; kept as an
+    # upper bound only)
+    mem_bytes = analytic_hbm_bytes(rec["arch"], rec["shape"], chips)
+    t_mem = mem_bytes / HBM_BW
+    t_coll = float(coll) / (ICI_BW * ICI_LINKS)
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    mf_dev = mf / chips
+    ratio = min(mf_dev / flops, 1.0) if flops else 0.0
+    bound = max(terms.values())
+    frac = (mf_dev / PEAK_FLOPS) / bound if bound else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": mesh_kind,
+        "t_compute_s": t_comp, "t_memory_s": t_mem,
+        "t_collective_s": t_coll, "dominant": dom,
+        "model_flops_per_dev": mf_dev, "hlo_flops_per_dev": flops,
+        "hlo_bytes_upper_s": hlo_bytes / HBM_BW,
+        "useful_ratio": ratio, "roofline_fraction": min(frac, 1.0),
+    }
+
+
+def run() -> None:
+    cells = load_cells()
+    rows = [r for r in (roofline_row(c) for c in cells) if r]
+    for r in sorted(rows, key=lambda x: (x["mesh"], x["arch"], x["shape"])):
+        emit(f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}",
+             r["t_compute_s"] * 1e6,
+             f"mem_us={r['t_memory_s'] * 1e6:.1f},"
+             f"coll_us={r['t_collective_s'] * 1e6:.1f},"
+             f"dominant={r['dominant']},"
+             f"useful={r['useful_ratio']:.2f},"
+             f"roofline_frac={r['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (fig1a_latency_all2all, fig1b_lb_delay_queue,
+                   fig1c_maxflow_failures, fig8_bisection, fig9_isolation,
+                   fig11_static_resiliency, fig12_flap_recovery,
+                   fig14_large_scale, fig15_plane_lb, kernels_bench,
+                   roofline)
+    print("name,us_per_call,derived")
+    modules = [
+        ("fig1a", fig1a_latency_all2all),
+        ("fig1b", fig1b_lb_delay_queue),
+        ("fig1c", fig1c_maxflow_failures),
+        ("fig8", fig8_bisection),
+        ("fig9/10", fig9_isolation),
+        ("fig11", fig11_static_resiliency),
+        ("fig12", fig12_flap_recovery),
+        ("fig14", fig14_large_scale),
+        ("fig15", fig15_plane_lb),
+        ("kernels", kernels_bench),
+        ("roofline", roofline),
+    ]
+    failed = []
+    for name, mod in modules:
+        try:
+            mod.run()
+        except Exception:                                  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED benchmarks: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

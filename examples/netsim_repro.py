@@ -1,0 +1,62 @@
+"""Reproduce the paper's headline network results in one script.
+
+  PYTHONPATH=src python examples/netsim_repro.py
+"""
+import numpy as np
+
+from repro.netsim import LeafSpine, all2all, bisection_pairs, Flow
+from repro.netsim.sim import SimConfig, run_sim
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    print("== Fig 8: bisection under max load (64 endpoints) ==")
+    t0 = LeafSpine(n_leaves=8, n_spines=8, hosts_per_leaf=8, n_planes=1)
+    flows = bisection_pairs(t0, range(t0.n_hosts), rng)
+    for name, nic, routing in (("ETH (ECMP+DCQCN)", "dcqcn", "ecmp"),
+                               ("SPX (AR + SPX-CC)", "spx", "ar")):
+        r = run_sim(t0.copy(), flows,
+                    SimConfig(slots=500, nic=nic, routing=routing, seed=1))
+        gp = r.mean_goodput
+        print(f"  {name:20s} p01={np.quantile(gp, 0.01) * 100:5.1f}% "
+              f"median={np.median(gp) * 100:5.1f}% of line rate, "
+              f"p99 lat {np.quantile(r.rtt[250:], 0.99):5.1f} us")
+
+    print("\n== Fig 9: victim All2All next to a noise All2All ==")
+    for name, nic, routing in (("ETH", "dcqcn", "ecmp"),
+                               ("SPX", "spx", "ar")):
+        victims = list(range(0, 64, 4))
+        noise = [h for h in range(64) if h % 4 != 0]
+        fl = (all2all(t0, victims, group="victim") +
+              all2all(t0, noise, group="noise"))
+        r = run_sim(t0.copy(), fl,
+                    SimConfig(slots=400, nic=nic, routing=routing, seed=2))
+        vi = r.groups.index("victim")
+        v = r.mean_goodput[r.group_of == vi].reshape(16, 15).sum(1)
+        print(f"  {name}: victim rank bandwidth = {v.mean() * 100:.1f}% "
+              f"of line rate")
+
+    print("\n== Fig 12: host-plane flap, hardware PLB vs software LB ==")
+
+    def ev(t, topo):
+        if t == 50:
+            topo.fail_access(1, 0)
+
+    for name, nic, delay, slots in (("HW PLB", "spx", 0.0, 600),
+                                    ("SW LB", "swlb", 1000.0, 12000)):
+        t = LeafSpine(n_leaves=2, n_spines=2, hosts_per_leaf=4,
+                      n_planes=4, access_cap=0.25)
+        r = run_sim(t, [Flow(0, 4, 1.0)],
+                    SimConfig(slots=slots, slot_us=100.0, nic=nic,
+                              routing="ar", sw_lb_delay_ms=delay, seed=3),
+                    events=ev)
+        g = r.goodput[:, 0]
+        post = np.flatnonzero((np.arange(len(g)) > 50) & (g >= 0.675))
+        rec = (post[0] - 50) * 0.1 if len(post) else float("inf")
+        print(f"  {name}: recovery {rec:8.1f} ms -> steady "
+              f"{g[-5:].mean() * 100:.0f}% (3 of 4 planes)")
+
+
+if __name__ == "__main__":
+    main()

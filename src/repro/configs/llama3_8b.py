@@ -1,0 +1,19 @@
+"""llama3-8b [dense] — GQA, 128k vocab.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256
+[arXiv:2407.21783]
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-8b",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab=128256,
+    block_pattern=("a",),
+    rope_base=500000.0,
+)

@@ -1,0 +1,6 @@
+from .planes import PlaneConfig, apportion, plane_loads, effective_bandwidth
+from .plb import PLBState, plb_init, plb_update, select_plane, plane_weights
+from .congestion import SpxCCConfig, DcqcnConfig, spx_cc_update, dcqcn_update
+from .collectives import plane_allreduce, stream_report, int8_encode, int8_decode
+from .fault_tolerance import (FailoverController, poisson_flaps,
+                              concurrent_failure_pmf, elastic_mesh_plan)

@@ -1,0 +1,75 @@
+"""Switch per-packet Adaptive Routing (§4.1): quantized Join-Shortest-Queue
+over the ECMP group, extended with Weighted AR (§4.4.2) for remote capacity
+asymmetry.
+
+These are the pure functions behind both the network simulator's switches
+and the ``jsq_route`` Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BIG = jnp.float32(1e30)
+
+
+def quantize_queue(q: jax.Array, nbins: int = 16,
+                   qmax: float = 1.0) -> jax.Array:
+    """Quantized queue score (the hardware compares coarse bins, not exact
+    byte counts)."""
+    return jnp.floor(jnp.clip(q / qmax, 0.0, 1.0 - 1e-6) * nbins)
+
+
+def ar_scores(queues: jax.Array, up_mask: jax.Array,
+              weights: jax.Array | None = None,
+              nbins: int = 16, qmax: float = 1.0) -> jax.Array:
+    """Per-port AR score: lower is better.  Weighted AR divides the local
+    queue score by the remote-capacity weight so degraded destinations
+    attract proportionally less traffic.  Failed ports score +inf."""
+    s = quantize_queue(queues, nbins, qmax) + 1.0
+    if weights is not None:
+        s = s / jnp.maximum(weights, 1e-6)
+    return jnp.where(up_mask, s, BIG)
+
+
+def jsq_select(queues: jax.Array, up_mask: jax.Array, key: jax.Array,
+               weights: jax.Array | None = None,
+               nbins: int = 16, qmax: float = 1.0) -> jax.Array:
+    """Pick one egress port for a packet: min score, random tie-break."""
+    s = ar_scores(queues, up_mask, weights, nbins, qmax)
+    noise = jax.random.uniform(key, s.shape, minval=0.0, maxval=0.5)
+    return jnp.argmin(s + noise, axis=-1)
+
+
+def ecmp_select(flow_hash: jax.Array, up_mask: jax.Array) -> jax.Array:
+    """Static ECMP: hash modulo the number of *up* ports (rehash on
+    failure).  flow_hash: int32 (...,)."""
+    n_up = jnp.maximum(jnp.sum(up_mask.astype(jnp.int32), -1), 1)
+    idx = flow_hash % n_up
+    # map rank-among-up -> physical port
+    order = jnp.cumsum(up_mask.astype(jnp.int32), -1) - 1
+    port = jnp.argmax((order == idx[..., None]) & up_mask, axis=-1)
+    return port
+
+
+def spray_fractions(queues: jax.Array, up_mask: jax.Array,
+                    weights: jax.Array | None = None,
+                    nbins: int = 16, qmax: float = 1.0,
+                    temperature: float = 1.0) -> jax.Array:
+    """Fluid-model AR: the fraction of arriving load each egress port
+    receives this slot.  A softmin over AR scores — at temperature->0 it is
+    exact JSQ; finite temperature models the quantized/delayed decision."""
+    s = ar_scores(queues, up_mask, weights, nbins, qmax)
+    logit = -s / jnp.maximum(temperature, 1e-6)
+    logit = jnp.where(up_mask, logit, -BIG)
+    return jax.nn.softmax(logit, axis=-1)
+
+
+def ecmp_fractions(n_flows: jax.Array, up_mask: jax.Array,
+                   key: jax.Array) -> jax.Array:
+    """Fluid ECMP: flows hash uniformly to up ports -> multinomial load
+    split (balls into bins), capturing hash-collision imbalance."""
+    ports = up_mask.shape[-1]
+    probs = up_mask / jnp.maximum(jnp.sum(up_mask, -1, keepdims=True), 1)
+    counts = jax.random.multinomial(key, n_flows, probs)  # may broadcast
+    return counts / jnp.maximum(n_flows, 1)

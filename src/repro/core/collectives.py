@@ -1,0 +1,184 @@
+"""Plane-sharded collectives — the paper's technique as a first-class
+gradient-sync engine.
+
+Every gradient leaf is split into micro-chunks; each micro-chunk is an
+independent collective stream assigned to a plane by the PLB weights
+(assignment is pure scheduling — numerics are invariant).  Streams are
+lowered either as plain ``lax.psum`` or as an explicit ring decomposition
+(``psum_scatter`` + ``all_gather``) whose all-gather phase can carry
+int8-compressed payloads (stochastic rounding, unbiased) — the
+distributed-optimization extension beyond the paper.
+
+All functions here run INSIDE a ``shard_map`` that is manual over the DP
+axes and automatic over the model axis, so TP shardings pass through
+untouched.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .planes import PlaneConfig, apportion
+
+
+# ---------------------------------------------------------------------------
+# int8 codec (pure-jnp twin of kernels/int8_codec.py)
+# ---------------------------------------------------------------------------
+
+def int8_encode(x: jax.Array, key: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-row (last-dim) scaled int8 with stochastic rounding (unbiased)."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    y = x / scale
+    noise = jax.random.uniform(key, x.shape, minval=-0.5, maxval=0.5)
+    q = jnp.clip(jnp.round(y + noise), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def int8_decode(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# chunking
+# ---------------------------------------------------------------------------
+
+def _chunk_bounds(n0: int, k: int) -> List[Tuple[int, int]]:
+    """np.array_split-style bounds of axis-0 into <=k chunks."""
+    k = min(k, n0)
+    sizes = [n0 // k + (1 if i < n0 % k else 0) for i in range(k)]
+    bounds, off = [], 0
+    for s in sizes:
+        bounds.append((off, off + s))
+        off += s
+    return bounds
+
+
+def _scatter_dim(shape: Tuple[int, ...], dp: int) -> int:
+    for d in range(min(2, len(shape))):
+        if shape[d] % dp == 0 and shape[d] >= dp:
+            return d
+    return -1
+
+
+def _psum_chunk(x, dp_axes, mode: str, key, dp_size: int):
+    """One micro-chunk collective stream."""
+    if mode == "psum":
+        return jax.lax.psum(x, dp_axes)
+    sd = _scatter_dim(x.shape, dp_size)
+    if sd < 0:
+        return jax.lax.psum(x, dp_axes)
+    # ring decomposition: reduce-scatter then all-gather
+    red = jax.lax.psum_scatter(x, dp_axes, scatter_dimension=sd, tiled=True)
+    if mode == "rs_ag":
+        return jax.lax.all_gather(red, dp_axes, axis=sd, tiled=True)
+    if mode == "rs_ag_int8":
+        if sd >= x.ndim - 1:
+            # cannot compress along the scaling dim (1-D bias/gamma chunks)
+            return jax.lax.all_gather(red, dp_axes, axis=sd, tiled=True)
+        q, scale = int8_encode(red, key)
+        qg = jax.lax.all_gather(q, dp_axes, axis=sd, tiled=True)
+        sg = jax.lax.all_gather(scale, dp_axes, axis=sd, tiled=True)
+        return int8_decode(qg, sg)
+    raise ValueError(mode)
+
+
+def plane_allreduce(grads, dp_axes: Sequence[str], cfg: PlaneConfig,
+                    key: jax.Array | None = None,
+                    mode: str | None = None, mean: bool = True):
+    """Sum (or mean) gradients over the DP axes via micro-chunk streams.
+
+    Must be called inside shard_map(axis_names=set(dp_axes))."""
+    dp_axes = tuple(dp_axes)
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= jax.lax.axis_size(a)
+    if mode is None:
+        mode = {"none": "psum", "int8": "rs_ag_int8"}.get(
+            cfg.compression, cfg.compression)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    leaves, treedef = jax.tree.flatten(grads)
+    out = []
+    kidx = 0
+    for leaf in leaves:
+        if leaf.ndim == 0 or leaf.size <= cfg.microchunks:
+            out.append(jax.lax.psum(leaf, dp_axes))
+            continue
+        pieces = []
+        for (lo, hi) in _chunk_bounds(leaf.shape[0], cfg.microchunks):
+            kidx += 1
+            ck = jax.random.fold_in(key, kidx)
+            piece = jax.lax.slice_in_dim(leaf, lo, hi, axis=0)
+            pieces.append(_psum_chunk(piece, dp_axes, mode, ck, dp_size))
+        out.append(jnp.concatenate(pieces, axis=0).astype(leaf.dtype))
+    g = jax.tree.unflatten(treedef, out)
+    if mean:
+        g = jax.tree.map(lambda x: x / dp_size, g)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# host-side stream accounting (scheduling/telemetry; numerics-free)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class StreamReport:
+    chunk_bytes: np.ndarray      # (n_chunks,)
+    assignment: np.ndarray       # (n_chunks,) plane ids
+    bytes_per_plane: np.ndarray  # (P,)
+
+
+def stream_report(grads, cfg: PlaneConfig,
+                  weights: np.ndarray | None = None) -> StreamReport:
+    """Compute the micro-chunk -> plane assignment for this step's gradient
+    pytree given current PLB weights (host-side; drives telemetry and the
+    failover performance model)."""
+    if weights is None:
+        weights = np.ones(cfg.n_planes) / cfg.n_planes
+    sizes = []
+    for leaf in jax.tree.leaves(grads):
+        shape = getattr(leaf, "shape", ())
+        if len(shape) == 0 or int(np.prod(shape)) <= cfg.microchunks:
+            sizes.append(int(np.prod(shape)) * 4)
+            continue
+        per = int(np.prod(shape[1:])) if len(shape) > 1 else 1
+        for (lo, hi) in _chunk_bounds(shape[0], cfg.microchunks):
+            sizes.append((hi - lo) * per * 4)
+    chunk_bytes = np.asarray(sizes, np.float64)
+    assignment = greedy_assign(chunk_bytes, np.asarray(weights))
+    bpp = np.zeros(cfg.n_planes)
+    np.add.at(bpp, assignment, chunk_bytes)
+    return StreamReport(chunk_bytes=chunk_bytes, assignment=assignment,
+                        bytes_per_plane=bpp)
+
+
+def greedy_assign(chunk_bytes: np.ndarray,
+                  weights: np.ndarray) -> np.ndarray:
+    """Byte-aware LPT assignment: largest chunk first onto the plane with
+    the smallest weighted load. Chunk-count apportionment leaves planes
+    imbalanced when chunk sizes are skewed (the embedding chunk alone can
+    be 10x a layer chunk)."""
+    P = weights.shape[0]
+    w = np.asarray(weights, np.float64)
+    if w.sum() <= 0:
+        w = np.ones(P)
+    w = np.maximum(w / w.sum(), 0.0)
+    loads = np.zeros(P)
+    out = np.zeros(chunk_bytes.shape[0], np.int64)
+    order = np.argsort(-chunk_bytes, kind="stable")
+    eligible = w > 1e-12
+    for i in order:
+        score = np.where(eligible,
+                         (loads + chunk_bytes[i]) / np.maximum(w, 1e-12),
+                         np.inf)
+        p = int(np.argmin(score))
+        out[i] = p
+        loads[p] += chunk_bytes[i]
+    return out

@@ -1,0 +1,154 @@
+"""Fault injection and failover control (§4.4, §6.5–6.6).
+
+* Poisson link-flap schedules with the paper's MTBF methodology (10
+  flaps/min fleet-wide, 10 s flap duration; concurrent-failure count is
+  Poisson-distributed).
+* ``FailoverController`` — host-side controller that feeds plane-health
+  signals into the jitted PLB update and tracks recovery latency in steps,
+  mirroring the <3 ms hardware PLB vs ~1 s software LB comparison.
+* Elastic mesh planning for permanent node loss (checkpoint/restart path).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from .planes import PlaneConfig
+from .plb import PLBState, plb_init, plb_update, plane_weights
+
+
+# ---------------------------------------------------------------------------
+# flap schedules (§6.6 methodology)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FlapEvent:
+    link: int
+    t_down: float
+    t_up: float
+
+
+def poisson_flaps(rng: np.random.Generator, n_links: int,
+                  flaps_per_minute: float, duration_s: float,
+                  horizon_s: float) -> List[FlapEvent]:
+    """Fleet-wide flap rate -> per-link exponential inter-arrival times."""
+    lam_per_link = flaps_per_minute / 60.0 / max(n_links, 1)
+    events: List[FlapEvent] = []
+    for link in range(n_links):
+        t = 0.0
+        while True:
+            t += rng.exponential(1.0 / max(lam_per_link, 1e-12))
+            if t >= horizon_s:
+                break
+            events.append(FlapEvent(link, t, t + duration_s))
+    events.sort(key=lambda e: e.t_down)
+    return events
+
+
+def concurrent_failure_pmf(flaps_per_minute: float, duration_s: float,
+                           max_k: int = 10) -> np.ndarray:
+    """Poisson pmf over the number of concurrently failed links — the
+    weighting the paper uses to compose per-k simulations into an expected
+    P99 CCT."""
+    lam = flaps_per_minute / 60.0 * duration_s
+    k = np.arange(max_k + 1)
+    logp = k * np.log(max(lam, 1e-12)) - lam - \
+        np.array([np.sum(np.log(np.arange(1, kk + 1))) if kk else 0.0
+                  for kk in k])
+    p = np.exp(logp)
+    return p / p.sum()
+
+
+def links_down_at(events: List[FlapEvent], t: float) -> List[int]:
+    return [e.link for e in events if e.t_down <= t < e.t_up]
+
+
+# ---------------------------------------------------------------------------
+# failover controller (host side; drives the jitted PLB update)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RecoveryRecord:
+    plane: int
+    fail_step: int
+    converged_step: Optional[int] = None
+
+    @property
+    def recovery_steps(self) -> Optional[int]:
+        if self.converged_step is None:
+            return None
+        return self.converged_step - self.fail_step
+
+
+class FailoverController:
+    """Threads PLBState through the train loop; injects plane failures and
+    measures convergence (steps until weights match plane health)."""
+
+    def __init__(self, cfg: PlaneConfig):
+        self.cfg = cfg
+        self.state: PLBState = plb_init(cfg.n_planes)
+        self.plane_up = np.ones(cfg.n_planes, bool)
+        self.step = 0
+        self.records: List[RecoveryRecord] = []
+        self._open: Dict[int, RecoveryRecord] = {}
+
+    def fail_plane(self, plane: int) -> None:
+        if self.plane_up[plane]:
+            self.plane_up[plane] = False
+            rec = RecoveryRecord(plane, self.step)
+            self.records.append(rec)
+            self._open[plane] = rec
+
+    def restore_plane(self, plane: int) -> None:
+        self.plane_up[plane] = True
+
+    def on_step(self, plane_queue: Optional[np.ndarray] = None,
+                plane_rtt_us: Optional[np.ndarray] = None) -> np.ndarray:
+        """Advance one step; returns current plane weights (numpy)."""
+        p = self.cfg.n_planes
+        up = jnp.asarray(self.plane_up)
+        rtt = (jnp.asarray(plane_rtt_us, jnp.float32)
+               if plane_rtt_us is not None
+               else jnp.where(up, 6.0, 1e3).astype(jnp.float32))
+        ecn = jnp.zeros((p,), jnp.float32)
+        delivered = jnp.where(up, 1.0, 0.0).astype(jnp.float32)
+        queue = (jnp.asarray(plane_queue, jnp.float32)
+                 if plane_queue is not None
+                 else jnp.where(up, 0.1, 1.0).astype(jnp.float32))
+        self.state = plb_update(self.state, rtt, ecn, delivered, up, queue,
+                                self.cfg)
+        self.step += 1
+        w = np.asarray(plane_weights(self.state))
+        # convergence check for open failures: failed plane weight ~ 0
+        for plane, rec in list(self._open.items()):
+            if not self.plane_up[plane] and w[plane] < 1e-3:
+                rec.converged_step = self.step
+                del self._open[plane]
+        return w
+
+    def weights(self) -> np.ndarray:
+        return np.asarray(plane_weights(self.state))
+
+
+# ---------------------------------------------------------------------------
+# elastic scaling (permanent failures -> re-mesh plan)
+# ---------------------------------------------------------------------------
+
+def elastic_mesh_plan(n_devices: int, model_parallel: int,
+                      pods: int = 1) -> Tuple[int, ...]:
+    """Largest (pod, data, model) mesh that fits the surviving devices,
+    keeping TP intact and shrinking DP — the checkpoint-restart re-mesh
+    used after permanent node loss."""
+    if n_devices < model_parallel:
+        raise ValueError("fewer devices than one TP group")
+    per_pod = n_devices // pods
+    dp = per_pod // model_parallel
+    if dp < 1:
+        raise ValueError("cannot form a single DP replica per pod")
+    if pods > 1:
+        return (pods, dp, model_parallel)
+    return (dp, model_parallel)

@@ -1,0 +1,91 @@
+"""NIC Plane Load Balancer (§4.3, Fig. 4) — per-(destination,)plane CC
+contexts and the two-stage per-packet plane selection:
+
+  1. **Rate filter** (E2E congestion): planes whose CC allowance falls below
+     the current transmission rate are excluded.
+  2. **Local queue selection**: among eligible planes, pick the shallowest
+     local egress queue (mirrors switch adaptive routing).
+
+State also tracks probe timeouts: consecutive missed RTT probes on a plane
+remove it from the eligible set within a few RTTs (§4.4.1), entirely in
+"hardware" (i.e. inside the jitted update, no host round-trip).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .congestion import SpxCCConfig, spx_cc_update
+from .planes import PlaneConfig
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class PLBState:
+    rate_allow: jax.Array     # (P,) CC rate allowance per plane (0..1)
+    ewma_goodput: jax.Array   # (P,) smoothed delivered fraction
+    local_queue: jax.Array    # (P,) NIC egress queue proxy (0..1)
+    probe_miss: jax.Array     # (P,) consecutive RTT-probe timeouts
+    eligible: jax.Array       # (P,) bool: in the eligible set
+
+
+def plb_init(n_planes: int) -> PLBState:
+    p = n_planes
+    return PLBState(
+        rate_allow=jnp.ones((p,), jnp.float32),
+        ewma_goodput=jnp.ones((p,), jnp.float32),
+        local_queue=jnp.zeros((p,), jnp.float32),
+        probe_miss=jnp.zeros((p,), jnp.int32),
+        eligible=jnp.ones((p,), bool),
+    )
+
+
+def select_plane(state: PLBState, key: jax.Array,
+                 tx_rate: float | jax.Array = 0.25) -> jax.Array:
+    """Two-stage hierarchical selection for one packet (Fig. 4)."""
+    ok = state.eligible & (state.rate_allow >= tx_rate)
+    # if the rate filter empties the set, fall back to eligible planes
+    any_ok = jnp.any(ok)
+    ok = jnp.where(any_ok, ok, state.eligible)
+    q = jnp.where(ok, state.local_queue, jnp.inf)
+    noise = jax.random.uniform(key, q.shape, maxval=1e-3)
+    return jnp.argmin(q + noise)
+
+
+def select_planes(state: PLBState, keys: jax.Array,
+                  tx_rate: float = 0.25) -> jax.Array:
+    """Vectorized per-packet selection; keys: (N, 2) uint32 PRNG keys."""
+    return jax.vmap(lambda k: select_plane(state, k, tx_rate))(keys)
+
+
+def plb_update(state: PLBState, plane_rtt_us: jax.Array,
+               plane_ecn: jax.Array, plane_delivered: jax.Array,
+               probe_ok: jax.Array, plane_queue: jax.Array,
+               cfg: PlaneConfig = PlaneConfig(),
+               cc: SpxCCConfig = SpxCCConfig()) -> PLBState:
+    """One control interval (a few RTTs): update per-plane CC contexts from
+    their own signals — a congested/failed plane never throttles healthy
+    ones (the paper's Global-CC failure mode)."""
+    rate = spx_cc_update(state.rate_allow, plane_rtt_us, plane_ecn, cc)
+    miss = jnp.where(probe_ok, 0, state.probe_miss + 1)
+    eligible = miss < cfg.probe_timeout
+    # a failed plane's allowance collapses; restored planes ramp from ewma
+    rate = jnp.where(eligible, rate, cc.min_rate)
+    just_restored = eligible & ~state.eligible
+    rate = jnp.where(just_restored, jnp.maximum(rate, 0.5), rate)
+    gp = cfg.ewma * state.ewma_goodput + (1 - cfg.ewma) * plane_delivered
+    return PLBState(rate_allow=rate, ewma_goodput=gp,
+                    local_queue=plane_queue.astype(jnp.float32),
+                    probe_miss=miss, eligible=eligible)
+
+
+def plane_weights(state: PLBState) -> jax.Array:
+    """Normalized chunk weights for the collective engine: healthy planes
+    weighted by their CC allowance."""
+    w = jnp.where(state.eligible, state.rate_allow, 0.0)
+    s = jnp.sum(w)
+    p = w.shape[0]
+    return jnp.where(s > 0, w / jnp.maximum(s, 1e-9),
+                     jnp.full((p,), 1.0 / p))

@@ -1,0 +1,1 @@
+from .synthetic import DataConfig, DataLoader, batch_at

@@ -1,0 +1,98 @@
+"""Split-K decode attention: one query token against a long KV cache.
+
+Grid: (B*H, n_k).  Each k-block computes a partial (max, sum, acc) in VMEM
+scratch; the final block normalizes.  A per-batch ``length`` scalar
+(prefetched to SMEM) masks cache slots beyond the valid length — the
+block-table-free analogue of paged decode for ring caches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref,
+                   *, bk: int, n_k: int, heads: int, sm_scale: float):
+    bh = pl.program_id(0)
+    ik = pl.program_id(1)
+    b = bh // heads
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * sm_scale            # (1, d)
+    k = k_ref[0].astype(jnp.float32)                       # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (1, bk)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    valid = k_pos < len_ref[b]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *, bk: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, H, 1, D); k/v: (B, H, S, D); lengths: (B,) int32 valid-cache
+    sizes. Returns (B, H, 1, D)."""
+    B, H, _, D = q.shape
+    S = k.shape[2]
+    bk = min(bk, S)
+    assert S % bk == 0
+    n_k = S // bk
+    sm_scale = 1.0 / (D ** 0.5)
+
+    qr = q.reshape(B * H, 1, D)
+    kr = k.reshape(B * H, S, D)
+    vr = v.reshape(B * H, S, D)
+
+    kernel = functools.partial(_decode_kernel, bk=bk, n_k=n_k, heads=H,
+                               sm_scale=sm_scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * H, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, j, lens: (b, 0, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, j, lens: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, j, lens: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, j, lens: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * H, 1, D), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qr, kr, vr)
+    return out.reshape(B, H, 1, D)

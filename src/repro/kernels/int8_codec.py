@@ -1,0 +1,64 @@
+"""Per-row int8 gradient codec (stochastic rounding) for compressed
+all-gather collectives — Pallas kernels for the encode/decode hot path.
+
+Encode: per (row-block, col) tile — row-max |x| -> scale; q = clip(round(
+x/scale + u)), u ~ U(-0.5, 0.5) supplied as an input buffer (determinism
+under jit; the TPU PRNG variant is a drop-in).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _encode_kernel(x_ref, noise_ref, q_ref, scale_ref):
+    x = x_ref[...].astype(jnp.float32)                   # (br, C)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    y = x / scale + noise_ref[...].astype(jnp.float32)
+    q_ref[...] = jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+    scale_ref[...] = scale
+
+
+def _decode_kernel(q_ref, scale_ref, x_ref):
+    x_ref[...] = (q_ref[...].astype(jnp.float32) *
+                  scale_ref[...].astype(jnp.float32)).astype(x_ref.dtype)
+
+
+def int8_encode(x: jax.Array, noise: jax.Array, *, br: int = 256,
+                interpret: bool = False):
+    """x, noise: (R, C). Returns (q int8 (R, C), scale f32 (R, 1))."""
+    R, C = x.shape
+    br = min(br, R)
+    assert R % br == 0
+    q, scale = pl.pallas_call(
+        _encode_kernel,
+        grid=(R // br,),
+        in_specs=[pl.BlockSpec((br, C), lambda i: (i, 0)),
+                  pl.BlockSpec((br, C), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((br, C), lambda i: (i, 0)),
+                   pl.BlockSpec((br, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((R, C), jnp.int8),
+                   jax.ShapeDtypeStruct((R, 1), jnp.float32)],
+        interpret=interpret,
+    )(x, noise)
+    return q, scale
+
+
+def int8_decode(q: jax.Array, scale: jax.Array, *, br: int = 256,
+                dtype=jnp.float32, interpret: bool = False) -> jax.Array:
+    R, C = q.shape
+    br = min(br, R)
+    assert R % br == 0
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=(R // br,),
+        in_specs=[pl.BlockSpec((br, C), lambda i: (i, 0)),
+                  pl.BlockSpec((br, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C), dtype),
+        interpret=interpret,
+    )(q, scale)

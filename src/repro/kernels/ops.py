@@ -1,0 +1,78 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On non-TPU backends the kernels execute via ``interpret=True`` (Python
+interpreter of the kernel body — used for CPU validation); on TPU they
+compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import decode_attention as _da
+from . import jsq_route as _jr
+from . import plb_select as _ps
+from . import int8_codec as _ic
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq",
+                                             "bk"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128):
+    """(B,H,S,D) fused attention; GQA callers repeat KV heads first."""
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               bq=bq, bk=bk, interpret=_interpret())
+
+
+def flash_attention_bshd(q, k, v, *, causal: bool = True,
+                         window: int = 0, bq: int = 128, bk: int = 128):
+    """Model-layout wrapper: q (B,S,Hq,D), k/v (B,S,Hkv,D)."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    if Hkv != Hq:
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    out = flash_attention(q.transpose(0, 2, 1, 3),
+                          k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3),
+                          causal=causal, window=window, bq=bq, bk=bk)
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("bk",))
+def decode_attention(q, k, v, lengths, *, bk: int = 512):
+    return _da.decode_attention(q, k, v, lengths, bk=bk,
+                                interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("nbins", "qmax", "bp"))
+def jsq_route(queues, up_mask, weights, pkt_hash, *, nbins: int = 16,
+              qmax: float = 1.0, bp: int = 256):
+    return _jr.jsq_route(queues, up_mask, weights, pkt_hash, nbins=nbins,
+                         qmax=qmax, bp=bp, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("bp",))
+def plb_select(rate_allow, eligible, local_queue, tx_rate, pkt_hash,
+               *, bp: int = 256):
+    return _ps.plb_select(rate_allow, eligible, local_queue, tx_rate,
+                          pkt_hash, bp=bp, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def int8_encode(x, noise, *, br: int = 256):
+    return _ic.int8_encode(x, noise, br=br, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("br", "dtype"))
+def int8_decode(q, scale, *, br: int = 256, dtype=jnp.float32):
+    return _ic.int8_decode(q, scale, br=br, dtype=dtype,
+                           interpret=_interpret())

@@ -1,0 +1,78 @@
+"""NIC Plane Load Balancer per-packet selection (Fig. 4) as a Pallas
+kernel: two-stage hierarchy —
+
+  1. rate filter: mask planes whose CC allowance < the packet's tx rate
+     (or that are ineligible: probe-timed-out);
+  2. local queue: among eligible planes pick the shallowest NIC egress
+     queue, hash tie-break.
+
+E2E congestion state takes precedence; queue depth breaks ties among
+uncongested planes — exactly the paper's hierarchy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1e30
+
+
+def _plb_kernel(rate_ref, elig_ref, queue_ref, tx_ref, hash_ref, out_ref,
+                *, n_planes: int, bp: int):
+    rate = rate_ref[...].astype(jnp.float32)            # (1, P)
+    elig = elig_ref[...] > 0
+    queue = queue_ref[...].astype(jnp.float32)
+    tx = tx_ref[...].astype(jnp.float32)                # (bp, 1)
+
+    # stage 1 — rate filter (E2E congestion precedence)
+    ok = elig & (rate >= tx)                            # (bp, P) broadcast
+    any_ok = jnp.any(ok, axis=1, keepdims=True)
+    ok = jnp.where(any_ok, ok, elig)                    # fallback: eligible
+
+    # stage 2 — shallowest local egress queue, hashed tie-break
+    h = hash_ref[...].astype(jnp.uint32)                # (bp, 1)
+    planes = jax.lax.broadcasted_iota(jnp.uint32, (bp, n_planes), 1)
+    mix = (h * jnp.uint32(2654435761) + planes * jnp.uint32(97))
+    mix = mix ^ (mix >> 16)
+    tie = (mix & jnp.uint32(0xFFFF)).astype(jnp.float32) / 65536.0
+    score = jnp.where(ok, queue + 1e-3 * tie, BIG)
+    out_ref[...] = jnp.argmin(score, axis=1,
+                              keepdims=True).astype(jnp.int32)
+
+
+def plb_select(rate_allow: jax.Array, eligible: jax.Array,
+               local_queue: jax.Array, tx_rate: jax.Array,
+               pkt_hash: jax.Array, *, bp: int = 256,
+               interpret: bool = False) -> jax.Array:
+    """rate_allow/eligible/local_queue: (P,); tx_rate/pkt_hash: (N,).
+    Returns (N,) int32 plane per packet."""
+    (P,) = rate_allow.shape
+    N = pkt_hash.shape[0]
+    bp = min(bp, N)
+    pad = (-N) % bp
+    if pad:
+        pkt_hash = jnp.pad(pkt_hash, (0, pad))
+        tx_rate = jnp.pad(tx_rate, (0, pad))
+    n_blk = pkt_hash.shape[0] // bp
+
+    kernel = functools.partial(_plb_kernel, n_planes=P, bp=bp)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_blk,),
+        in_specs=[
+            pl.BlockSpec((1, P), lambda i: (0, 0)),
+            pl.BlockSpec((1, P), lambda i: (0, 0)),
+            pl.BlockSpec((1, P), lambda i: (0, 0)),
+            pl.BlockSpec((bp, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bp, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bp, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((pkt_hash.shape[0], 1), jnp.int32),
+        interpret=interpret,
+    )(rate_allow[None, :], eligible[None, :].astype(jnp.float32),
+      local_queue[None, :], tx_rate[:, None],
+      pkt_hash[:, None].astype(jnp.uint32))
+    return out[:N, 0]

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: int = 0) -> jax.Array:
+    """q: (B,H,Sq,D); k/v: (B,H,Sk,D)."""
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (D ** 0.5)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qp >= kp
+    if window > 0:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths) -> jax.Array:
+    """q: (B,H,1,D); k/v: (B,H,S,D); lengths: (B,)."""
+    B, H, _, D = q.shape
+    S = k.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (D ** 0.5)
+    valid = jnp.arange(S)[None, None, None, :] < \
+        lengths[:, None, None, None]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def jsq_route_ref(queues, up_mask, weights, pkt_hash, *, nbins: int = 16,
+                  qmax: float = 1.0) -> jax.Array:
+    qbin = jnp.floor(jnp.clip(queues / qmax, 0.0, 1.0 - 1e-6) * nbins)
+    score = (qbin + 1.0) / jnp.maximum(weights, 1e-6)
+    score = jnp.where(up_mask > 0, score, 1e30)
+    n_ports = queues.shape[0]
+    ports = jnp.arange(n_ports, dtype=jnp.uint32)[None, :]
+    h = pkt_hash.astype(jnp.uint32)[:, None]
+    mix = (h * jnp.uint32(2654435761) + ports * jnp.uint32(40503))
+    mix = mix ^ (mix >> 16)
+    tie = (mix & jnp.uint32(0xFFFF)).astype(jnp.float32) / 65536.0
+    return jnp.argmin(score[None, :] + tie * 0.5, axis=1).astype(jnp.int32)
+
+
+def plb_select_ref(rate_allow, eligible, local_queue, tx_rate,
+                   pkt_hash) -> jax.Array:
+    P = rate_allow.shape[0]
+    elig = eligible > 0
+    ok = elig[None, :] & (rate_allow[None, :] >= tx_rate[:, None])
+    any_ok = jnp.any(ok, axis=1, keepdims=True)
+    ok = jnp.where(any_ok, ok, elig[None, :])
+    planes = jnp.arange(P, dtype=jnp.uint32)[None, :]
+    h = pkt_hash.astype(jnp.uint32)[:, None]
+    mix = (h * jnp.uint32(2654435761) + planes * jnp.uint32(97))
+    mix = mix ^ (mix >> 16)
+    tie = (mix & jnp.uint32(0xFFFF)).astype(jnp.float32) / 65536.0
+    score = jnp.where(ok, local_queue[None, :] + 1e-3 * tie, 1e30)
+    return jnp.argmin(score, axis=1).astype(jnp.int32)
+
+
+def int8_encode_ref(x, noise):
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale + noise), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def int8_decode_ref(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,354 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch x shape x mesh)
+cell on the production meshes, with memory/cost analysis and HLO collective
+accounting — no device allocation (ShapeDtypeStruct only).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k \
+      --mesh single --out experiments/dryrun
+  python -m repro.launch.dryrun --all --mesh both   # fan out (subprocesses)
+"""
+import argparse                                            # noqa: E402
+import json                                                # noqa: E402
+import re                                                  # noqa: E402
+import subprocess                                          # noqa: E402
+import sys                                                 # noqa: E402
+import time                                                # noqa: E402
+import traceback                                           # noqa: E402
+
+import jax                                                 # noqa: E402
+import jax.numpy as jnp                                    # noqa: E402
+import numpy as np                                         # noqa: E402
+
+from repro.configs import (ARCHS, ASSIGNED, SHAPES, get_config,  # noqa
+                           shape_applicable)
+from repro.launch.mesh import make_production_mesh         # noqa: E402
+from repro.launch.specs import (batch_specs, cache_specs, decode_specs,  # noqa
+                                make_ctx, opt_specs, param_specs)
+from repro.models import decode_step, loss_fn, prefill_step  # noqa: E402
+from repro.train.loop import TrainerConfig, make_train_step  # noqa: E402
+from repro.core.planes import PlaneConfig                  # noqa: E402
+
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "c64": 8, "c128": 16}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def parse_collectives(hlo: str):
+    """Sum per-op payload bytes for every collective in optimized HLO.
+
+    Shapes are per-PARTITION under SPMD; 'bytes' is the op's output payload
+    per device; 'wire_bytes' applies ring-algorithm factors with the
+    replica-group size."""
+    ops = []
+    # e.g.:  %all-reduce.1 = bf16[59,1024,128]{...} all-reduce(...),
+    #        replica_groups={{0,1,2,3},...} or [8,64]<=[512]{...}
+    pat = re.compile(
+        r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^a-z]*"
+        r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+        r"collective-permute)(?:-start)?\(")
+    grp_pat = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+    grp_pat2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+    for line in hlo.splitlines():
+        m = pat.search(line)
+        if not m:
+            continue
+        dt, dims, kind = m.group(1), m.group(2), m.group(3)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        size = n * DTYPE_BYTES[dt]
+        gsize = 1
+        g = grp_pat.search(line)
+        if g:
+            gsize = len(g.group(1).split(","))
+        else:
+            g2 = grp_pat2.search(line)
+            if g2:
+                gsize = int(g2.group(2))
+        f = (gsize - 1) / max(gsize, 1)
+        wire = {"all-reduce": 2 * size * f,
+                "all-gather": size * f,
+                "reduce-scatter": size * f,
+                "all-to-all": size * f,
+                "collective-permute": size}[kind]
+        ops.append({"kind": kind, "bytes": size, "group": gsize,
+                    "wire_bytes": wire})
+    return ops
+
+
+def accounting_config(cfg, shape, mesh):
+    """Dry-run lowering config: every loop unrolled (or trip-count-1) so
+    cost_analysis counts all iterations; block sizes chosen so the largest
+    attention score block stays ~<=1 GiB/device and unrolled bodies stay
+    bounded."""
+    import dataclasses
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    tp = mesh.shape.get("model", 1)
+    dp = n_dev // tp
+    if shape.mode == "train":
+        b_loc = max(shape.global_batch // dp, 1)
+        sq = shape.seq_len
+    elif shape.mode == "prefill":
+        b_loc = max(shape.global_batch // dp, 1)
+        sq = shape.seq_len
+    else:
+        b_loc, sq = max(shape.global_batch // dp, 1), 1
+    h_loc = max((cfg.n_heads or 1) // tp, 1)
+    budget = 1 << 30                      # 1 GiB fp32 score block
+    chunk = budget // max(b_loc * h_loc * sq * 4, 1)
+    chunk = max(512, min(1 << (chunk.bit_length() - 1) if chunk else 512,
+                         8192, shape.seq_len))
+    ssm_chunk = min(2048, shape.seq_len) if cfg.ssm_heads else cfg.ssm_chunk
+    loss_chunk = max(256, min(2048, (budget // 4) //
+                              max(b_loc * cfg.vocab // tp, 1) or 256))
+    return dataclasses.replace(
+        cfg, scan_layers=False, unroll_loops=True, attn_chunk=chunk,
+        ssm_chunk=ssm_chunk, loss_chunk=loss_chunk)
+
+
+def lower_cell(arch: str, shape_name: str, mesh_kind: str,
+               accounting: bool = True, n_periods: int | None = None,
+               remat: str | None = None):
+    cfg = get_config(arch)
+    if remat is None:
+        remat = os.environ.get("REPRO_REMAT") or None
+    if remat:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, remat=remat)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    ctx = make_ctx(mesh, cfg)
+    if accounting:
+        cfg = accounting_config(cfg, shape, mesh)
+    if n_periods is not None:
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, n_layers=cfg.n_prefix_layers +
+            n_periods * cfg.pattern_len)
+    tcfg = TrainerConfig(
+        plane=PlaneConfig(n_planes=4, microchunks=16),
+        cast_params_bf16=not os.environ.get("REPRO_NOCAST"))
+
+    if shape.mode == "train":
+        step = make_train_step(cfg, ctx, tcfg)
+        ps = param_specs(cfg, ctx)
+        os_ = opt_specs(ps)
+        bs = batch_specs(cfg, shape, ctx)
+        lowered = step.lower(ps, os_, bs,
+                             jnp.zeros((), jnp.int32),
+                             jax.random.PRNGKey(0))
+    elif shape.mode == "prefill":
+        ps = param_specs(cfg, ctx)
+        bs = batch_specs(cfg, shape, ctx)
+        cs = cache_specs(cfg, shape.global_batch, shape.seq_len, ctx)
+        fn = jax.jit(lambda p, t, c, f=None:
+                     prefill_step(p, cfg, t, ctx, c, f))
+        args = [ps, bs["tokens"], cs]
+        if "frontend_embeds" in bs:
+            lowered = jax.jit(
+                lambda p, t, c, f: prefill_step(p, cfg, t, ctx, c, f)
+            ).lower(ps, bs["tokens"], cs, bs["frontend_embeds"])
+        else:
+            lowered = jax.jit(
+                lambda p, t, c: prefill_step(p, cfg, t, ctx, c)
+            ).lower(ps, bs["tokens"], cs)
+    else:                                    # decode / long-context decode
+        ps = param_specs(cfg, ctx)
+        ds = decode_specs(cfg, shape, ctx)
+        lowered = jax.jit(
+            lambda p, t, q, c: decode_step(p, cfg, t, q, ctx, c)
+        ).lower(ps, ds["tokens"], ds["position"], ds["caches"])
+    return lowered, ctx
+
+
+def _analyze(compiled, rec: dict, prefix: str = "") -> None:
+    try:
+        mem = compiled.memory_analysis()
+        rec[prefix + "memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+        print(prefix + "memory_analysis:", rec[prefix + "memory"], flush=True)
+    except Exception as e:                                 # noqa: BLE001
+        rec[prefix + "memory"] = {"error": str(e)}
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        rec[prefix + "cost"] = {k: float(v) for k, v in ca.items()
+                                if isinstance(v, (int, float)) and
+                                k in ("flops", "bytes accessed",
+                                      "transcendentals", "optimal_seconds")}
+        print(prefix + "cost_analysis:", rec[prefix + "cost"], flush=True)
+    except Exception as e:                                 # noqa: BLE001
+        rec[prefix + "cost"] = {"error": str(e)}
+    try:
+        ops = parse_collectives(compiled.as_text())
+        agg = {}
+        for op in ops:
+            a = agg.setdefault(op["kind"],
+                               {"count": 0, "bytes": 0.0, "wire_bytes": 0.0})
+            a["count"] += 1
+            a["bytes"] += op["bytes"]
+            a["wire_bytes"] += op["wire_bytes"]
+        rec[prefix + "collectives"] = agg
+        rec[prefix + "collective_wire_bytes"] = sum(
+            a["wire_bytes"] for a in agg.values())
+        print(prefix + "collectives:", json.dumps(agg), flush=True)
+    except Exception as e:                                 # noqa: BLE001
+        rec[prefix + "collectives"] = {"error": str(e)}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str) -> dict:
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "ok": False}
+    cfg = get_config(arch)
+    ok, why = shape_applicable(cfg, shape_name)
+    if not ok:
+        rec.update(skipped=True, reason=why)
+        return rec
+
+    # Pass 1 — PRODUCTION config (scan-over-layers): proves lower+compile
+    # on the mesh; memory_analysis reflects the deployable program.
+    t0 = time.time()
+    lowered, ctx = lower_cell(arch, shape_name, mesh_kind, accounting=False)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+    _analyze(compiled, rec, prefix="")
+    del compiled, lowered
+
+    # Pass 2 — ACCOUNTING (all loops unrolled, two-point extrapolation):
+    # every pattern period is identical, so lowering with 1 and 2 periods
+    # and extrapolating  X(n) = X(1) + (n-1) * (X(2) - X(1))  gives exact
+    # per-iteration FLOPs / bytes / collective counts without compiling 60
+    # unrolled layers (lax.scan bodies are counted once by cost analysis).
+    try:
+        t0 = time.time()
+        recs = []
+        for k in (1, 2):
+            lw, _ = lower_cell(arch, shape_name, mesh_kind,
+                               accounting=True, n_periods=k)
+            cp = lw.compile()
+            r = {}
+            _analyze(cp, r, prefix=f"p{k}_")
+            recs.append(r)
+            del cp, lw
+        n = get_config(arch).n_periods
+        rec["acct_compile_s"] = round(time.time() - t0, 2)
+        rec["acct_cost"] = _extrapolate_dict(
+            recs[0].get("p1_cost", {}), recs[1].get("p2_cost", {}), n)
+        rec["acct_collectives"] = _extrapolate_coll(
+            recs[0].get("p1_collectives", {}),
+            recs[1].get("p2_collectives", {}), n)
+        rec["acct_collective_wire_bytes"] = sum(
+            a.get("wire_bytes", 0.0)
+            for a in rec["acct_collectives"].values()
+            if isinstance(a, dict))
+        print("acct_cost:", rec["acct_cost"], flush=True)
+        print("acct_collectives:", json.dumps(rec["acct_collectives"]),
+              flush=True)
+    except Exception:                                      # noqa: BLE001
+        rec["acct_error"] = traceback.format_exc()[-2000:]
+    rec["ok"] = True
+    return rec
+
+
+def _extrapolate_dict(x1: dict, x2: dict, n: int) -> dict:
+    out = {}
+    for k in set(x1) | set(x2):
+        a, b = float(x1.get(k, 0.0)), float(x2.get(k, 0.0))
+        out[k] = a + (n - 1) * (b - a)
+    return out
+
+
+def _extrapolate_coll(c1: dict, c2: dict, n: int) -> dict:
+    out = {}
+    for kind in set(c1) | set(c2):
+        a = c1.get(kind, {"count": 0, "bytes": 0.0, "wire_bytes": 0.0})
+        b = c2.get(kind, {"count": 0, "bytes": 0.0, "wire_bytes": 0.0})
+        if not isinstance(a, dict) or not isinstance(b, dict):
+            continue
+        out[kind] = {key: a.get(key, 0.0) +
+                     (n - 1) * (b.get(key, 0.0) - a.get(key, 0.0))
+                     for key in ("count", "bytes", "wire_bytes")}
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        failures = 0
+        for mesh_kind in meshes:
+            for arch in ASSIGNED:
+                for shape in SHAPES:
+                    tag = f"{arch}__{shape}__{mesh_kind}".replace("/", "_")
+                    out_file = os.path.join(args.out, tag + ".json")
+                    if os.path.exists(out_file):
+                        with open(out_file) as f:
+                            prev = json.load(f)
+                        if prev.get("ok") or prev.get("skipped"):
+                            continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape,
+                           "--mesh", mesh_kind, "--out", args.out]
+                    print(">>>", " ".join(cmd), flush=True)
+                    r = subprocess.run(cmd, capture_output=True, text=True)
+                    if r.returncode != 0:
+                        failures += 1
+                        rec = {"arch": arch, "shape": shape,
+                               "mesh": mesh_kind, "ok": False,
+                               "error": r.stdout[-2000:] + r.stderr[-4000:]}
+                        with open(out_file, "w") as f:
+                            json.dump(rec, f, indent=1)
+                        print(f"FAIL {tag}", flush=True)
+                    else:
+                        print(f"OK   {tag}", flush=True)
+        return 1 if failures else 0
+
+    assert args.arch and args.shape
+    mesh_kinds = (["single", "multi"] if args.mesh == "both"
+                  else [args.mesh])
+    rc = 0
+    for mk in mesh_kinds:
+        tag = f"{args.arch}__{args.shape}__{mk}".replace("/", "_")
+        try:
+            rec = run_cell(args.arch, args.shape, mk)
+        except Exception as e:                             # noqa: BLE001
+            rec = {"arch": args.arch, "shape": args.shape, "mesh": mk,
+                   "ok": False, "error": traceback.format_exc()[-4000:]}
+            rc = 1
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        keys = ["arch", "shape", "mesh", "ok"] + \
+            (["skipped"] if "skipped" in rec else [])
+        print(json.dumps({k: rec[k] for k in keys}, default=str))
+        if not rec.get("ok") and not rec.get("skipped"):
+            print(rec.get("error", ""), file=sys.stderr)
+            rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` BEFORE importing
+jax; smoke tests and benchmarks see the real (1-device) topology.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2x16x16 = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for(devices: int, model_parallel: int,
+                  pods: int = 1):
+    """Elastic mesh for whatever devices survive (see
+    core.fault_tolerance.elastic_mesh_plan)."""
+    from ..core.fault_tolerance import elastic_mesh_plan
+    shape = elastic_mesh_plan(devices, model_parallel, pods)
+    axes = ("pod", "data", "model")[-len(shape):]
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(shape))

@@ -1,0 +1,155 @@
+"""ShapeDtypeStruct input builders for the dry-run: weak-type-correct,
+shardable, zero device allocation.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import ShapeSpec
+from ..models import init_caches, init_params, logical_axes
+from ..models.config import ModelConfig
+from ..optim.adamw import adamw_init
+from ..parallel.sharding import (ShardCtx, make_rules, param_shardings,
+                                 spec_for_axes)
+
+SDS = jax.ShapeDtypeStruct
+
+FSDP_PARAM_THRESHOLD = 5e9     # params above this shard over the data axis
+
+
+def make_ctx(mesh: Optional[Mesh], cfg: Optional[ModelConfig] = None,
+             fsdp: Optional[bool] = None) -> ShardCtx:
+    if mesh is None:
+        return ShardCtx(mesh=None)
+    multi = "pod" in mesh.axis_names
+    dp = ("pod", "data") if multi else ("data",)
+    if fsdp is None and cfg is not None:
+        fsdp = analytic_param_count(cfg) > FSDP_PARAM_THRESHOLD
+    fsdp_axis = "data" if fsdp else None
+    return ShardCtx(mesh=mesh, dp_axes=dp, tp_axis="model",
+                    fsdp_axis=fsdp_axis, rules=make_rules(fsdp_axis))
+
+
+def analytic_param_count(cfg: ModelConfig) -> int:
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+
+# ---------------------------------------------------------------------------
+# sharded ShapeDtypeStruct trees
+# ---------------------------------------------------------------------------
+
+def _with_sharding(shapes_tree, shardings_tree):
+    return jax.tree.map(
+        lambda s, sh: SDS(s.shape, s.dtype, sharding=sh),
+        shapes_tree, shardings_tree)
+
+
+def param_specs(cfg: ModelConfig, ctx: ShardCtx):
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    if ctx.mesh is None:
+        return shapes
+    shardings = param_shardings(logical_axes(cfg), ctx, shapes)
+    return _with_sharding(shapes, shardings)
+
+
+def opt_specs(params_specs):
+    return jax.eval_shape(adamw_init, params_specs)
+
+
+def _cache_leaf_sharding(shape: Tuple[int, ...], ctx: ShardCtx
+                         ) -> NamedSharding:
+    """Mirror parallel.sharding.shard_cache heuristics for spec trees."""
+    mesh, tp = ctx.mesh, ctx.tp_axis
+    tps = ctx.tp_size
+    dp = ctx.dp_spec
+    dp_size = 1
+    for a in ctx.dp_axes:
+        dp_size *= mesh.shape[a]
+    b_ok = shape[0] % dp_size == 0 and shape[0] >= dp_size
+    bspec = dp if b_ok else None
+    if len(shape) == 4:             # (B, S|W, H, D) kv  or (B,H,P,N) ssm
+        if shape[2] % tps == 0 and shape[2] >= tps:
+            return NamedSharding(mesh, P(bspec, None, tp, None))
+        if shape[1] % tps == 0 and shape[1] >= tps:
+            return NamedSharding(mesh, P(bspec, tp, None, None))
+        return NamedSharding(mesh, P(bspec, None, None, None))
+    if len(shape) == 3:             # (B, S, L) latent / (B, w, cc) conv
+        if shape[2] % tps == 0 and shape[2] >= tps and shape[2] > shape[1]:
+            return NamedSharding(mesh, P(bspec, None, tp))
+        if shape[1] % tps == 0 and shape[1] >= tps:
+            return NamedSharding(mesh, P(bspec, tp, None))
+        return NamedSharding(mesh, P(bspec, None, None))
+    if len(shape) == 2:             # (B, S) pos
+        if shape[1] % tps == 0 and shape[1] >= tps:
+            return NamedSharding(mesh, P(bspec, tp))
+        return NamedSharding(mesh, P(bspec, None))
+    return NamedSharding(mesh, P())
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                ctx: ShardCtx):
+    dtype = jnp.dtype(cfg.dtype)
+    shapes = jax.eval_shape(
+        lambda: init_caches(cfg, batch, max_len, dtype))
+    if ctx.mesh is None:
+        return shapes
+    return jax.tree.map(
+        lambda s: SDS(s.shape, s.dtype,
+                      sharding=_cache_leaf_sharding(s.shape, ctx)),
+        shapes)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, ctx: ShardCtx):
+    B, S = shape.global_batch, shape.seq_len
+    if ctx.mesh is None:
+        sh = {"tokens": None, "labels": None}
+    else:
+        dp_size = 1
+        for a in ctx.dp_axes:
+            dp_size *= ctx.mesh.shape[a]
+        bspec = ctx.dp_spec if B % dp_size == 0 else None
+        sh = {
+            "tokens": NamedSharding(ctx.mesh, P(bspec, None)),
+            "labels": NamedSharding(ctx.mesh, P(bspec, None)),
+        }
+    out = {
+        "tokens": SDS((B, S), jnp.int32, sharding=sh["tokens"]),
+        "labels": SDS((B, S), jnp.int32, sharding=sh["labels"]),
+    }
+    if cfg.frontend != "none" and cfg.frontend_tokens:
+        fsh = None
+        if ctx.mesh is not None:
+            dp_size = 1
+            for a in ctx.dp_axes:
+                dp_size *= ctx.mesh.shape[a]
+            bspec = ctx.dp_spec if B % dp_size == 0 else None
+            fsh = NamedSharding(ctx.mesh, P(bspec, None, None))
+        out["frontend_embeds"] = SDS(
+            (B, cfg.frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=fsh)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec, ctx: ShardCtx):
+    """Inputs for serve_step: one new token against a seq_len KV cache."""
+    B = shape.global_batch
+    if ctx.mesh is not None:
+        dp_size = 1
+        for a in ctx.dp_axes:
+            dp_size *= ctx.mesh.shape[a]
+        bspec = ctx.dp_spec if B % dp_size == 0 else None
+        tsh = NamedSharding(ctx.mesh, P(bspec, None))
+        psh = NamedSharding(ctx.mesh, P(bspec))
+    else:
+        tsh = psh = None
+    return {
+        "tokens": SDS((B, 1), jnp.int32, sharding=tsh),
+        "position": SDS((B,), jnp.int32, sharding=psh),
+        "caches": cache_specs(cfg, B, shape.seq_len, ctx),
+    }

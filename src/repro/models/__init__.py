@@ -1,0 +1,10 @@
+from .config import ModelConfig
+from .transformer import (init_params, logical_axes, init_caches,
+                          shard_caches, loss_fn, prefill_step, decode_step,
+                          param_count, backbone, embed_input)
+
+__all__ = [
+    "ModelConfig", "init_params", "logical_axes", "init_caches",
+    "shard_caches", "loss_fn", "prefill_step", "decode_step", "param_count",
+    "backbone", "embed_input",
+]

@@ -1,0 +1,306 @@
+"""Attention variants: full/sliding-window GQA-MQA, and DeepSeek-V2 MLA.
+
+Prefill/train attention is *chunked* over the KV axis (lax.scan + online
+softmax) so the lowered HLO never materializes an (S, S) score tensor — the
+pure-JAX analogue of the Pallas flash kernel in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Builder, apply_rope, rms_norm
+from ..parallel.sharding import ShardCtx, shard_heads
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def init_attn(make: Builder, cfg: ModelConfig, prefix: str) -> Dict:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": make(f"{prefix}.wq", (d, hq, dh), ("embed", "heads", "head"), 1.0),
+        "wk": make(f"{prefix}.wk", (d, hkv, dh), ("embed", "kv", "head"), 1.0),
+        "wv": make(f"{prefix}.wv", (d, hkv, dh), ("embed", "kv", "head"), 1.0),
+        "wo": make(f"{prefix}.wo", (hq, dh, d), ("heads", "head", "embed"), 1.0),
+    }
+    if cfg.qk_norm:
+        p["q_gamma"] = make(f"{prefix}.qg", (dh,), ("head",), 0.0)
+        p["k_gamma"] = make(f"{prefix}.kg", (dh,), ("head",), 0.0)
+    return p
+
+
+def init_mla(make: Builder, cfg: ModelConfig, prefix: str) -> Dict:
+    d, h = cfg.d_model, cfg.n_heads
+    qd = cfg.nope_head_dim + cfg.rope_head_dim
+    return {
+        "wq_a": make(f"{prefix}.wq_a", (d, cfg.q_lora), ("embed", "qlora"), 1.0),
+        "q_gamma": make(f"{prefix}.qn", (cfg.q_lora,), ("qlora",), 0.0),
+        "wq_b": make(f"{prefix}.wq_b", (cfg.q_lora, h, qd),
+                     ("qlora", "heads", "head"), 1.0),
+        "wkv_a": make(f"{prefix}.wkv_a", (d, cfg.kv_lora + cfg.rope_head_dim),
+                      ("embed", "kvlora"), 1.0),
+        "kv_gamma": make(f"{prefix}.kvn", (cfg.kv_lora,), ("kvlora",), 0.0),
+        "wkv_b": make(f"{prefix}.wkv_b",
+                      (cfg.kv_lora, h, cfg.nope_head_dim + cfg.v_head_dim),
+                      ("kvlora", "heads", "head"), 1.0),
+        "wo": make(f"{prefix}.wo", (h, cfg.v_head_dim, d),
+                   ("heads", "head", "embed"), 1.0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked flash-style attention (pure jnp; oracle-equivalent to kernels/)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_pos: jax.Array, k_pos: jax.Array,
+                      *, window: int = 0, chunk: int = 1024,
+                      causal: bool = True, unroll: bool = False
+                      ) -> jax.Array:
+    """q: (B,Sq,Hq,D); k/v: (B,Sk,Hkv,Dk|Dv); positions int32 (B,Sq)/(B,Sk).
+
+    window > 0 limits attention to the last `window` positions (inclusive of
+    self).  Returns (B,Sq,Hq,Dv) in q.dtype.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, Dv = v.shape
+    G = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.array(D, jnp.float32))
+    chunk = min(chunk, Sk)
+    pad = (-Sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    n_chunks = k.shape[1] // chunk
+
+    # Operands stay in the model dtype (bf16) with fp32 ACCUMULATION
+    # (preferred_element_type) — MXU semantics.  Carrying fp32 q/k/v
+    # through the sharding boundaries doubles the TP all-gather bytes.
+    kc = k.reshape(B, n_chunks, chunk, Hkv, k.shape[-1])
+    vc = v.reshape(B, n_chunks, chunk, Hkv, Dv)
+    pc = k_pos.reshape(B, n_chunks, chunk)
+
+    m0 = jnp.full((B, Sq, Hq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hq), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hq, Dv), jnp.float32)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kb, vb, pb = blk                                   # (B,C,Hkv,*),(B,C)
+        if G > 1:
+            # repeat KV to Hq heads: keeps the head axis cleanly sharded
+            # even when the mesh axis does not factor as Hkv x G.
+            kb = jnp.repeat(kb, G, axis=2)
+            vb = jnp.repeat(vb, G, axis=2)
+        s = jnp.einsum("bqhd,bchd->bqhc", q, kb,
+                       preferred_element_type=jnp.float32) * scale
+        valid = (pb >= 0)[:, None, :]                      # (B,1,C)
+        if causal:
+            valid = valid & (pb[:, None, :] <= q_pos[:, :, None])
+        if window > 0:
+            valid = valid & (pb[:, None, :] >
+                             q_pos[:, :, None] - window)
+        s = jnp.where(valid[:, :, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhc,bchd->bqhd", p.astype(v.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    if unroll or n_chunks == 1:
+        carry = (m0, l0, a0)
+        for i in range(n_chunks):
+            carry, _ = body(carry, (kc[:, i], vc[:, i], pc[:, i]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0),
+            (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+             jnp.moveaxis(pc, 1, 0)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, Hq, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# standard (GQA / MQA / MHA) attention with optional KV cache
+# ---------------------------------------------------------------------------
+
+def _maybe_qk_norm(p: Dict, q: jax.Array, k: jax.Array, eps: float):
+    if "q_gamma" in p:
+        q = rms_norm(q, p["q_gamma"], eps)
+        k = rms_norm(k, p["k_gamma"], eps)
+    return q, k
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  kind: str, dtype) -> Dict:
+    """Ring-buffer cache. 'l' layers cap the buffer at cfg.window."""
+    size = min(max_len, cfg.window) if kind == "l" else max_len
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, size, hkv, dh), dtype),
+        "v": jnp.zeros((batch, size, hkv, dh), dtype),
+        "pos": jnp.full((batch, size), -1, jnp.int32),
+    }
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype) -> Dict:
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora), dtype),
+        "kr": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+    }
+
+
+def _cache_write(cache: Dict, names: Tuple[str, ...], values, positions):
+    """Write (B,S,...) entries at ring slots positions % size.
+
+    Prefill fast paths: when the prompt covers the cache exactly (S ==
+    size) or wraps it a whole number of times, the write is a buffer
+    replace/slice — the general scatter makes GSPMD replicate the full
+    global K/V on every device (a 6+ GiB all-gather per layer at 32k)."""
+    size = cache["pos"].shape[1]
+    S = positions.shape[1]
+    new = dict(cache)
+    if S == size or (S > size and S % size == 0):
+        for n, val in zip(names, values):
+            new[n] = val[:, -size:].astype(cache[n].dtype)
+        new["pos"] = positions[:, -size:]
+        return new
+    slots = positions % size                                 # (B,S)
+    bidx = jnp.arange(cache["pos"].shape[0])[:, None]
+    for n, val in zip(names, values):
+        new[n] = cache[n].at[bidx, slots].set(val)
+    new["pos"] = cache["pos"].at[bidx, slots].set(positions)
+    return new
+
+
+def apply_attn(p: Dict, cfg: ModelConfig, x: jax.Array,
+               positions: jax.Array, kind: str,
+               cache: Optional[Dict] = None,
+               ctx: Optional[ShardCtx] = None,
+               ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B,S,d). positions: (B,S). Returns (out, updated cache)."""
+    dt = x.dtype
+    window = cfg.window if kind == "l" else 0
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    q, k = _maybe_qk_norm(p, q, k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_base)
+    k = apply_rope(k, positions, cfg.rope_base)
+    wo = p["wo"].astype(dt)
+    if cache is not None:
+        cache = _cache_write(cache, ("k", "v"), (k, v), positions)
+
+    if cache is not None and q.shape[1] == 1:
+        # Decode: one query — direct single-block attention over the cache.
+        out = chunked_attention(q, cache["k"], cache["v"], positions,
+                                cache["pos"], window=window,
+                                chunk=cache["k"].shape[1])
+        return jnp.einsum("bshk,hkd->bsd", out, wo), cache
+
+    # Train / prefill: attend over the prompt's own K/V (the ring cache
+    # may be smaller than the prompt for sliding-window layers; cache
+    # state above is persisted for decode — assumes it starts empty).
+    if ctx is not None and ctx.mesh is not None:
+        tp = ctx.tp_size
+        hq, hkv = q.shape[2], k.shape[2]
+        if hq % tp:
+            # Pad heads to a tp multiple so attention shards by head
+            # instead of falling back to sequence-gathered KV (which
+            # all-gathers K/V every layer).  wo is zero-padded, so padded
+            # heads contribute exactly zero — numerics unchanged, at
+            # ~(pad/H) extra attention FLOPs.
+            hq_pad = -hq % tp
+            kv_pad = -hkv % tp if (hq + hq_pad) % hkv else 0
+            if kv_pad and (hq + hq_pad) % (hkv + kv_pad):
+                hq_pad = (-hq) % (hkv + kv_pad)
+            q = jnp.pad(q, ((0, 0), (0, 0), (0, hq_pad), (0, 0)))
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, kv_pad), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, kv_pad), (0, 0)))
+            wo = jnp.pad(wo, ((0, hq_pad), (0, 0), (0, 0)))
+        q = shard_heads(q, ctx)
+    if cfg.remat == "kv":
+        from jax.ad_checkpoint import checkpoint_name
+        k = checkpoint_name(k, "kv_gathered")
+        v = checkpoint_name(v, "kv_gathered")
+    out = chunked_attention(q, k, v, positions, positions,
+                            window=window, chunk=cfg.attn_chunk,
+                            unroll=cfg.unroll_loops)
+    out = jnp.einsum("bshk,hkd->bsd", out, wo)
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V2): latent KV cache, absorbed decode
+# ---------------------------------------------------------------------------
+
+def apply_mla(p: Dict, cfg: ModelConfig, x: jax.Array,
+              positions: jax.Array,
+              cache: Optional[Dict] = None,
+              ctx: Optional[ShardCtx] = None,
+              ) -> Tuple[jax.Array, Optional[Dict]]:
+    dt = x.dtype
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nd, rd, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+
+    cq = rms_norm(jnp.einsum("bsd,dq->bsq", x, p["wq_a"].astype(dt)),
+                  p["q_gamma"], cfg.norm_eps)
+    qf = jnp.einsum("bsq,qhk->bshk", cq, p["wq_b"].astype(dt))
+    if ctx is not None:
+        qf = shard_heads(qf, ctx)
+    q_nope, q_rope = qf[..., :nd], qf[..., nd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_base)
+
+    kva = jnp.einsum("bsd,dk->bsk", x, p["wkv_a"].astype(dt))
+    ckv = rms_norm(kva[..., :cfg.kv_lora], p["kv_gamma"], cfg.norm_eps)
+    k_rope = apply_rope(kva[..., None, cfg.kv_lora:], positions,
+                        cfg.rope_base)[:, :, 0]              # (B,S,rd)
+
+    scale = 1.0 / jnp.sqrt(jnp.array(nd + rd, jnp.float32))
+
+    if cache is None:
+        # ---- prefill / train: expand per-head K,V (honest FLOPs) ----
+        kvf = jnp.einsum("bsk,khd->bshd", ckv, p["wkv_b"].astype(dt))
+        k_nope, vv = kvf[..., :nd], kvf[..., nd:]
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, S, H, rd))], -1)
+        q_full = jnp.concatenate([q_nope, q_rope], -1)
+        out = chunked_attention(q_full, k_full, vv, positions, positions,
+                                chunk=cfg.attn_chunk,
+                                unroll=cfg.unroll_loops)
+        new_cache = None
+    else:
+        # ---- decode: absorbed attention over the latent cache ----
+        cache = _cache_write(cache, ("ckv", "kr"), (ckv, k_rope), positions)
+        wkv_b = p["wkv_b"].astype(dt)
+        w_uk, w_uv = wkv_b[..., :nd], wkv_b[..., nd:]
+        q_lat = jnp.einsum("bshd,khd->bshk", q_nope, w_uk)   # (B,S,H,kv_lora)
+        s = (jnp.einsum("bshk,btk->bhst", q_lat, cache["ckv"]) +
+             jnp.einsum("bshr,btr->bhst", q_rope, cache["kr"]))
+        s = s.astype(jnp.float32) * scale
+        valid = (cache["pos"] >= 0)[:, None, None, :] & \
+                (cache["pos"][:, None, None, :] <= positions[:, None, :, None])
+        s = jnp.where(valid, s, NEG_INF)
+        a = jax.nn.softmax(s, axis=-1).astype(dt)
+        ctx = jnp.einsum("bhst,btk->bshk", a, cache["ckv"])
+        out = jnp.einsum("bshk,khd->bshd", ctx, w_uv)        # (B,S,H,vd)
+        new_cache = cache
+
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(dt))
+    return y, new_cache

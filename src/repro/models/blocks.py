@@ -1,0 +1,78 @@
+"""Transformer / hybrid block composition.
+
+A block = pre-norm mixer (attention | MLA | mamba) + pre-norm FFN
+(dense | MoE), both with residual connections.  The block kind is a token
+from ``cfg.block_pattern``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Builder, init_mlp, apply_mlp, rms_norm
+from .attention import (apply_attn, apply_mla, init_attn, init_mla,
+                        init_kv_cache, init_mla_cache)
+from .moe import apply_moe, init_moe
+from .ssm import apply_mamba, init_mamba, init_ssm_cache
+from ..parallel.sharding import ShardCtx, shard_residual
+
+
+def init_block(make: Builder, cfg: ModelConfig, kind: str, moe: bool,
+               prefix: str) -> Dict:
+    p: Dict = {
+        "ln1": make(f"{prefix}.ln1", (cfg.d_model,), ("embed",), 0.0),
+        "ln2": make(f"{prefix}.ln2", (cfg.d_model,), ("embed",), 0.0),
+    }
+    if kind == "m":
+        p["mixer"] = init_mamba(make, cfg, f"{prefix}.mamba")
+    elif cfg.use_mla:
+        p["mixer"] = init_mla(make, cfg, f"{prefix}.mla")
+    else:
+        p["mixer"] = init_attn(make, cfg, f"{prefix}.attn")
+    if moe:
+        p["mlp"] = init_moe(make, cfg, f"{prefix}.moe")
+    elif cfg.d_ff > 0:
+        p["mlp"] = init_mlp(make, cfg.d_model, cfg.d_ff, f"{prefix}.mlp",
+                            cfg.gated_mlp)
+    else:
+        del p["ln2"]            # mixer-only block (mamba2)
+    return p
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     dtype) -> Dict:
+    if kind == "m":
+        return init_ssm_cache(cfg, batch, dtype)
+    if cfg.use_mla:
+        return init_mla_cache(cfg, batch, max_len, dtype)
+    return init_kv_cache(cfg, batch, max_len, kind, dtype)
+
+
+def apply_block(p: Dict, cfg: ModelConfig, x: jax.Array,
+                positions: jax.Array, kind: str, moe: bool, ctx: ShardCtx,
+                cache: Optional[Dict] = None,
+                ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Returns (x', cache', aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "m":
+        mix, cache = apply_mamba(p["mixer"], cfg, h, positions, cache)
+    elif cfg.use_mla:
+        mix, cache = apply_mla(p["mixer"], cfg, h, positions, cache, ctx)
+    else:
+        mix, cache = apply_attn(p["mixer"], cfg, h, positions,
+                                "l" if kind == "l" else "a", cache, ctx)
+    x = shard_residual(x + mix, ctx)
+
+    if "mlp" not in p:              # mixer-only block (mamba2)
+        return x, cache, aux
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if moe:
+        f, aux = apply_moe(p["mlp"], cfg, h, ctx)
+    else:
+        f = apply_mlp(p["mlp"], h, cfg.act, x.dtype)
+    x = shard_residual(x + f, ctx)
+    return x, cache, aux

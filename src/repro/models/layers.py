@@ -1,0 +1,148 @@
+"""Shared layer primitives: norms, rotary embeddings, activations, init.
+
+All parameters are plain jnp arrays in nested dicts.  Every initializer is
+written against a ``Builder`` callback so the same code path can emit either
+(a) real parameter arrays or (b) logical-axis annotations (for sharding) —
+keeping the two trees structurally identical by construction.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# A Builder receives (name, shape, logical_axes, scale) and returns a leaf.
+Builder = Callable[[str, Tuple[int, ...], Tuple[str, ...], float], jax.Array]
+
+
+def array_builder(rng: jax.Array, dtype=jnp.float32) -> Builder:
+    """Builder that materializes truncated-normal parameter arrays."""
+    count = [0]
+
+    def make(name, shape, axes, scale):
+        count[0] += 1
+        key = jax.random.fold_in(rng, count[0])
+        if scale == 0.0:
+            return jnp.zeros(shape, dtype)
+        fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+        std = scale / np.sqrt(fan_in)
+        return (jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+                * std)
+
+    return make
+
+
+def axes_builder() -> Builder:
+    """Builder that records logical axis names instead of arrays."""
+    def make(name, shape, axes, scale):
+        assert len(axes) == len(shape), (name, shape, axes)
+        return axes
+    return make
+
+
+def ones_like_axes(name, shape, axes, scale):
+    return jnp.ones(shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, base: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (base ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, base: float) -> jax.Array:
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    freqs = rope_freqs(x.shape[-1], base)                     # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs    # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated or plain) params + apply
+# ---------------------------------------------------------------------------
+
+def init_mlp(make: Builder, d_model: int, d_ff: int, prefix: str,
+             gated: bool = True) -> Dict:
+    p = {
+        "wi": make(f"{prefix}.wi", (d_model, d_ff), ("embed", "mlp"), 1.0),
+        "wo": make(f"{prefix}.wo", (d_ff, d_model), ("mlp", "embed"), 1.0),
+    }
+    if gated:
+        p["wg"] = make(f"{prefix}.wg", (d_model, d_ff), ("embed", "mlp"),
+                       1.0)
+    return p
+
+
+def apply_mlp(p: Dict, x: jax.Array, act: str, dtype) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dtype))
+    if "wg" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dtype))
+        h = act_fn(act)(g) * h
+    else:
+        h = act_fn(act)(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def init_embed(make: Builder, vocab: int, d_model: int,
+               tie: bool) -> Dict:
+    # the table's d_model dim uses its own logical axis ('embed_t', never
+    # sharded): a gather whose operand is sharded on BOTH dims crash-checks
+    # XLA's SPMD partitioner on 3-axis meshes. vocab x model is the proven
+    # layout; per-device table bytes stay bounded by the model axis.
+    p = {"tok": make("embed.tok", (vocab, d_model),
+                     ("vocab", "embed_t"), 1.0)}
+    if not tie:
+        p["head"] = make("embed.head", (d_model, vocab),
+                         ("embed", "vocab"), 1.0)
+    return p
+
+
+def embed_tokens(p: Dict, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(p["tok"].astype(dtype), tokens, axis=0)
+
+
+def lm_logits(p: Dict, x: jax.Array, dtype, cap: float = 0.0) -> jax.Array:
+    if "head" in p:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["head"].astype(dtype))
+    else:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["tok"].astype(dtype))
+    return softcap(logits.astype(jnp.float32), cap)

@@ -1,0 +1,235 @@
+"""Mixture-of-Experts with expert parallelism.
+
+Two execution modes, both built on the same local dispatch/combine math:
+
+* **a2a mode** (train / prefill, sequence-parallel residual): tokens are
+  sharded over every mesh axis; dispatch buffers are exchanged with
+  ``lax.all_to_all`` over the tensor axis so each device runs only its local
+  experts — the All2All traffic pattern of the paper's evaluation.
+* **psum mode** (decode, sequence replicated over tp): each tp shard runs its
+  local experts over the full (tiny) token set and contributions are summed
+  with ``lax.psum`` — gather-free EP.
+
+Without a mesh the same functions run locally (smoke tests / oracles).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from .layers import Builder, act_fn, init_mlp, apply_mlp
+from ..parallel.sharding import ShardCtx
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_moe(make: Builder, cfg: ModelConfig, prefix: str) -> Dict:
+    d, e, f = cfg.d_model, cfg.moe_experts, cfg.moe_d_ff
+    p = {
+        "router": make(f"{prefix}.router", (d, e), ("embed", "experts"), 1.0),
+        # expert weights: contracted dims stay UNSHARDED over the FSDP
+        # axis (embed_e -> None); the FFN dim shards over data (mlp_e) —
+        # output-dim sharding needs no gather at the shard_map boundary,
+        # unlike contraction-dim FSDP which all-gathers the full bank.
+        "wi": make(f"{prefix}.wi", (e, d, f),
+                   ("experts", "embed_e", "mlp_e"), 1.0),
+        "wg": make(f"{prefix}.wg", (e, d, f),
+                   ("experts", "embed_e", "mlp_e"), 1.0),
+        "wo": make(f"{prefix}.wo", (e, f, d),
+                   ("experts", "mlp_e", "embed_e"), 1.0),
+    }
+    if cfg.moe_shared:
+        p["shared"] = init_mlp(make, d, cfg.moe_shared * f,
+                               f"{prefix}.shared")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# local dispatch / combine
+# ---------------------------------------------------------------------------
+
+def _topk_route(router_w, x_flat, cfg: ModelConfig):
+    """x_flat: (T, d) -> (weights (T,k), experts (T,k), aux_loss)."""
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.moe_topk)
+    w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+    w = w * cfg.router_scale
+    # Switch-style load-balance aux loss
+    e = cfg.moe_experts
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], e), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return w.astype(x_flat.dtype), idx, aux
+
+
+def _ranks_within_expert(eids: jax.Array, n_experts: int) -> jax.Array:
+    """eids: flat (N,) expert ids -> arrival rank of each entry within its
+    expert (stable order)."""
+    n = eids.shape[0]
+    order = jnp.argsort(eids, stable=True)
+    sorted_e = eids[order]
+    start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank_sorted = jnp.arange(n, dtype=jnp.int32) - start.astype(jnp.int32)
+    return jnp.zeros(n, jnp.int32).at[order].set(rank_sorted)
+
+
+def _dispatch(x_flat, eids, ranks, n_experts, capacity):
+    """Scatter tokens into (E, C, d) buffers; overflow tokens dropped.
+
+    f32 accumulator: the scatter's cross-shard combine lowers to an
+    all-reduce whose dtype follows the operand; bf16 ARs crash XLA:CPU's
+    AllReducePromotion pass. Cast back after — the a2a moves bf16."""
+    t, d = x_flat.shape
+    k = eids.shape[-1]
+    flat_e = eids.reshape(-1)
+    flat_r = ranks.reshape(-1)
+    valid = flat_r < capacity
+    src = jnp.repeat(x_flat.astype(jnp.float32), k, axis=0)
+    src = jnp.where(valid[:, None], src, 0)
+    buf = jnp.zeros((n_experts, capacity, d), jnp.float32)
+    buf = buf.at[flat_e, jnp.minimum(flat_r, capacity - 1)].add(src)
+    return buf.astype(x_flat.dtype)
+
+
+def _combine(buf, weights, eids, ranks, capacity):
+    """Gather expert outputs back per (token, k) and weight-sum."""
+    t, k = eids.shape
+    flat_e = eids.reshape(-1)
+    flat_r = ranks.reshape(-1)
+    valid = (flat_r < capacity).astype(buf.dtype)
+    got = buf[flat_e, jnp.minimum(flat_r, capacity - 1)]      # (t*k, d)
+    got = got * valid[:, None]
+    got = got.reshape(t, k, -1)
+    return jnp.einsum("tkd,tk->td", got, weights.astype(buf.dtype))
+
+
+def _expert_ffn(p: Dict, buf: jax.Array, act: str, e_slice=None):
+    """buf: (E_loc, C, d) -> (E_loc, C, d) through gated FFN.
+
+    f32 ACCUMULATION on every contraction: keeps the FSDP partial-sum
+    all-reduces (fwd and weight-grad bwd) in f32 — bf16 ARs crash XLA:CPU's
+    AllReducePromotion — while weights/activations stay bf16 on the wire."""
+    wi, wg, wo = p["wi"], p["wg"], p["wo"]
+    if e_slice is not None:
+        wi, wg, wo = wi[e_slice], wg[e_slice], wo[e_slice]
+    dt = buf.dtype
+    h = jnp.einsum("ecd,edf->ecf", buf, wi.astype(dt),
+                   preferred_element_type=jnp.float32).astype(dt)
+    g = jnp.einsum("ecd,edf->ecf", buf, wg.astype(dt),
+                   preferred_element_type=jnp.float32).astype(dt)
+    h = act_fn(act)(g) * h
+    return jnp.einsum("ecf,efd->ecd", h, wo.astype(dt),
+                      preferred_element_type=jnp.float32).astype(dt)
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(tokens * cfg.moe_topk / cfg.moe_experts
+                      * cfg.capacity_factor))
+    return max(8, ((c + 7) // 8) * 8)
+
+
+# ---------------------------------------------------------------------------
+# the three execution modes
+# ---------------------------------------------------------------------------
+
+def _moe_local(p, cfg: ModelConfig, x, tp_axis: Optional[str],
+               ep_mode: str, pmean_axes: Tuple[str, ...] = ()):
+    """Per-device MoE body. tp_axis is None when run without a mesh."""
+    b, s, d = x.shape
+    x_flat = x.reshape(b * s, d)
+    w, idx, aux = _topk_route(p["router"], x_flat, cfg)
+    ranks = _ranks_within_expert(idx.reshape(-1),
+                                 cfg.moe_experts).reshape(idx.shape)
+    cap = _capacity(b * s, cfg)
+    if pmean_axes:
+        aux = jax.lax.pmean(aux, pmean_axes)
+
+    if tp_axis is None or ep_mode == "none":
+        buf = _dispatch(x_flat, idx, ranks, cfg.moe_experts, cap)
+        buf = _expert_ffn(p, buf, cfg.act)
+        out = _combine(buf, w, idx, ranks, cap)
+        return out.reshape(b, s, d), aux
+
+    m = jax.lax.axis_size(tp_axis)
+    e_loc = cfg.moe_experts // m
+
+    if ep_mode == "a2a":
+        buf = _dispatch(x_flat, idx, ranks, cfg.moe_experts, cap)
+        # (E, C, d) -> (E/m, m*C, d): exchange expert dim over tp peers
+        buf = jax.lax.all_to_all(buf, tp_axis, split_axis=0, concat_axis=1,
+                                 tiled=True)
+        buf = _expert_ffn(p, buf, cfg.act)     # weights arrive as local E/m
+        buf = jax.lax.all_to_all(buf, tp_axis, split_axis=1, concat_axis=0,
+                                 tiled=True)
+        out = _combine(buf, w, idx, ranks, cap)
+        return out.reshape(b, s, d), aux
+
+    if ep_mode == "psum":
+        mi = jax.lax.axis_index(tp_axis)
+        e0 = mi * e_loc
+        local = idx - e0
+        in_range = (local >= 0) & (local < e_loc)
+        local_ids = jnp.where(in_range, local, 0)
+        local_ranks = jnp.where(in_range, ranks, cap)   # force-drop remote
+        buf = _dispatch(x_flat, local_ids, local_ranks, e_loc, cap)
+        buf = _expert_ffn(p, buf, cfg.act)
+        out = _combine(buf, w * in_range.astype(w.dtype),
+                       local_ids, local_ranks, cap)
+        # f32 all-reduce: bf16 ARs trip XLA:CPU's AllReducePromotion pass,
+        # and f32 accumulation is the right numeric anyway.
+        out = jax.lax.psum(out.astype(jnp.float32), tp_axis)
+        out = out.astype(x.dtype)
+        return out.reshape(b, s, d), aux
+
+    raise ValueError(ep_mode)
+
+
+def apply_moe(p: Dict, cfg: ModelConfig, x: jax.Array, ctx: ShardCtx,
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) residual-sharded. Returns (out, aux_loss)."""
+    b, s, d = x.shape
+    shared_out = None
+    if "shared" in p:
+        shared_out = apply_mlp(p["shared"], x, cfg.act, x.dtype)
+
+    if ctx.mesh is None:
+        out, aux = _moe_local(p, cfg, x, None, "none")
+    else:
+        # Manual ONLY over the tensor axis: DP axes stay automatic, so this
+        # region nests cleanly inside the dp-manual train-step shard_map.
+        tp = ctx.tp_axis
+        m = ctx.tp_size
+        seq_ok = ctx.seq_sharded and s % m == 0 and s >= m
+        ep_mode = "a2a" if seq_ok else "psum"
+        if cfg.moe_experts % m:
+            ep_mode = "none"        # cannot shard experts; run replicated
+        seq_spec = tp if seq_ok else None
+        x_spec = P(None, seq_spec, None)
+        router_spec = P(None, None)
+        ew_spec = P(tp, None, None) if ep_mode != "none" else P(None, None,
+                                                                None)
+        in_specs = ({"router": router_spec, "wi": ew_spec, "wg": ew_spec,
+                     "wo": ew_spec}, x_spec)
+        routed = {k: p[k] for k in ("router", "wi", "wg", "wo")}
+        # Inside an outer (dp-manual) shard_map the context mesh must be
+        # used; at top level we pass the concrete mesh explicitly.
+        ambient = jax.sharding.get_abstract_mesh()
+        mesh_arg = None if not ambient.empty else ctx.mesh
+        out, aux = jax.shard_map(
+            lambda pp, xx: _moe_local(pp, cfg, xx, tp, ep_mode, (tp,)),
+            mesh=mesh_arg, in_specs=in_specs, out_specs=(x_spec, P()),
+            axis_names={tp}, check_vma=False)(routed, x)
+
+    if shared_out is not None:
+        out = out + shared_out
+    return out, aux

@@ -1,0 +1,27 @@
+"""Modality frontend STUBS per the assignment: ``[audio]`` (musicgen over
+EnCodec tokens) and ``[vlm]`` (llava anyres patches) supply *precomputed*
+frame/patch embeddings; the backbone consumes them via
+``frontend_embeds`` in the input batch.  ``input_specs()`` in launch/ uses
+these shapes; here we also provide deterministic synthetic generators for
+smoke tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def frontend_shape(cfg: ModelConfig, batch: int):
+    if cfg.frontend == "none" or cfg.frontend_tokens == 0:
+        return None
+    return (batch, cfg.frontend_tokens, cfg.d_model)
+
+
+def synth_frontend(cfg: ModelConfig, batch: int, seed: int = 0):
+    shape = frontend_shape(cfg, batch)
+    if shape is None:
+        return None
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, shape, jnp.dtype(cfg.dtype)) * 0.02

@@ -1,0 +1,217 @@
+"""Mamba2 (SSD — state-space duality) mixer, arXiv:2405.21060.
+
+Chunked SSD: within-chunk quadratic (attention-like, MXU-friendly) plus an
+inter-chunk state recurrence carried by ``lax.scan``.  Decode is an O(1)
+state update.  Multi-group B/C (``ssm_groups``) gives the tensor-parallel
+sharding surface (groups/heads over 'model').
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Builder, rms_norm
+
+NEG_INF = -1e30
+
+
+def _groups(cfg: ModelConfig) -> int:
+    g = getattr(cfg, "ssm_groups", 1) or 1
+    return g
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_mamba(make: Builder, cfg: ModelConfig, prefix: str) -> Dict:
+    d, din = cfg.d_model, cfg.ssm_heads * cfg.ssm_head_dim
+    g, n, h = _groups(cfg), cfg.ssm_state, cfg.ssm_heads
+    cc = din + 2 * g * n
+    return {
+        "in_z": make(f"{prefix}.in_z", (d, din), ("embed", "ssm_heads"), 1.0),
+        "in_x": make(f"{prefix}.in_x", (d, din), ("embed", "ssm_heads"), 1.0),
+        "in_bc": make(f"{prefix}.in_bc", (d, 2 * g * n),
+                      ("embed", "ssm_state"), 1.0),
+        "in_dt": make(f"{prefix}.in_dt", (d, h), ("embed", "ssm_heads"), 1.0),
+        "conv_w": make(f"{prefix}.conv_w", (cfg.conv_width, cc),
+                       ("conv", "ssm_heads"), 1.0),
+        "conv_b": make(f"{prefix}.conv_b", (cc,), ("ssm_heads",), 0.0),
+        "A_log": make(f"{prefix}.A_log", (h,), ("ssm_heads",), 0.0),
+        "D": make(f"{prefix}.D", (h,), ("ssm_heads",), 0.0),
+        "dt_bias": make(f"{prefix}.dt_bias", (h,), ("ssm_heads",), 0.0),
+        "gamma": make(f"{prefix}.gamma", (din,), ("ssm_heads",), 0.0),
+        "out": make(f"{prefix}.out", (din, d), ("ssm_heads", "embed"), 1.0),
+    }
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    g, n = _groups(cfg), cfg.ssm_state
+    din = cfg.ssm_heads * cfg.ssm_head_dim
+    cc = din + 2 * g * n
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cc), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                          n), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+def ssd_scan(x, dt, A, B, C, chunk: int,
+             init_state: Optional[jax.Array] = None,
+             unroll: bool = False):
+    """x:(b,s,h,p) dt:(b,s,h) A:(h,) B,C:(b,s,g,n).
+
+    Returns (y:(b,s,h,p), final_state:(b,h,p,n)) — fp32 state."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+    l = chunk
+
+    xb = jnp.moveaxis(x.reshape(b, nc, l, h, p).astype(jnp.float32), 1, 0)
+    dtb = jnp.moveaxis(dt.reshape(b, nc, l, h).astype(jnp.float32), 1, 0)
+    Bb = jnp.moveaxis(B.reshape(b, nc, l, g, n).astype(jnp.float32), 1, 0)
+    Cb = jnp.moveaxis(C.reshape(b, nc, l, g, n).astype(jnp.float32), 1, 0)
+    A32 = A.astype(jnp.float32)
+
+    state0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+              else init_state.astype(jnp.float32))
+
+    def body(state, inp):
+        xc, dtc, Bc, Cc = inp          # (b,l,h,p) (b,l,h) (b,l,g,n)
+        dA = dtc * A32                 # (b,l,h) — negative
+        cs = jnp.cumsum(dA, axis=1)    # inclusive
+        # inter-chunk: y_i += C_i . state0 decayed to i
+        state_g = state.reshape(b, g, hg, p, n)
+        y_inter = jnp.einsum("blgn,bghpn->blghp", Cc, state_g)
+        y_inter = y_inter.reshape(b, l, h, p) * jnp.exp(cs)[..., None]
+        # intra-chunk quadratic
+        scores = jnp.einsum("bign,bjgn->bijg", Cc, Bc)       # (b,l,l,g)
+        csr = cs.reshape(b, l, g, hg)
+        diff = csr[:, :, None] - csr[:, None]                # (b,i,j,g,hg)
+        ii = jnp.arange(l)
+        mask = (ii[:, None] >= ii[None, :])[None, :, :, None, None]
+        L = jnp.exp(jnp.where(mask, diff, NEG_INF))
+        xdt = (xc * dtc[..., None]).reshape(b, l, g, hg, p)
+        y_intra = jnp.einsum("bijg,bijgq,bjgqp->bigqp",
+                             scores, L, xdt).reshape(b, l, h, p)
+        # state update
+        decay_last = jnp.exp(cs[:, -1])                      # (b,h)
+        decay_g = jnp.exp(cs[:, -1][:, None] - cs            # (b,l,h)
+                          ).reshape(b, l, g, hg)
+        contrib = jnp.einsum("blgq,blgn,blgqp->bgqpn",
+                             decay_g, Bc, xdt).reshape(b, h, p, n)
+        state_new = state * decay_last[..., None, None] + contrib
+        return state_new, y_inter + y_intra
+
+    if unroll or nc == 1:
+        state, ys_list = state0, []
+        for i in range(nc):
+            state, yi = body(state, (xb[i], dtb[i], Bb[i], Cb[i]))
+            ys_list.append(yi)
+        final, ys = state, jnp.stack(ys_list)
+    else:
+        final, ys = jax.lax.scan(body, state0, (xb, dtb, Bb, Cb))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, sp, h, p)[:, :s]
+    return y.astype(x.dtype), final
+
+
+def ssd_step(state, x, dt, A, B, C):
+    """One decode step. state:(b,h,p,n) x:(b,h,p) dt:(b,h) B,C:(b,g,n)."""
+    b, h, p, n = state.shape
+    g = B.shape[1]
+    hg = h // g
+    da = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))   # (b,h)
+    Bh = jnp.repeat(B, hg, axis=1).astype(jnp.float32)             # (b,h,n)
+    Ch = jnp.repeat(C, hg, axis=1).astype(jnp.float32)
+    inc = jnp.einsum("bh,bhn,bhp->bhpn", dt.astype(jnp.float32), Bh,
+                     x.astype(jnp.float32))
+    state = state * da[..., None, None] + inc
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, state)
+    return state, y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full mixer
+# ---------------------------------------------------------------------------
+
+def _causal_conv(xbc, w, bias, cache: Optional[jax.Array]):
+    """xbc:(b,s,cc), w:(width,cc). Returns (out, new_cache)."""
+    b, s, cc = xbc.shape
+    width = w.shape[0]
+    if cache is None:
+        padded = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+        new_cache = None
+    else:
+        padded = jnp.concatenate([cache.astype(xbc.dtype), xbc], axis=1)
+        new_cache = padded[:, -(width - 1):] if width > 1 else cache
+    out = jnp.zeros_like(xbc)
+    for i in range(width):
+        out = out + padded[:, i:i + s] * w[i].astype(xbc.dtype)
+    out = out + bias.astype(xbc.dtype)
+    return jax.nn.silu(out), new_cache
+
+
+def apply_mamba(p: Dict, cfg: ModelConfig, x: jax.Array,
+                positions: jax.Array,
+                cache: Optional[Dict] = None,
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B,S,d). Returns (out, new_cache)."""
+    dt_ = x.dtype
+    b, s, d = x.shape
+    h, pdim, g, n = (cfg.ssm_heads, cfg.ssm_head_dim, _groups(cfg),
+                     cfg.ssm_state)
+    din = h * pdim
+
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"].astype(dt_))
+    xs = jnp.einsum("bsd,de->bse", x, p["in_x"].astype(dt_))
+    bc = jnp.einsum("bsd,de->bse", x, p["in_bc"].astype(dt_))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["in_dt"].astype(dt_))
+
+    xbc = jnp.concatenate([xs, bc], axis=-1)
+    conv_cache = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_cache)
+    xs, Bm, Cm = (xbc[..., :din],
+                  xbc[..., din:din + g * n],
+                  xbc[..., din + g * n:])
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(b, s, h, pdim)
+    Bm = Bm.reshape(b, s, g, n)
+    Cm = Cm.reshape(b, s, g, n)
+
+    if cache is None:
+        y, _ = ssd_scan(xh, dt, A, Bm, Cm, cfg.ssm_chunk,
+                        unroll=cfg.unroll_loops)
+        new_cache = None
+    elif s == 1:
+        st, y1 = ssd_step(cache["ssm"], xh[:, 0], dt[:, 0], A,
+                          Bm[:, 0], Cm[:, 0])
+        y = y1[:, None]
+        new_cache = {"conv": new_conv, "ssm": st}
+    else:
+        y, st = ssd_scan(xh, dt, A, Bm, Cm, cfg.ssm_chunk,
+                         init_state=cache["ssm"], unroll=cfg.unroll_loops)
+        new_cache = {"conv": new_conv, "ssm": st}
+
+    y = y + xh * p["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(b, s, din)
+    y = rms_norm(y * jax.nn.silu(z), p["gamma"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out"].astype(dt_))
+    return out, new_cache

@@ -1,0 +1,270 @@
+"""The LM: embeddings -> prefix layers -> scanned pattern periods -> head.
+
+Layer parameters of the repeated ``block_pattern`` are stacked over periods
+and consumed by ``lax.scan`` so the lowered HLO is O(pattern) rather than
+O(n_layers) — essential for the 512-device AOT dry-run of 48–60-layer
+configs.  Cross-entropy is computed in sequence chunks so (B, S, vocab)
+logits are never materialized (gemma3's 262k vocab at 4k tokens would be
+multiple GiB per device otherwise).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (array_builder, axes_builder, embed_tokens, init_embed,
+                     lm_logits, rms_norm, softcap)
+from .blocks import apply_block, init_block, init_block_cache
+from ..parallel.sharding import (ShardCtx, local_ctx, shard_cache,
+                                 shard_logits, shard_residual)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _stacked_builder(make, n: int):
+    def smake(name, shape, axes, scale):
+        return make(name, (n,) + tuple(shape), ("layers",) + tuple(axes),
+                    scale)
+    return smake
+
+
+def _init_tree(make, cfg: ModelConfig) -> Dict:
+    p: Dict = {"embed": init_embed(make, cfg.vocab, cfg.d_model,
+                                   cfg.tie_embeddings),
+               "final_ln": make("final_ln", (cfg.d_model,), ("embed",), 0.0)}
+    p["prefix"] = [
+        init_block(make, cfg, "a", False, f"prefix{i}")
+        for i in range(cfg.n_prefix_layers)
+    ]
+    smake = _stacked_builder(make, cfg.n_periods)
+    p["period"] = [
+        init_block(smake, cfg, kind, cfg.is_moe_pos(pos), f"pat{pos}")
+        for pos, kind in enumerate(cfg.block_pattern)
+    ]
+    if cfg.frontend != "none":
+        p["frontend_proj"] = make("frontend_proj",
+                                  (cfg.d_model, cfg.d_model),
+                                  ("embed", "embed2"), 1.0)
+    return p
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> Dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    return _init_tree(array_builder(rng, dtype), cfg)
+
+
+def logical_axes(cfg: ModelConfig) -> Dict:
+    return _init_tree(axes_builder(), cfg)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    """Cache pytree: prefix list + per-pattern-position stacked caches."""
+    caches: Dict = {
+        "prefix": [init_block_cache(cfg, "a", batch, max_len, dtype)
+                   for _ in range(cfg.n_prefix_layers)],
+        "period": [],
+    }
+    for pos, kind in enumerate(cfg.block_pattern):
+        one = init_block_cache(cfg, kind, batch, max_len, dtype)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape), one)
+        caches["period"].append(stacked)
+    return caches
+
+
+def shard_caches(caches: Dict, ctx: ShardCtx) -> Dict:
+    def f(x):
+        if x.ndim >= 3:
+            return shard_cache(x, ctx, kv_heads_axis=x.ndim - 2)
+        return x
+    return jax.tree.map(f, caches)
+
+
+def param_count(params: Dict) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    if cfg.remat == "kv":
+        # save the all-gathered K/V (tagged in attention.py) so the
+        # backward pass does not re-gather them over the model axis
+        pol = jax.checkpoint_policies.save_only_these_names("kv_gathered")
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def backbone(params: Dict, cfg: ModelConfig, x: jax.Array,
+             positions: jax.Array, ctx: ShardCtx,
+             caches: Optional[Dict] = None,
+             ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """x: (B,S,d) embedded input. Returns (hidden, caches', aux)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_prefix = []
+    for i, bp in enumerate(params["prefix"]):
+        c = caches["prefix"][i] if caches is not None else None
+        x, c, aux = apply_block(bp, cfg, x, positions, "a", False, ctx, c)
+        aux_total += aux
+        new_prefix.append(c)
+
+    def period_core(carry, pparams, pcaches):
+        x, aux_acc = carry
+        new_caches = []
+        for pos, kind in enumerate(cfg.block_pattern):
+            c = pcaches[pos] if pcaches is not None else None
+            x, c, aux = apply_block(pparams[pos], cfg, x, positions, kind,
+                                    cfg.is_moe_pos(pos), ctx, c)
+            aux_acc = aux_acc + aux
+            new_caches.append(c)
+        return (x, aux_acc), new_caches
+
+    pcaches = caches["period"] if caches is not None else None
+    n_periods = cfg.n_periods
+    if not cfg.scan_layers:
+        # Unrolled stack (exact per-layer HLO accounting for the dry-run
+        # roofline; lax.scan bodies are counted once by cost_analysis).
+        body = _remat_wrap(lambda c, xs: period_core(c, xs[0], xs[1]), cfg)
+        period_outs = []
+        for i in range(n_periods):
+            pp = jax.tree.map(lambda a: a[i], params["period"])
+            pc = (jax.tree.map(lambda a: a[i], pcaches)
+                  if pcaches is not None else None)
+            (x, aux_total), nc = body((x, aux_total), (pp, pc))
+            period_outs.append(nc)
+        new_caches = None
+        if pcaches is not None:
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *period_outs)
+            new_caches = {"prefix": new_prefix, "period": stacked}
+    elif pcaches is None:
+        body = _remat_wrap(
+            lambda c, pp: (period_core(c, pp, None)[0],
+                           jnp.zeros((), jnp.int32)), cfg)
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                         params["period"])
+        new_caches = None
+    else:
+        body = _remat_wrap(
+            lambda c, xs: period_core(c, xs[0], xs[1]), cfg)
+        (x, aux_total), ys = jax.lax.scan(
+            body, (x, aux_total), (params["period"], pcaches))
+        new_caches = {"prefix": new_prefix, "period": ys}
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    return x, new_caches, aux_total
+
+
+def embed_input(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+                ctx: ShardCtx,
+                frontend_embeds: Optional[jax.Array] = None) -> jax.Array:
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_tokens(params["embed"], tokens, dtype)
+    if frontend_embeds is not None and cfg.frontend != "none":
+        fe = jnp.einsum("bfd,de->bfe", frontend_embeds.astype(dtype),
+                        params["frontend_proj"].astype(dtype))
+        f = fe.shape[1]
+        x = jnp.concatenate([fe, x[:, f:]], axis=1)
+    return shard_residual(x, ctx)
+
+
+# ---------------------------------------------------------------------------
+# losses / steps
+# ---------------------------------------------------------------------------
+
+def chunked_ce_loss(params: Dict, cfg: ModelConfig, hidden: jax.Array,
+                    labels: jax.Array, mask: jax.Array, ctx: ShardCtx,
+                    chunk: int = 0) -> jax.Array:
+    """Next-token CE without materializing full (B,S,V) logits."""
+    B, S, D = hidden.shape
+    chunk = min(chunk or cfg.loss_chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = hidden.shape[1] // chunk
+    hs = jnp.moveaxis(hidden.reshape(B, nc, chunk, D), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(B, nc, chunk), 1, 0)
+
+    def body(acc, xs):
+        h, l, m = xs
+        logits = lm_logits(params["embed"], h, jnp.dtype(cfg.dtype),
+                           cfg.logit_softcap)
+        logits = shard_logits(logits, ctx)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        nll = (lse - tgt) * m
+        return (acc[0] + jnp.sum(nll), acc[1] + jnp.sum(m)), None
+
+    init = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    if cfg.unroll_loops or nc == 1:
+        acc = init
+        for i in range(nc):
+            acc, _ = body(acc, (hs[i], ls[i], ms[i]))
+        tot, cnt = acc
+    else:
+        (tot, cnt), _ = jax.lax.scan(body, init, (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params: Dict, cfg: ModelConfig, batch: Dict, ctx: ShardCtx,
+            aux_weight: float = 0.01) -> Tuple[jax.Array, Dict]:
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    else:
+        mask = mask.astype(jnp.float32)
+    if cfg.frontend != "none" and cfg.frontend_tokens:
+        fmask = jnp.ones_like(mask).at[:, :cfg.frontend_tokens].set(0.0)
+        mask = mask * fmask
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = embed_input(params, cfg, tokens, ctx,
+                    batch.get("frontend_embeds"))
+    hidden, _, aux = backbone(params, cfg, x, positions, ctx)
+    ce = chunked_ce_loss(params, cfg, hidden, labels, mask, ctx)
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def prefill_step(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+                 ctx: ShardCtx, caches: Dict,
+                 frontend_embeds: Optional[jax.Array] = None,
+                 ) -> Tuple[jax.Array, Dict]:
+    """Process a full prompt, fill caches, return last-token logits."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = embed_input(params, cfg, tokens, ctx, frontend_embeds)
+    hidden, caches, _ = backbone(params, cfg, x, positions, ctx, caches)
+    last = hidden[:, -1:]
+    logits = lm_logits(params["embed"], last, jnp.dtype(cfg.dtype),
+                       cfg.logit_softcap)
+    return shard_logits(logits, ctx), caches
+
+
+def decode_step(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+                position: jax.Array, ctx: ShardCtx, caches: Dict,
+                ) -> Tuple[jax.Array, Dict]:
+    """One token per sequence. tokens: (B,1); position: (B,) int32."""
+    B = tokens.shape[0]
+    positions = position[:, None].astype(jnp.int32)
+    x = embed_input(params, cfg, tokens, ctx)
+    hidden, caches, _ = backbone(params, cfg, x, positions, ctx, caches)
+    logits = lm_logits(params["embed"], hidden, jnp.dtype(cfg.dtype),
+                       cfg.logit_softcap)
+    return shard_logits(logits, ctx), caches

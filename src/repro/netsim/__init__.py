@@ -1,0 +1,8 @@
+from .topology import LeafSpine, leaf_pair_maxflow, maxflow_matrix
+from .fabric import Flow, FluidFabric, FlowArrays
+from .cc import NicState
+from .sim import SimConfig, SimResult, run_sim
+from .workloads import (bisection_pairs, all2all, one_to_many,
+                        ring_neighbors, all2all_cct_us,
+                        ring_collective_cct_us, bus_bandwidth_gbps)
+from .queuesim import jsq_delay_sim

@@ -1,0 +1,153 @@
+"""Transport / NIC models for the simulator.
+
+Four stacks (§6 reference solutions and ablations):
+  * 'spx'    — per-(flow, plane) CC contexts + PLB two-stage plane split +
+               probe-timeout plane exclusion (the full SPX NIC).
+  * 'dcqcn'  — single CC context, ECMP routing (the ETH baseline).
+  * 'global' — one shared CC context across planes, oblivious equal split
+               (Fig 15 'Global CC' ablation).
+  * 'esr'    — entropy-based source routing: one CC loop whose signal
+               aggregates planes AND paths (UET-style spraying; Fig 15d) —
+               plane selection cannot be steered independently.
+  * 'swlb'   — software plane LB: per-plane awareness but O(1 s) reaction
+               time (Fig 12 comparison).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+SPX_MD = 0.7
+SPX_AI = 0.08
+SPX_RTT_GAIN = 0.15
+DCQCN_ALPHA_G = 0.0625
+DCQCN_AI = 0.01
+MIN_RATE = 0.01
+
+
+@dataclass
+class NicState:
+    mode: str
+    n_flows: int
+    n_planes: int
+    target_rtt_us: float = 12.0
+    probe_timeout: int = 3
+    sw_lb_delay_slots: int = 0       # 'swlb': reaction delay in slots
+
+    rate: np.ndarray = field(init=False)        # (F, P) allowances
+    alpha: np.ndarray = field(init=False)       # (F, P) dcqcn alpha
+    probe_miss: np.ndarray = field(init=False)  # (F, P)
+    eligible: np.ndarray = field(init=False)    # (F, P) bool
+    pending_fail: np.ndarray = field(init=False)  # swlb delayed reaction
+
+    def __post_init__(self):
+        F, P = self.n_flows, self.n_planes
+        self.rate = np.ones((F, P))
+        self.alpha = np.zeros((F, P))
+        self.probe_miss = np.zeros((F, P), np.int64)
+        self.eligible = np.ones((F, P), bool)
+        self.pending_fail = np.zeros((F, P), np.int64)
+
+    # ------------------------------------------------------------------
+    def plane_split(self, demand: np.ndarray) -> np.ndarray:
+        """(F,) demand -> (F, P) offered per plane (the PLB, Fig 4)."""
+        F, P = self.rate.shape
+        if self.mode in ("dcqcn",):
+            # single plane topologies use P=1; otherwise equal split
+            w = np.ones((F, P)) / P
+            return np.minimum(demand[:, None] * w, self.rate)
+        if self.mode == "swlb":
+            # software LB: oblivious equal split over planes it BELIEVES
+            # are up; belief updates only at software timescales (_probe).
+            elig = self.eligible
+            n_up = np.maximum(elig.sum(1, keepdims=True), 1)
+            return np.where(elig, demand[:, None] / n_up, 0.0)
+        if self.mode in ("global", "esr"):
+            # oblivious equal split over planes believed up; one shared
+            # rate context (min over planes' contexts = stored identical)
+            elig = self.eligible
+            n_up = np.maximum(elig.sum(1, keepdims=True), 1)
+            shared = self.rate.min(1, keepdims=True)
+            return np.where(elig, demand[:, None] * shared / n_up, 0.0)
+        # spx / swlb: rate-filter then weight by allowance
+        elig = self.eligible & (self.rate > MIN_RATE + 1e-9)
+        any_ok = elig.any(1, keepdims=True)
+        elig = np.where(any_ok, elig, self.eligible)
+        w = np.where(elig, self.rate, 0.0)
+        s = w.sum(1, keepdims=True)
+        w = np.where(s > 0, w / np.maximum(s, 1e-12), 1.0 / P)
+        return np.minimum(demand[:, None] * w, np.where(elig, self.rate,
+                                                        0.0))
+
+    # ------------------------------------------------------------------
+    def update(self, offered: np.ndarray, delivered: np.ndarray,
+               rtt: np.ndarray, ecn: np.ndarray, slot: int,
+               probe_ok: Optional[np.ndarray] = None) -> None:
+        """Per-slot control update. offered/delivered: (F, P).
+        probe_ok: (F, P) RTT-probe success (plane reachability) — probes
+        run independently of data traffic (§4.4.1)."""
+        if probe_ok is None:
+            probe_ok = ~((offered > 1e-9) & (delivered <= 1e-9))
+        self._probe_ok = probe_ok
+        F, P = self.rate.shape
+        if self.mode == "dcqcn":
+            ecn_any = ecn.max(1, keepdims=True)
+            self.alpha = ((1 - DCQCN_ALPHA_G) * self.alpha +
+                          DCQCN_ALPHA_G * (ecn_any > 0))
+            cut = self.rate * (1 - self.alpha / 2)
+            grow = np.minimum(self.rate + DCQCN_AI, 1.0)
+            self.rate = np.clip(np.where(ecn_any > 0, cut, grow),
+                                MIN_RATE, 1.0)
+            return
+
+        if self.mode in ("global", "esr"):
+            # one context: aggregate signal over planes (and paths for esr)
+            agg_ecn = ecn.max(1, keepdims=True)
+            agg_rtt = rtt.max(1, keepdims=True)
+            cut = self.rate * SPX_MD
+            rtt_err = (agg_rtt - self.target_rtt_us) / self.target_rtt_us
+            trim = self.rate * (1 - SPX_RTT_GAIN * np.clip(rtt_err, 0, 2))
+            grow = np.minimum(self.rate + SPX_AI, 1.0)
+            new = np.where(agg_ecn > 0, cut,
+                           np.where(rtt_err > 0.25, trim, grow))
+            if self.mode == "esr":
+                # entangled loops overreact: extra MD when signal flips
+                new = np.where(agg_ecn > 0, new * 0.85, new)
+            self.rate = np.clip(new, MIN_RATE, 1.0)
+            self._probe(offered, delivered, slot)
+            return
+
+        # --- spx / swlb: per-plane contexts ---
+        rtt_err = (rtt - self.target_rtt_us) / self.target_rtt_us
+        cut = self.rate * (SPX_MD + (1 - SPX_MD) * np.clip(1 - ecn, 0, 1))
+        trim = self.rate * (1 - SPX_RTT_GAIN * np.clip(rtt_err, 0, 2))
+        grow = np.minimum(self.rate + SPX_AI, 1.0)
+        self.rate = np.clip(
+            np.where(ecn > 0, cut, np.where(rtt_err > 0.25, trim, grow)),
+            MIN_RATE, 1.0)
+        self._probe(offered, delivered, slot)
+
+    def _probe(self, offered, delivered, slot) -> None:
+        """RTT-probe timeouts -> plane exclusion (§4.4.1).  'swlb' flips
+        eligibility only sw_lb_delay_slots after detection (software
+        timescale); hardware PLB reacts within probe_timeout slots."""
+        miss = ~self._probe_ok
+        self.probe_miss = np.where(miss, self.probe_miss + 1, 0)
+        dead = self.probe_miss >= self.probe_timeout
+        if self.mode == "swlb" and self.sw_lb_delay_slots > 0:
+            newly = dead & self.eligible & (self.pending_fail == 0)
+            self.pending_fail = np.where(
+                newly, slot + self.sw_lb_delay_slots, self.pending_fail)
+            fire = (self.pending_fail > 0) & (slot >= self.pending_fail)
+            self.eligible = np.where(fire & dead, False, self.eligible)
+            healed = ~dead & ~self.eligible
+            self.eligible = np.where(healed, True, self.eligible)
+            self.pending_fail = np.where(~dead, 0, self.pending_fail)
+        else:
+            was = self.eligible
+            self.eligible = ~dead
+            just_back = self.eligible & ~was
+            self.rate = np.where(just_back, 0.5, self.rate)
+        self.rate = np.where(~self.eligible, MIN_RATE, self.rate)

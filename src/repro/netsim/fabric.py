@@ -1,0 +1,202 @@
+"""Discrete-time fluid fabric: flows, routing fractions, queues, ECN.
+
+Each slot (default 10 µs):
+  1. NIC PLB splits each flow's offered rate across planes (per-packet in
+     hardware -> fractional in the fluid model).
+  2. In-plane routing splits a flow's plane-rate across spines: ECMP = a
+     fixed hash assignment; AR = quantized-JSQ fractions re-balanced every
+     slot; weighted-AR folds in remote capacity weights (§4.4.2).
+  3. Link loads -> bottleneck scaling (lossless: excess becomes queue/PFC
+     backpressure, modeled as achieved-rate scaling + queue growth).
+  4. Queues update; ECN marks where queueing persists beyond what AR can
+     re-balance; per-(flow, plane) RTT proxy = base + queue delays.
+
+Fully vectorized over flows (all2all workloads reach 1e5 flows).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .topology import LeafSpine
+
+
+@dataclass
+class Flow:
+    src: int
+    dst: int
+    demand: float = 1.0          # offered rate cap (line rate = 1.0)
+    bytes_total: float = np.inf  # in rate*slot units (CCT workloads)
+    group: str = "main"
+    start_slot: int = 0
+
+
+@dataclass
+class FlowArrays:
+    src: np.ndarray
+    dst: np.ndarray
+    src_leaf: np.ndarray
+    dst_leaf: np.ndarray
+    demand: np.ndarray
+    bytes_total: np.ndarray
+    group: np.ndarray            # int-coded
+    groups: List[str]
+    start_slot: np.ndarray = None
+
+    @classmethod
+    def build(cls, flows: List[Flow], t: LeafSpine) -> "FlowArrays":
+        src = np.array([f.src for f in flows], np.int64)
+        dst = np.array([f.dst for f in flows], np.int64)
+        names = sorted({f.group for f in flows})
+        gmap = {g: i for i, g in enumerate(names)}
+        return cls(
+            src=src, dst=dst,
+            src_leaf=src // t.hosts_per_leaf,
+            dst_leaf=dst // t.hosts_per_leaf,
+            demand=np.array([f.demand for f in flows]),
+            bytes_total=np.array([f.bytes_total for f in flows]),
+            group=np.array([gmap[f.group] for f in flows], np.int64),
+            groups=names,
+            start_slot=np.array([f.start_slot for f in flows], np.int64))
+
+    def __len__(self) -> int:
+        return self.src.shape[0]
+
+
+@dataclass
+class FabricState:
+    q_up: np.ndarray             # (P, L, S) in slot*cap units
+    q_down: np.ndarray           # (P, S, L)
+
+    @classmethod
+    def zeros(cls, t: LeafSpine) -> "FabricState":
+        return cls(np.zeros_like(t.up), np.zeros_like(t.down))
+
+
+@dataclass
+class SlotResult:
+    achieved: np.ndarray         # (F,) total goodput this slot
+    plane_rates: np.ndarray      # (F, P) achieved per plane
+    rtt: np.ndarray              # (F, P) µs proxy
+    ecn: np.ndarray              # (F, P) marked fraction
+    util_up: np.ndarray          # (P, L, S)
+
+
+class FluidFabric:
+    def __init__(self, topo: LeafSpine, base_rtt_us: float = 4.0,
+                 slot_us: float = 10.0, ecn_queue_thresh: float = 3.0,
+                 ar_temperature: float = 0.25, jsq_bins: int = 16,
+                 q_cap: float = 64.0):
+        self.t = topo
+        self.state = FabricState.zeros(topo)
+        self.base_rtt = base_rtt_us
+        self.slot_us = slot_us
+        self.ecn_thresh = ecn_queue_thresh
+        self.ar_temp = ar_temperature
+        self.jsq_bins = jsq_bins
+        self.q_cap = q_cap
+
+    # ------------------------------------------------------------------
+    def pair_fractions(self, mode: str,
+                       remote_weights: Optional[np.ndarray] = None
+                       ) -> np.ndarray:
+        """(P, L, L, S) spine split per (plane, src leaf, dst leaf).
+        mode: 'ar' | 'war'.  (ECMP is per-flow — see ecmp_fractions.)"""
+        t = self.t
+        P, L, S = t.n_planes, t.n_leaves, t.n_spines
+        cap = np.minimum(t.up[:, :, None, :],                 # (P,L,1,S)
+                         np.swapaxes(t.down, 1, 2)[:, None, :, :])
+        up_mask = cap > 1e-9
+        q = (self.state.q_up[:, :, None, :] +
+             np.swapaxes(self.state.q_down, 1, 2)[:, None, :, :])
+        qbin = np.floor(np.clip(q / 8.0, 0, 1 - 1e-9) * self.jsq_bins) + 1.0
+        w = cap.copy()
+        if mode == "war" and remote_weights is not None:
+            # remote_weights: (P, S, L) healthy-capacity weight to dst leaf
+            w = w * np.swapaxes(remote_weights, 1, 2)[:, None, :, :]
+        score = qbin / np.maximum(w, 1e-9)
+        logit = np.where(up_mask, -score / self.ar_temp, -1e30)
+        logit -= logit.max(-1, keepdims=True)
+        e = np.exp(logit)
+        sums = e.sum(-1, keepdims=True)
+        return np.where(sums > 0, e / np.maximum(sums, 1e-30), 0.0)
+
+    def ecmp_fractions(self, fa: FlowArrays,
+                       assign: np.ndarray) -> np.ndarray:
+        """assign: (F, P) spine index per flow per plane -> (F, P, S)."""
+        F, P, S = len(fa), self.t.n_planes, self.t.n_spines
+        out = np.zeros((F, P, S))
+        fi = np.repeat(np.arange(F), P)
+        pi = np.tile(np.arange(P), F)
+        out[fi, pi, assign.reshape(-1)] = 1.0
+        return out
+
+    # ------------------------------------------------------------------
+    def step(self, fa: FlowArrays, plane_rates: np.ndarray,
+             frac: np.ndarray) -> SlotResult:
+        """plane_rates: (F, P) offered; frac: (F, P, S). Vectorized."""
+        t = self.t
+        F, P, S, L = len(fa), t.n_planes, t.n_spines, t.n_leaves
+        eps = 1e-12
+        same_leaf = fa.src_leaf == fa.dst_leaf
+        fabric_rate = np.where(same_leaf[:, None], 0.0, plane_rates)
+        contrib = fabric_rate[:, :, None] * frac              # (F, P, S)
+
+        # ---- offered load per link ----
+        load_up = np.zeros((L, P, S))
+        np.add.at(load_up, fa.src_leaf, contrib.transpose(0, 1, 2))
+        load_up = load_up.transpose(1, 0, 2)                  # (P, L, S)
+        load_down = np.zeros((L, P, S))
+        np.add.at(load_down, fa.dst_leaf, contrib)
+        load_down = load_down.transpose(1, 2, 0)              # (P, S, L)
+        load_acc_tx = np.zeros((t.n_hosts, P))
+        np.add.at(load_acc_tx, fa.src, plane_rates)
+        load_acc_rx = np.zeros((t.n_hosts, P))
+        np.add.at(load_acc_rx, fa.dst, plane_rates)
+
+        # ---- bottleneck scaling ----
+        f_up = np.minimum(1.0, t.up / np.maximum(load_up, eps))
+        f_down = np.minimum(1.0, t.down / np.maximum(load_down, eps))
+        acc = t.access.T                                      # (H, P)
+        f_acc_tx = np.minimum(1.0, acc / np.maximum(load_acc_tx, eps))
+        f_acc_rx = np.minimum(1.0, acc / np.maximum(load_acc_rx, eps))
+        up_alive_tx = acc[fa.src] > eps                       # (F, P)
+        up_alive_rx = acc[fa.dst] > eps
+
+        # ---- achieved per (flow, plane) ----
+        fup_g = f_up[:, fa.src_leaf, :].transpose(1, 0, 2)    # (F, P, S)
+        fdn_g = f_down.transpose(0, 2, 1)[:, fa.dst_leaf, :]
+        fdn_g = fdn_g.transpose(1, 0, 2)                      # (F, P, S)
+        scale = np.minimum(fup_g, fdn_g)
+        through = (contrib * scale).sum(-1)                   # (F, P)
+        local = np.where(same_leaf[:, None], plane_rates, 0.0)
+        acc_scale = np.minimum(f_acc_tx[fa.src], f_acc_rx[fa.dst])
+        achieved_pp = (through + local) * acc_scale
+        achieved_pp = np.where(up_alive_tx & up_alive_rx, achieved_pp, 0.0)
+
+        # ---- rtt / ecn per (flow, plane) ----
+        q_path = (self.state.q_up[:, fa.src_leaf, :].transpose(1, 0, 2) +
+                  self.state.q_down.transpose(0, 2, 1)[:, fa.dst_leaf, :]
+                  .transpose(1, 0, 2))                        # (F, P, S)
+        qmean = (frac * q_path).sum(-1)                       # (F, P)
+        qmean = np.where(same_leaf[:, None], 0.0, qmean)
+        rtt = self.base_rtt + qmean * self.slot_us * 0.5
+        ecn = np.where(qmean > self.ecn_thresh,
+                       np.minimum(1.0, qmean / (4 * self.ecn_thresh)), 0.0)
+
+        # ---- queue evolution ----
+        self.state.q_up = np.clip(
+            self.state.q_up + (load_up - t.up) / np.maximum(t.up, eps),
+            0.0, self.q_cap)
+        self.state.q_down = np.clip(
+            self.state.q_down + (load_down - t.down) /
+            np.maximum(t.down, eps), 0.0, self.q_cap)
+        self.state.q_up[t.up <= eps] = 0.0
+        self.state.q_down[t.down <= eps] = 0.0
+
+        util = load_up / np.maximum(t.up, eps)
+        return SlotResult(achieved=achieved_pp.sum(1),
+                          plane_rates=achieved_pp, rtt=rtt, ecn=ecn,
+                          util_up=util)

@@ -1,0 +1,141 @@
+"""Simulation runner: topology + flows + NIC stack + events -> metrics."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from .cc import NicState
+from .fabric import Flow, FlowArrays, FluidFabric
+from .topology import LeafSpine
+
+
+@dataclass
+class SimConfig:
+    slots: int = 2000
+    slot_us: float = 10.0
+    routing: str = "ar"          # 'ar' | 'war' | 'ecmp'
+    nic: str = "spx"             # 'spx' | 'dcqcn' | 'global' | 'esr' | 'swlb'
+    base_rtt_us: float = 4.0
+    warmup_frac: float = 0.25
+    sw_lb_delay_ms: float = 1000.0
+    seed: int = 0
+    record_every: int = 1
+
+
+@dataclass
+class SimResult:
+    goodput: np.ndarray          # (T_rec, F) achieved per flow over time
+    rtt: np.ndarray              # (T_rec, F) mean-plane rtt proxy
+    completion_slot: np.ndarray  # (F,) slot when bytes_total finished
+    mean_goodput: np.ndarray     # (F,) post-warmup average
+    util_up_last: np.ndarray
+    groups: List[str]
+    group_of: np.ndarray
+    slot_us: float
+
+    def group_mean(self, group: str) -> float:
+        gi = self.groups.index(group)
+        return float(self.mean_goodput[self.group_of == gi].mean())
+
+
+def run_sim(topo: LeafSpine, flows: List[Flow], cfg: SimConfig,
+            events: Optional[Callable[[int, LeafSpine], None]] = None,
+            ) -> SimResult:
+    rng = np.random.default_rng(cfg.seed)
+    fa = FlowArrays.build(flows, topo)
+    F, P, S = len(fa), topo.n_planes, topo.n_spines
+    fabric = FluidFabric(topo, base_rtt_us=cfg.base_rtt_us,
+                         slot_us=cfg.slot_us)
+    nic = NicState(
+        mode=cfg.nic if cfg.nic != "swlb" else "swlb",
+        n_flows=F, n_planes=P,
+        sw_lb_delay_slots=int(cfg.sw_lb_delay_ms * 1000 / cfg.slot_us)
+        if cfg.nic == "swlb" else 0)
+
+    # ECMP static assignment: one spine per (flow, plane).  Routing
+    # withdraws dead paths (slow control plane), so flows whose assigned
+    # spine-path died are re-hashed onto survivors — ECMP's problem is
+    # imbalance, not black-holing.
+    assign = rng.integers(0, S, size=(F, P))
+
+    def _rehash_dead(assign):
+        cap = np.minimum(
+            topo.up[:, fa.src_leaf, :],
+            np.swapaxes(topo.down, 1, 2)[:, fa.dst_leaf, :])  # (P, F, S)
+        cap = cap.transpose(1, 0, 2)                          # (F, P, S)
+        alive = cap > 1e-12
+        cur = np.take_along_axis(
+            alive, assign[:, :, None], axis=2)[:, :, 0]
+        bad = ~cur & alive.any(-1)
+        if bad.any():
+            # deterministic re-hash: first alive spine after a seeded offset
+            off = rng.integers(0, S, size=assign.shape)
+            order = (off[:, :, None] + np.arange(S)[None, None]) % S
+            alive_ord = np.take_along_axis(alive, order, axis=2)
+            first = np.argmax(alive_ord, axis=2)
+            new = np.take_along_axis(order, first[:, :, None],
+                                     axis=2)[:, :, 0]
+            assign = np.where(bad, new, assign)
+        return assign
+    remaining = fa.bytes_total.copy()
+    done = np.zeros(F, bool)
+    completion = np.full(F, -1, np.int64)
+
+    rec_g, rec_r = [], []
+    for t in range(cfg.slots):
+        if events is not None:
+            events(t, topo)
+        demand = np.where(done | (t < fa.start_slot), 0.0, fa.demand)
+        offered = nic.plane_split(demand)
+        if cfg.routing == "ecmp":
+            assign = _rehash_dead(assign)
+            frac = fabric.ecmp_fractions(fa, assign)
+        else:
+            rw = None
+            if cfg.routing == "war":
+                # remote weight = normalized healthy down-capacity
+                dn = topo.down
+                rw = dn / np.maximum(dn.max(axis=1, keepdims=True), 1e-9)
+            pair = fabric.pair_fractions("war" if rw is not None else "ar",
+                                         rw)
+            frac = pair[:, fa.src_leaf, fa.dst_leaf, :].transpose(1, 0, 2)
+        res = fabric.step(fa, offered, frac)
+        # RTT probes: a plane is reachable iff both endpoints' access links
+        # on that plane are up (probes run independently of data traffic)
+        probe_ok = ((topo.access.T[fa.src] > 1e-12) &
+                    (topo.access.T[fa.dst] > 1e-12))          # (F, P)
+        nic.update(offered, res.plane_rates, res.rtt, res.ecn, t,
+                   probe_ok=probe_ok)
+        # Packet-loss stall: while a plane carries offered traffic but
+        # delivers nothing (undetected failure), in-order completion of the
+        # whole transfer stalls on lost packets (§2.2 blast radius).  The
+        # stall clears once the PLB stops offering to that plane.
+        stalled = ((offered > 1e-9) & (res.plane_rates <= 1e-9)).any(1)
+        res.achieved = np.where(stalled, 0.0, res.achieved)
+
+        remaining = remaining - res.achieved
+        newly = (~done) & (remaining <= 0)
+        # the last packet drains behind the path queues: completion is
+        # delayed by the queuing delay at finish time (in slots)
+        w = np.maximum(offered, 1e-12)
+        qdelay = (((res.rtt * w).sum(1) / w.sum(1)) -
+                  cfg.base_rtt_us) / cfg.slot_us
+        completion[newly] = t + np.ceil(qdelay[newly]).astype(np.int64)
+        done |= newly
+
+        if t % cfg.record_every == 0:
+            rec_g.append(res.achieved.copy())
+            w = np.maximum(offered, 1e-12)
+            rec_r.append((res.rtt * w).sum(1) / w.sum(1))
+
+    goodput = np.asarray(rec_g)
+    rtt = np.asarray(rec_r)
+    w0 = int(goodput.shape[0] * cfg.warmup_frac)
+    return SimResult(
+        goodput=goodput, rtt=rtt, completion_slot=completion,
+        mean_goodput=goodput[w0:].mean(0) if goodput.shape[0] > w0
+        else goodput.mean(0),
+        util_up_last=res.util_up, groups=fa.groups, group_of=fa.group,
+        slot_us=cfg.slot_us)

@@ -1,0 +1,94 @@
+"""Multi-plane leaf–spine topologies (NSX-style, fluid granularity).
+
+Link capacities are normalized to 1.0 = one port at line rate.  Parallel
+links between switches (sub-max-scale consolidation, §6.1) appear as
+capacity > 1 on a (leaf, spine) edge.  Every plane is an independent copy
+(§3.1: planes are disconnected, joined only at the host NIC).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class LeafSpine:
+    n_leaves: int
+    n_spines: int
+    hosts_per_leaf: int
+    n_planes: int = 1
+    parallel_links: int = 1
+    link_cap: float = 1.0
+    access_cap: float = 1.0
+
+    # capacity arrays (set in __post_init__)
+    up: np.ndarray = field(init=False)      # (P, L, S) leaf->spine
+    down: np.ndarray = field(init=False)    # (P, S, L) spine->leaf
+    access: np.ndarray = field(init=False)  # (P, H) host<->leaf (full dup)
+
+    def __post_init__(self):
+        P, L, S = self.n_planes, self.n_leaves, self.n_spines
+        cap = self.link_cap * self.parallel_links
+        self.up = np.full((P, L, S), cap, np.float64)
+        self.down = np.full((P, S, L), cap, np.float64)
+        self.access = np.full((P, self.n_hosts), self.access_cap,
+                              np.float64)
+
+    @property
+    def n_hosts(self) -> int:
+        return self.n_leaves * self.hosts_per_leaf
+
+    def leaf_of(self, host: int) -> int:
+        return host // self.hosts_per_leaf
+
+    # ---- fault injection -------------------------------------------------
+    def fail_uplink(self, plane: int, leaf: int, spine: int,
+                    frac: float = 1.0) -> None:
+        self.up[plane, leaf, spine] *= (1.0 - frac)
+        self.down[plane, spine, leaf] *= (1.0 - frac)
+
+    def trim_leaf_uplinks(self, plane: int, leaf: int,
+                          keep_frac: float) -> None:
+        """§6.4 / Fig 16: reduce a leaf's uplink capacity to keep_frac."""
+        self.up[plane, leaf, :] *= keep_frac
+        self.down[plane, :, leaf] *= keep_frac
+
+    def fail_access(self, plane: int, host: int) -> None:
+        self.access[plane, host] = 0.0
+
+    def restore_access(self, plane: int, host: int) -> None:
+        self.access[plane, host] = self.access_cap
+
+    def random_link_failures(self, rng: np.random.Generator,
+                             frac: float) -> None:
+        """Uniform random fabric link failures (Fig 1c / §6.4)."""
+        for p in range(self.n_planes):
+            mask = rng.random((self.n_leaves, self.n_spines)) < frac
+            unit = self.link_cap
+            self.up[p] = np.maximum(self.up[p] - mask * unit, 0.0)
+            self.down[p] = np.maximum(self.down[p] - mask.T * unit, 0.0)
+
+    def copy(self) -> "LeafSpine":
+        t = LeafSpine(self.n_leaves, self.n_spines, self.hosts_per_leaf,
+                      self.n_planes, self.parallel_links, self.link_cap,
+                      self.access_cap)
+        t.up = self.up.copy()
+        t.down = self.down.copy()
+        t.access = self.access.copy()
+        return t
+
+
+def leaf_pair_maxflow(t: LeafSpine, plane: int, l1: int, l2: int) -> float:
+    """Max flow leaf->leaf through the spine tier (2-tier: sum over spines
+    of min(up, down))."""
+    return float(np.sum(np.minimum(t.up[plane, l1, :],
+                                   t.down[plane, :, l2])))
+
+
+def maxflow_matrix(t: LeafSpine, plane: int = 0) -> np.ndarray:
+    """(L, L) leaf-pair max-flow (Fig 1c)."""
+    up = t.up[plane]                     # (L, S)
+    down = t.down[plane]                 # (S, L)
+    return np.minimum(up[:, None, :], down.T[None, :, :]).sum(-1)

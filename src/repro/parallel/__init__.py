@@ -1,0 +1,1 @@
+from .sharding import ShardCtx, local_ctx, param_shardings, spec_for_axes

@@ -1,0 +1,239 @@
+"""Logical-axis sharding rules and the ShardCtx threaded through the model.
+
+Parameters are annotated with *logical* axes at init time (see
+``layers.axes_builder``); ``rules`` maps logical axes to mesh axes.  The
+default rules implement Megatron-style TP over 'model', DP over
+('pod','data'), sequence-parallel residual activations, and expert
+parallelism over 'model'.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DEFAULT_RULES: Dict[str, Any] = {
+    "embed": None,          # d_model: replicated
+    "mlp": "model",         # FFN intermediate
+    "heads": "model",       # attention heads
+    "kv": "model",          # kv heads (may be fewer than model size -> None)
+    "head": None,           # per-head dim
+    "vocab": "model",       # embedding/vocab dim
+    "embed_t": None,        # embedding-table d_model dim (never sharded)
+    "experts": "model",     # MoE expert dim
+    "embed_e": None,        # expert d_model dim (contracted; never FSDP)
+    "mlp_e": None,          # expert FFN dim (FSDP-sharded when enabled)
+    "qlora": None,
+    "kvlora": None,
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "conv": "model",
+    "layers": None,         # stacked-scan leading dim
+    "ff_tokens": None,
+}
+
+
+def make_rules(fsdp_axis: Optional[str] = None) -> Dict[str, Any]:
+    """Param sharding rules; fsdp_axis additionally shards the 'embed'
+    (d_model) dim of weights over a DP axis — ZeRO-3-style, with GSPMD
+    inserting the per-layer all-gathers under the layer scan.
+
+    Under FSDP the vocab dim stays unsharded: a gather whose operand is
+    sharded on BOTH dims (vocab x model, embed x data) crash-checks XLA's
+    SPMD partitioner on >2D meshes; d_model x data sharding already bounds
+    the table's per-device bytes."""
+    rules = dict(DEFAULT_RULES)
+    if fsdp_axis is not None:
+        rules["embed"] = fsdp_axis
+        rules["mlp_e"] = fsdp_axis
+        # qlora/kvlora stay unsharded: they are CONTRACTED dims of the big
+        # MLA projections — FSDP-sharding them makes every MLA matmul emit
+        # bf16 partial-sum all-reduces (XLA:CPU promotion crash), and the
+        # tensors are small (<10 MB/device under the model axis).
+    return rules
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    """Distribution context threaded through model apply functions."""
+    mesh: Optional[Mesh] = None
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+    seq_sharded: bool = True          # sequence-parallel residual stream
+    fsdp_axis: Optional[str] = None
+    rules: Dict[str, Any] = field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    @property
+    def plane_axes(self) -> Tuple[str, ...]:
+        """DP axes the plane collective engine synchronizes explicitly.
+        With FSDP, grads over the fsdp axis are reduce-scattered by GSPMD;
+        the plane engine owns the remaining (scale-out) DP axes — the
+        paper's inter-pod network."""
+        return tuple(a for a in self.dp_axes if a != self.fsdp_axis)
+
+    @property
+    def tp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[self.tp_axis]
+
+    @property
+    def dp_spec(self):
+        return tuple(self.dp_axes) if len(self.dp_axes) > 1 else \
+            self.dp_axes[0]
+
+    def with_seq(self, seq_sharded: bool) -> "ShardCtx":
+        return replace(self, seq_sharded=seq_sharded)
+
+
+def local_ctx() -> ShardCtx:
+    return ShardCtx(mesh=None)
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding
+# ---------------------------------------------------------------------------
+
+def spec_for_axes(axes: Tuple[str, ...], ctx: ShardCtx,
+                  shape: Optional[Tuple[int, ...]] = None) -> P:
+    """Logical axes -> PartitionSpec, dropping shardings that don't divide."""
+    out = []
+    for i, ax in enumerate(axes):
+        mesh_ax = ctx.rules.get(ax)
+        if mesh_ax is None or ctx.mesh is None:
+            out.append(None)
+            continue
+        size = ctx.mesh.shape[mesh_ax]
+        if shape is not None and shape[i] % size != 0:
+            out.append(None)        # e.g. kv=1 (MQA) cannot shard 16-way
+        else:
+            out.append(mesh_ax)
+    # a mesh axis may appear at most once in a spec
+    seen = set()
+    for i, ax in enumerate(out):
+        if ax is None:
+            continue
+        if ax in seen:
+            out[i] = None
+        seen.add(ax)
+    return P(*out)
+
+
+def param_shardings(axes_tree, ctx: ShardCtx, shapes_tree=None):
+    """Build a NamedSharding tree mirroring the params tree."""
+    def one(axes, shape):
+        spec = spec_for_axes(tuple(axes), ctx,
+                             tuple(shape) if shape is not None else None)
+        return NamedSharding(ctx.mesh, spec)
+
+    if shapes_tree is None:
+        return jax.tree.map(lambda a: one(a, None), axes_tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree.map(lambda a, s: one(a, s.shape), axes_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# activation constraints
+# ---------------------------------------------------------------------------
+
+def _manual_axes() -> frozenset:
+    ambient = jax.sharding.get_abstract_mesh()
+    if ambient.empty:
+        return frozenset()
+    return frozenset(
+        n for n, t in zip(ambient.axis_names, ambient.axis_types)
+        if t == jax.sharding.AxisType.Manual)
+
+
+def _strip_manual(spec: P, manual: frozenset) -> P:
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+        elif isinstance(entry, tuple):
+            kept = tuple(a for a in entry if a not in manual)
+            out.append(kept if kept else None)
+        else:
+            out.append(None if entry in manual else entry)
+    return P(*out)
+
+
+def _constraint(x, ctx: ShardCtx, spec: P):
+    """Sharding constraint that composes with partial-manual shard_map:
+    axes already manual in the ambient mesh are dropped from the spec
+    (those dims are local blocks there)."""
+    if ctx.mesh is None:
+        return x
+    manual = _manual_axes()
+    if manual:
+        spec = _strip_manual(spec, manual)
+        mesh = jax.sharding.get_abstract_mesh()
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def shard_residual(x, ctx: ShardCtx):
+    """(B, S, D): B over dp, S over tp when sequence-parallel."""
+    if ctx.mesh is None:
+        return x
+    seq_ax = ctx.tp_axis if (ctx.seq_sharded and
+                             x.shape[1] % ctx.tp_size == 0 and
+                             x.shape[1] >= ctx.tp_size) else None
+    return _constraint(x, ctx, P(ctx.dp_spec, seq_ax, None))
+
+
+def shard_heads(x, ctx: ShardCtx):
+    """(B, S, H, D): heads over tp; when heads don't divide the mesh axis
+    (MQA / few-head archs), fall back to sequence-sharded attention so the
+    per-device work still scales 1/tp."""
+    if ctx.mesh is None:
+        return x
+    if x.shape[2] % ctx.tp_size == 0:
+        return _constraint(x, ctx, P(ctx.dp_spec, None, ctx.tp_axis, None))
+    if x.shape[1] % ctx.tp_size == 0 and x.shape[1] >= ctx.tp_size:
+        return _constraint(x, ctx, P(ctx.dp_spec, ctx.tp_axis, None, None))
+    return _constraint(x, ctx, P(ctx.dp_spec, None, None, None))
+
+
+def shard_ff(x, ctx: ShardCtx):
+    """(B, S, F): FFN intermediate over tp."""
+    if ctx.mesh is None:
+        return x
+    f_ax = ctx.tp_axis if x.shape[-1] % ctx.tp_size == 0 else None
+    return _constraint(x, ctx, P(ctx.dp_spec, None, f_ax))
+
+
+def shard_logits(x, ctx: ShardCtx):
+    """(B, S, V): vocab over tp."""
+    if ctx.mesh is None:
+        return x
+    v_ax = ctx.tp_axis if x.shape[-1] % ctx.tp_size == 0 else None
+    return _constraint(x, ctx, P(ctx.dp_spec, None, v_ax))
+
+
+def shard_cache(x, ctx: ShardCtx, kv_heads_axis: int = 2):
+    """KV cache (B, S, Hkv, D) — Hkv over tp if divisible, else S over tp.
+
+    Long-context decode (B=1) relies on the S fallback: the 524k-entry cache
+    shards over the model axis even when kv heads cannot."""
+    if ctx.mesh is None or x.ndim < 3:
+        return x
+    if x.ndim == 4:
+        B, S, H = x.shape[0], x.shape[1], x.shape[2]
+        if H % ctx.tp_size == 0:
+            return _constraint(x, ctx, P(ctx.dp_spec if B > 1 else None,
+                                         None, ctx.tp_axis, None))
+        if S % ctx.tp_size == 0:
+            return _constraint(x, ctx, P(ctx.dp_spec if B > 1 else None,
+                                         ctx.tp_axis, None, None))
+        return x
+    # (B, S, L) latent caches: shard S over tp
+    B, S = x.shape[0], x.shape[1]
+    if S % ctx.tp_size == 0 and S >= ctx.tp_size:
+        return _constraint(x, ctx, P(ctx.dp_spec if B > 1 else None,
+                                     ctx.tp_axis, None))
+    return x

@@ -1,0 +1,2 @@
+from .loop import Trainer, TrainerConfig, make_train_step
+from .serving import ServeEngine, Request

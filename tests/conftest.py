@@ -1,0 +1,8 @@
+import os
+
+# Tests run single-device (the dry-run alone uses 512 fake devices).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

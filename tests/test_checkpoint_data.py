@@ -1,0 +1,99 @@
+"""Checkpoint / data-pipeline tests: atomic commit, roundtrip, elastic
+restore, restart determinism."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (latest_step, prune_checkpoints,
+                              restore_checkpoint, save_checkpoint)
+from repro.data import DataConfig, DataLoader, batch_at
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (4, 8)),
+            "b": {"c": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+                  "d": jnp.zeros((3,))},
+            "lst": [jnp.ones((2,)), jnp.full((2, 2), 3.0)]}
+
+
+def test_checkpoint_roundtrip_and_latest():
+    with tempfile.TemporaryDirectory() as d:
+        t1 = _tree(1)
+        save_checkpoint(d, 10, t1, extras={"note": "x"})
+        t2 = _tree(2)
+        save_checkpoint(d, 20, t2)
+        assert latest_step(d) == 20
+        restored, step, extras = restore_checkpoint(d, _tree(0))
+        assert step == 20
+        for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(t2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # restore a specific older step
+        r1, s1, e1 = restore_checkpoint(d, _tree(0), step=10)
+        assert s1 == 10 and e1 == {"note": "x"}
+
+
+def test_checkpoint_shape_mismatch_raises():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, {"a": jnp.zeros((4,))})
+        with pytest.raises(ValueError):
+            restore_checkpoint(d, {"a": jnp.zeros((5,))})
+
+
+def test_checkpoint_prune_keeps_latest():
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3, 4, 5):
+            save_checkpoint(d, s, {"a": jnp.zeros(2)})
+        prune_checkpoints(d, keep=2)
+        steps = sorted(int(x.split("_")[1]) for x in os.listdir(d)
+                       if x.startswith("step_"))
+        assert steps == [4, 5]
+        assert latest_step(d) == 5
+
+
+def test_checkpoint_forward_compatible_extra_field():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, {"a": jnp.ones(3)})
+        tgt = {"a": jnp.zeros(3), "new_field": jnp.full((2,), 7.0)}
+        restored, _, _ = restore_checkpoint(d, tgt)
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.ones(3))
+        np.testing.assert_array_equal(np.asarray(restored["new_field"]),
+                                      np.full((2,), 7.0))
+
+
+def test_data_deterministic_and_restartable():
+    cfg = DataConfig(vocab=1000, seq_len=16, global_batch=8)
+    b1 = batch_at(cfg, 5)
+    b2 = batch_at(cfg, 5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    # restart from loader state reproduces the stream
+    dl = DataLoader(cfg)
+    for _ in range(3):
+        next(dl)
+    state = dl.state()
+    a = next(dl)
+    dl2 = DataLoader.restore(cfg, state)
+    b = next(dl2)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_data_sharding_partitions_batch():
+    cfg = DataConfig(vocab=100, seq_len=8, global_batch=8)
+    full = batch_at(cfg, 0)["tokens"]
+    parts = [batch_at(cfg, 0, shard=i, n_shards=4)["tokens"]
+             for i in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts, 0), full)
+
+
+def test_data_tokens_in_vocab():
+    cfg = DataConfig(vocab=317, seq_len=64, global_batch=4)
+    b = batch_at(cfg, 123)
+    assert b["tokens"].min() >= 0
+    assert b["tokens"].max() < 317

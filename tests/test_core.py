@@ -1,0 +1,130 @@
+"""Core (paper-mechanism) unit tests: planes, PLB, CC, AR, failover."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DcqcnConfig, FailoverController, PlaneConfig,
+                        SpxCCConfig, apportion, concurrent_failure_pmf,
+                        dcqcn_update, effective_bandwidth,
+                        elastic_mesh_plan, plane_loads, spx_cc_update)
+from repro.core.adaptive_routing import (ar_scores, ecmp_select, jsq_select,
+                                         spray_fractions)
+from repro.core.plb import (plb_init, plb_update, plane_weights,
+                            select_plane)
+
+
+def test_apportion_exact_and_zero_weight():
+    a = apportion(np.array([1.0, 1.0, 0.0, 1.0]), 16)
+    assert a.shape == (16,)
+    loads = plane_loads(a, 4, 1.0)
+    assert loads[2] == 0.0
+    assert loads.sum() == 16
+
+
+def test_effective_bandwidth_slowest_plane_gates():
+    w = np.array([0.25, 0.25, 0.25, 0.25])
+    a = apportion(w, 16)
+    assert effective_bandwidth(w, a, np.ones(4)) == 1.0
+    # one plane at 10% rate drags the whole transfer
+    slow = effective_bandwidth(w, a, np.array([1, 1, 1, 0.1]))
+    assert slow < 0.5
+
+
+def test_plb_two_stage_selection():
+    st = plb_init(4)
+    st.rate_allow = jnp.array([1.0, 0.1, 1.0, 1.0])
+    st.local_queue = jnp.array([0.5, 0.0, 0.2, 0.6])
+    # plane 1 is rate-filtered despite the shallowest queue
+    picks = [int(select_plane(st, jax.random.PRNGKey(i), tx_rate=0.25))
+             for i in range(20)]
+    assert 1 not in picks
+    assert set(picks) <= {0, 2, 3}
+    assert max(set(picks), key=picks.count) == 2    # shallowest eligible
+
+
+def test_plb_probe_timeout_excludes_and_recovers():
+    cfg = PlaneConfig(n_planes=4, probe_timeout=3)
+    st = plb_init(4)
+    down = jnp.array([True, True, False, True])
+    for _ in range(3):
+        st = plb_update(st, jnp.full(4, 6.0), jnp.zeros(4),
+                        down.astype(jnp.float32), down,
+                        jnp.zeros(4), cfg)
+    w = np.asarray(plane_weights(st))
+    assert w[2] < 1e-3 and abs(w.sum() - 1) < 1e-5
+    # plane heals -> re-included with ramped rate
+    up = jnp.ones(4, bool)
+    st = plb_update(st, jnp.full(4, 6.0), jnp.zeros(4),
+                    jnp.ones(4), up, jnp.zeros(4), cfg)
+    assert bool(st.eligible[2])
+    assert float(st.rate_allow[2]) >= 0.5
+
+
+def test_spx_cc_only_cuts_on_ecn():
+    r = jnp.full(4, 0.8)
+    # no ECN, low RTT -> additive increase
+    r2 = spx_cc_update(r, jnp.full(4, 6.0), jnp.zeros(4))
+    assert bool((r2 > r).all())
+    # ECN -> multiplicative decrease
+    r3 = spx_cc_update(r, jnp.full(4, 6.0), jnp.ones(4))
+    assert bool((r3 < r).all())
+    assert bool((r3 >= SpxCCConfig().min_rate).all())
+
+
+def test_dcqcn_slow_recovery_vs_spx():
+    r_spx = r_dcq = jnp.array([0.3])
+    alpha = jnp.array([0.5])
+    for _ in range(20):
+        r_spx = spx_cc_update(r_spx, jnp.array([6.0]), jnp.zeros(1))
+        r_dcq, alpha = dcqcn_update(r_dcq, alpha, jnp.zeros(1))
+    assert float(r_spx[0]) > float(r_dcq[0])   # SPX recovers faster
+
+
+def test_jsq_prefers_shallow_and_skips_down():
+    q = jnp.array([0.9, 0.1, 0.5, 0.2])
+    up = jnp.array([True, False, True, True])
+    picks = [int(jsq_select(q, up, jax.random.PRNGKey(i)))
+             for i in range(20)]
+    assert 1 not in picks
+    assert max(set(picks), key=picks.count) == 3
+
+
+def test_weighted_ar_shifts_from_degraded():
+    q = jnp.zeros(4)
+    up = jnp.ones(4, bool)
+    w = jnp.array([1.0, 1.0, 0.25, 1.0])
+    fr = spray_fractions(q, up, w, temperature=0.5)
+    assert float(fr[2]) < float(fr[0])
+
+
+def test_ecmp_rehash_on_failure():
+    up = jnp.array([True, True, False, True])
+    ports = ecmp_select(jnp.arange(100), up)
+    assert 2 not in np.asarray(ports)
+    assert set(np.unique(np.asarray(ports))) <= {0, 1, 3}
+
+
+def test_failover_controller_recovery_within_budget():
+    cfg = PlaneConfig(n_planes=4, probe_timeout=3)
+    fc = FailoverController(cfg)
+    for _ in range(3):
+        fc.on_step()
+    fc.fail_plane(1)
+    for _ in range(6):
+        w = fc.on_step()
+    rec = fc.records[0]
+    assert rec.recovery_steps is not None
+    assert rec.recovery_steps <= cfg.probe_timeout + cfg.recovery_steps
+    assert w[1] < 1e-3
+
+
+def test_concurrent_failure_pmf_normalized():
+    p = concurrent_failure_pmf(10, 10, max_k=10)
+    assert abs(p.sum() - 1) < 1e-9
+    assert p[1] > p[5]      # ~1.7 expected concurrent failures
+
+
+def test_elastic_mesh_plan():
+    assert elastic_mesh_plan(256, 16) == (16, 16)
+    assert elastic_mesh_plan(240, 16) == (15, 16)
+    assert elastic_mesh_plan(512, 16, pods=2) == (2, 16, 16)

@@ -1,0 +1,114 @@
+"""Per-kernel allclose vs the ref.py oracles — shape/dtype sweeps,
+interpret=True on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("shape", [(1, 2, 128, 64), (2, 4, 256, 128),
+                                   (1, 1, 384, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0),
+                                           (True, 64)])
+def test_flash_attention_sweep(shape, dtype, causal, window):
+    B, H, S, D = shape
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, shape, dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), shape, dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), shape, dtype)
+    bq = bk = min(128, S)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              bq=bq, bk=bk)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_gqa_wrapper():
+    key = jax.random.PRNGKey(1)
+    B, S, Hq, Hkv, D = 2, 128, 8, 2, 64
+    q = jax.random.normal(key, (B, S, Hq, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, D))
+    out = ops.flash_attention_bshd(q, k, v, bq=64, bk=64)
+    kr = jnp.repeat(k, Hq // Hkv, 2).transpose(0, 2, 1, 3)
+    vr = jnp.repeat(v, Hq // Hkv, 2).transpose(0, 2, 1, 3)
+    want = ref.flash_attention_ref(q.transpose(0, 2, 1, 3), kr, vr
+                                   ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("S,bk", [(256, 64), (512, 512), (384, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(S, bk, dtype):
+    key = jax.random.PRNGKey(2)
+    B, H, D = 2, 4, 64
+    q = jax.random.normal(key, (B, H, 1, D), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, H, S, D), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, H, S, D), dtype)
+    lengths = jnp.array([S // 2, S], jnp.int32)
+    out = ops.decode_attention(q, k, v, lengths, bk=bk)
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("ports", [16, 64, 256])
+def test_jsq_route_sweep(ports):
+    key = jax.random.PRNGKey(3)
+    queues = jax.random.uniform(key, (ports,))
+    up = (jnp.arange(ports) % 7 != 0).astype(jnp.float32)
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (ports,),
+                           minval=0.25, maxval=1.0)
+    h = jax.random.randint(key, (512,), 0, 1 << 30).astype(jnp.uint32)
+    got = ops.jsq_route(queues, up, w, h)
+    want = ref.jsq_route_ref(queues, up, w, h)
+    assert bool((got == want).all())
+    # never routes to a down port
+    assert not set(np.asarray(got)) & set(
+        np.flatnonzero(np.asarray(up) == 0))
+
+
+@pytest.mark.parametrize("planes", [2, 4, 8])
+def test_plb_select_sweep(planes):
+    key = jax.random.PRNGKey(4)
+    ra = jax.random.uniform(key, (planes,))
+    el = (jax.random.uniform(jax.random.fold_in(key, 1), (planes,))
+          > 0.2).astype(jnp.float32)
+    if float(el.sum()) == 0:
+        el = el.at[0].set(1.0)
+    lq = jax.random.uniform(jax.random.fold_in(key, 2), (planes,))
+    tx = jax.random.uniform(jax.random.fold_in(key, 3), (300,),
+                            maxval=0.5)
+    h = jax.random.randint(key, (300,), 0, 1 << 30).astype(jnp.uint32)
+    got = ops.plb_select(ra, el, lq, tx, h)
+    want = ref.plb_select_ref(ra, el, lq, tx, h)
+    assert bool((got == want).all())
+    # never selects an ineligible plane
+    bad = set(np.flatnonzero(np.asarray(el) == 0))
+    assert not set(np.asarray(got)) & bad
+
+
+@pytest.mark.parametrize("shape", [(256, 128), (512, 64), (1024, 512)])
+def test_int8_codec_sweep(shape):
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, shape) * 5
+    noise = jax.random.uniform(jax.random.fold_in(key, 1), shape,
+                               minval=-0.5, maxval=0.5)
+    q, s = ops.int8_encode(x, noise)
+    qr, sr = ref.int8_encode_ref(x, noise)
+    assert bool((q == qr).all())
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    xd = ops.int8_decode(q, s)
+    err = np.abs(np.asarray(xd - x))
+    # error bounded by one quantization step (stochastic rounding)
+    bound = np.asarray(s) * 1.001 + 1e-6
+    assert (err <= bound).all()

@@ -1,0 +1,119 @@
+"""Network simulator invariants and paper-claim orderings."""
+import numpy as np
+import pytest
+
+from repro.netsim import (Flow, LeafSpine, all2all, bisection_pairs,
+                          jsq_delay_sim, maxflow_matrix, ring_neighbors)
+from repro.netsim.sim import SimConfig, run_sim
+
+
+def _bisect(nic, routing, topo=None, slots=400):
+    rng = np.random.default_rng(0)
+    t = topo or LeafSpine(n_leaves=4, n_spines=4, hosts_per_leaf=4,
+                          n_planes=1)
+    flows = bisection_pairs(t, range(t.n_hosts), rng)
+    return run_sim(t.copy(), flows,
+                   SimConfig(slots=slots, nic=nic, routing=routing,
+                             seed=1)), flows
+
+
+def test_goodput_never_exceeds_demand_or_capacity():
+    r, flows = _bisect("spx", "ar")
+    assert (r.goodput <= 1.0 + 1e-9).all()
+    assert (r.goodput >= -1e-12).all()
+
+
+def test_ar_beats_ecmp_tail():
+    r_eth, _ = _bisect("dcqcn", "ecmp")
+    r_spx, _ = _bisect("spx", "ar")
+    p01 = lambda r: np.quantile(r.mean_goodput, 0.01)
+    assert p01(r_spx) > 0.95                 # ~98% of line rate
+    assert p01(r_spx) > p01(r_eth) + 0.2     # ECMP collides
+
+
+def test_ar_traffic_is_symmetric():
+    """§5.1: AR spreads uplink load uniformly across a symmetry group."""
+    from repro.core.telemetry import symmetry_check
+    r, _ = _bisect("spx", "ar")
+    util = r.util_up_last[0]                 # (L, S)
+    rep = symmetry_check("leaf0-uplinks", util[0], cv_tol=0.2)
+    assert rep.uniform, rep
+
+
+def test_capacity_proportional_degradation():
+    """§6.4: bandwidth tracks remaining capacity under failures (SPX),
+    within ~10%."""
+    base = LeafSpine(n_leaves=4, n_spines=4, hosts_per_leaf=4, n_planes=1)
+    r0, _ = _bisect("spx", "war", base.copy())
+    degraded = base.copy()
+    degraded.trim_leaf_uplinks(0, 0, 0.5)
+    r1, _ = _bisect("spx", "war", degraded)
+    # leaf-0 hosts are capped near 0.5; others unaffected
+    leaf0 = r1.mean_goodput[:8]
+    assert np.mean(r1.mean_goodput) > 0.6
+    assert np.mean(r0.mean_goodput) > 0.95
+
+
+def test_plane_failover_ordering_hw_vs_sw():
+    def ev(t, topo):
+        if t == 20:
+            topo.fail_access(1, 0)
+
+    def recovery(nic, delay_ms, slots):
+        t = LeafSpine(n_leaves=2, n_spines=2, hosts_per_leaf=2,
+                      n_planes=4, access_cap=0.25)
+        r = run_sim(t, [Flow(0, 2, 1.0)],
+                    SimConfig(slots=slots, slot_us=100.0, nic=nic,
+                              routing="ar", sw_lb_delay_ms=delay_ms,
+                              seed=2), events=ev)
+        g = r.goodput[:, 0]
+        post = np.flatnonzero((np.arange(len(g)) > 20) & (g >= 0.67))
+        return post[0] - 20 if len(post) else 10 ** 9
+
+    hw = recovery("spx", 0.0, 200)
+    sw = recovery("swlb", 100.0, 2000)
+    assert hw <= 5                       # a few RTT-scale slots
+    assert sw >= 100                     # software timescale
+    assert sw / hw > 50
+
+
+def test_jsq_delay_queue_growth():
+    """Fig 1b: queues grow several-fold from 100ns to 2.5us decision
+    delay."""
+    q_fast = jsq_delay_sim(n_ports=64, load=0.9, decision_delay_ns=100,
+                           slots=8000).mean_queue
+    q_slow = jsq_delay_sim(n_ports=64, load=0.9, decision_delay_ns=2500,
+                           slots=8000).mean_queue
+    assert q_slow > 2.0 * max(q_fast, 0.05)
+
+
+def test_maxflow_matrix_symmetric_healthy():
+    t = LeafSpine(n_leaves=8, n_spines=8, hosts_per_leaf=4)
+    mf = maxflow_matrix(t)
+    assert np.allclose(mf, mf.T)
+    assert np.allclose(mf, mf[0, 1])
+
+
+def test_global_cc_collapses_under_asymmetry():
+    """Fig 15: per-plane CC isolates a degraded plane; global CC does
+    not."""
+    def bw(nic):
+        t = LeafSpine(n_leaves=3, n_spines=2, hosts_per_leaf=8,
+                      n_planes=4, parallel_links=8, link_cap=0.25,
+                      access_cap=0.25)
+        t.trim_leaf_uplinks(2, 1, 0.25)
+        t.trim_leaf_uplinks(3, 2, 0.25)
+        fl = all2all(t, range(t.n_hosts), group="main")
+        r = run_sim(t, fl, SimConfig(slots=300, nic=nic, routing="ar",
+                                     seed=3))
+        return float(np.mean(r.mean_goodput.reshape(t.n_hosts, -1).sum(1)))
+
+    assert bw("spx") > bw("global") + 0.1
+
+
+def test_ring_collective_flows_complete():
+    t = LeafSpine(n_leaves=4, n_spines=4, hosts_per_leaf=4, n_planes=1)
+    fl = ring_neighbors(range(16), bytes_per_hop=20.0)
+    r = run_sim(t, fl, SimConfig(slots=300, nic="spx", routing="ar",
+                                 seed=4))
+    assert (r.completion_slot >= 0).all()

@@ -1,0 +1,125 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.collectives import int8_decode, int8_encode
+from repro.core.planes import apportion, plane_loads
+from repro.core.congestion import spx_cc_update, dcqcn_update
+from repro.core.plb import plb_init, plb_update, plane_weights
+from repro.core.planes import PlaneConfig
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(weights=st.lists(st.floats(0.0, 10.0), min_size=1, max_size=8),
+       k=st.integers(1, 64))
+@settings(**SETTINGS)
+def test_apportion_invariants(weights, k):
+    w = np.asarray(weights)
+    a = apportion(w, k)
+    assert a.shape == (k,)
+    loads = plane_loads(a, len(weights), 1.0)
+    assert int(loads.sum()) == k
+    if w.sum() > 0:
+        # zero-weight planes receive nothing
+        for i, wi in enumerate(w):
+            if wi == 0.0:
+                assert loads[i] == 0
+        # proportionality within 1 chunk (largest remainder method)
+        ideal = w / w.sum() * k
+        assert np.all(np.abs(loads - ideal) <= 1.0 + 1e-9)
+
+
+@given(rate=st.lists(st.floats(0.01, 1.0), min_size=1, max_size=8),
+       rtt=st.floats(1.0, 100.0), ecn=st.floats(0.0, 1.0))
+@settings(**SETTINGS)
+def test_cc_laws_stay_bounded(rate, rtt, ecn):
+    r = jnp.asarray(rate, jnp.float32)
+    r2 = spx_cc_update(r, jnp.full_like(r, rtt), jnp.full_like(r, ecn))
+    assert bool((r2 >= 0.009).all() and (r2 <= 1.0).all())
+    r3, a3 = dcqcn_update(r, jnp.zeros_like(r), jnp.full_like(r, ecn))
+    assert bool((r3 >= 0.009).all() and (r3 <= 1.0).all())
+    assert bool((a3 >= 0).all() and (a3 <= 1).all())
+
+
+@given(ecn=st.floats(0.01, 1.0))
+@settings(**SETTINGS)
+def test_spx_cc_cut_is_monotone_in_ecn(ecn):
+    r = jnp.asarray([0.9], jnp.float32)
+    low = spx_cc_update(r, jnp.asarray([6.0]), jnp.asarray([ecn * 0.5]))
+    high = spx_cc_update(r, jnp.asarray([6.0]), jnp.asarray([ecn]))
+    assert float(high[0]) <= float(low[0]) + 1e-7
+
+
+@given(down=st.lists(st.booleans(), min_size=2, max_size=8))
+@settings(**SETTINGS)
+def test_plane_weights_normalized_and_exclude_dead(down):
+    p = len(down)
+    cfg = PlaneConfig(n_planes=p, probe_timeout=2)
+    st_ = plb_init(p)
+    up = jnp.asarray([not d for d in down])
+    for _ in range(3):
+        st_ = plb_update(st_, jnp.full(p, 6.0), jnp.zeros(p),
+                         up.astype(jnp.float32), up, jnp.zeros(p), cfg)
+    w = np.asarray(plane_weights(st_))
+    assert abs(w.sum() - 1.0) < 1e-5
+    assert (w >= -1e-9).all()
+    if any(not d for d in down):
+        for i, d in enumerate(down):
+            if d:
+                assert w[i] < 1e-3
+
+
+@given(rows=st.integers(1, 8), cols=st.integers(1, 64),
+       scale=st.floats(1e-3, 1e3), seed=st.integers(0, 2 ** 20))
+@settings(**SETTINGS)
+def test_int8_codec_error_bounded(rows, cols, scale, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (rows, cols)) * scale
+    q, s = int8_encode(x, jax.random.fold_in(key, 1))
+    xd = int8_decode(q, s)
+    err = np.abs(np.asarray(xd - x))
+    assert (err <= np.asarray(s) * 1.001 + 1e-9).all()
+
+
+@given(seq=st.integers(8, 64), chunk=st.integers(2, 64),
+       seed=st.integers(0, 2 ** 20))
+@settings(max_examples=10, deadline=None)
+def test_chunked_attention_equals_softmax(seq, chunk, seed):
+    from repro.models.attention import chunked_attention
+    from repro.kernels.ref import flash_attention_ref
+    key = jax.random.PRNGKey(seed)
+    B, H, D = 1, 2, 8
+    q = jax.random.normal(key, (B, seq, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, seq, H, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, seq, H, D))
+    pos = jnp.arange(seq)[None]
+    out = chunked_attention(q, k, v, pos, pos, chunk=chunk)
+    want = flash_attention_ref(q.transpose(0, 2, 1, 3),
+                               k.transpose(0, 2, 1, 3),
+                               v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(b=st.integers(1, 3), s=st.integers(4, 32),
+       chunk=st.integers(2, 16), seed=st.integers(0, 2 ** 20))
+@settings(max_examples=10, deadline=None)
+def test_ssd_chunk_size_invariance(b, s, chunk, seed):
+    from repro.models.ssm import ssd_scan
+    key = jax.random.PRNGKey(seed)
+    h, p, g, n = 4, 4, 2, 4
+    x = jax.random.normal(key, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)) * 0.3)
+    B = jax.random.normal(jax.random.fold_in(key, 3), (b, s, g, n))
+    C = jax.random.normal(jax.random.fold_in(key, 4), (b, s, g, n))
+    y1, f1 = ssd_scan(x, dt, A, B, C, chunk=chunk)
+    y2, f2 = ssd_scan(x, dt, A, B, C, chunk=s)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2),
+                               rtol=3e-4, atol=3e-4)

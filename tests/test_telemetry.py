@@ -1,0 +1,67 @@
+"""Telemetry (§5) tests: histogram classification, symmetry groups, HFT."""
+import numpy as np
+
+from repro.core.telemetry import (HFTBuffer, StepTimeTracker, bw_histogram,
+                                  classify_histogram, find_stragglers,
+                                  symmetry_check)
+
+
+def test_bimodal_is_healthy_blocked():
+    """§5.2: healthy ranks stalled on a straggler are at line rate or
+    idle."""
+    samples = np.concatenate([np.full(500, 0.02), np.full(500, 0.99)])
+    assert classify_histogram(bw_histogram(samples)) == "healthy-blocked"
+
+
+def test_midrange_is_straggler():
+    rng = np.random.default_rng(0)
+    samples = rng.uniform(0.3, 0.7, 1000)
+    assert classify_histogram(bw_histogram(samples)) == "straggler"
+
+
+def test_line_rate_classified():
+    samples = np.full(1000, 0.98)
+    assert classify_histogram(bw_histogram(samples)) == "line-rate"
+
+
+def test_find_stragglers_among_ranks():
+    rng = np.random.default_rng(1)
+    ranks = np.zeros((8, 1000))
+    for r in range(8):
+        if r == 3:
+            ranks[r] = rng.uniform(0.3, 0.6, 1000)      # the straggler
+        else:
+            bi = rng.random(1000) < 0.5
+            ranks[r] = np.where(bi, 0.99, 0.01)
+    assert find_stragglers(ranks) == [3]
+
+
+def test_symmetry_group_outlier():
+    """§5.1: AR traffic is uniform; an outlier port flags a fault."""
+    bw = np.full(32, 100.0)
+    rep = symmetry_check("leaf-uplinks", bw)
+    assert rep.uniform and rep.outliers == []
+    bw[7] = 40.0
+    rep = symmetry_check("leaf-uplinks", bw)
+    assert not rep.uniform
+    assert rep.outliers == [7]
+
+
+def test_hft_detects_transient_drops():
+    """§5.3: the daemon-interference signature — sharp transient BW
+    drops."""
+    buf = HFTBuffer()
+    for t in range(100):
+        bw = 0.95 if t not in (40, 41, 70) else 0.2
+        buf.record(float(t), {"bw": bw})
+    drops = buf.drops("bw")
+    assert set(drops) == {40.0, 41.0, 70.0}
+
+
+def test_step_time_tracker_flags_slow_host():
+    tr = StepTimeTracker(n_hosts=8)
+    for _ in range(5):
+        times = np.ones(8)
+        times[2] = 1.8
+        slow = tr.update(times)
+    assert slow == [2]
