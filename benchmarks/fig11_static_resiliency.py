@@ -2,13 +2,14 @@
 leaf: SPX (weighted-AR) degrades proportionally to remaining capacity; ETH
 degrades non-proportionally (hash collisions on survivors + DCQCN
 overreaction).  §6.4: at 10% fabric failures SPX keeps within 3-10% of the
-capacity-proportional ideal."""
+capacity-proportional ideal.
+
+Setup comes from the parameterized scenario factory
+`fig11_partial_uplink(keep)` (registry entry 'fig11_degraded_leaf' is the
+canonical keep=0.5 point)."""
 from __future__ import annotations
 
-import numpy as np
-
-from repro.netsim import LeafSpine, all2all
-from repro.netsim.sim import SimConfig, run_sim
+from repro.scenarios import fig11_partial_uplink, run_scenario
 
 from .common import emit
 
@@ -16,19 +17,10 @@ from .common import emit
 def run() -> None:
     n_hosts_used = 48
     for keep in (1.0, 0.75, 0.5, 0.25):
+        base = fig11_partial_uplink(keep)
         for name, nic, routing in (("eth", "dcqcn", "ecmp"),
                                    ("spx", "spx", "war")):
-            t = LeafSpine(n_leaves=8, n_spines=8, hosts_per_leaf=8,
-                          n_planes=1)
-            # drop whole uplinks of leaf 0 (the paper systematically
-            # disables discrete links — ECMP must rehash onto survivors)
-            n_keep = max(1, round(t.n_spines * keep))
-            for s in range(n_keep, t.n_spines):
-                t.fail_uplink(0, 0, s)
-            flows = all2all(t, range(n_hosts_used), group="main")
-            r = run_sim(t, flows,
-                        SimConfig(slots=400, nic=nic, routing=routing,
-                                  seed=5))
+            r = run_scenario(base.with_sim(nic=nic, routing=routing))
             per_rank = r.mean_goodput.reshape(n_hosts_used, -1).sum(1)
             # the degraded leaf's ranks gate the collective (§2.1)
             gated = float(r.mean_goodput.min() * (n_hosts_used - 1))

@@ -1,34 +1,27 @@
 """Fig 12 — single host-plane link flap: hardware PLB recovers to 3/4 line
 rate in <3 ms; a software LB (reaction above the NCCL layer) needs ~1 s —
-~400x slower."""
+~400x slower.
+
+Setup comes from the scenario registry ('fig12_plane_flap'); the software
+LB curve only swaps the NIC stack and lengthens the horizon."""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.netsim import LeafSpine, Flow
-from repro.netsim.sim import SimConfig, run_sim
+from repro.scenarios import get_scenario, run_scenario
 
 from .common import emit
 
 
 def run() -> None:
-    slot_us = 100.0
-    fail_slot = 50
+    base = get_scenario("fig12_plane_flap")
+    slot_us = base.sim.slot_us
+    fail_slot = base.faults[0].start_slot
 
-    def events(t, topo):
-        if t == fail_slot:
-            topo.fail_access(1, 0)          # plane 1 of host 0 dies
-
-    for name, nic, delay_ms in (("hw_plb", "spx", 0.0),
-                                ("sw_lb", "swlb", 1000.0)):
-        t = LeafSpine(n_leaves=2, n_spines=2, hosts_per_leaf=4, n_planes=4,
-                      access_cap=0.25)   # NIC = 4 x (line/4) plane ports
-        flows = [Flow(0, 4, 1.0)]
-        slots = 600 if name == "hw_plb" else 12000
-        r = run_sim(t, flows,
-                    SimConfig(slots=slots, slot_us=slot_us, nic=nic,
-                              routing="ar", sw_lb_delay_ms=delay_ms,
-                              seed=6), events=events)
+    for name, nic, delay_ms, slots in (("hw_plb", "spx", 0.0, 600),
+                                       ("sw_lb", "swlb", 1000.0, 12000)):
+        r = run_scenario(base.with_sim(nic=nic, slots=slots,
+                                       sw_lb_delay_ms=delay_ms))
         g = r.goodput[:, 0]
         # recovery = first slot after failure with goodput >= 0.9 x the
         # 3-plane steady state (0.75 of original line rate)

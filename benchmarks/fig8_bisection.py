@@ -2,29 +2,26 @@
 distribution and p99 latency, SPX (per-packet AR) vs ETH (ECMP+DCQCN).
 
 Paper: SPX p01 = 98% of line rate, p99 latency 8-9 µs; ETH median 75% with
-pairs collapsing to ~6%, p99 latency 13-22 µs."""
+pairs collapsing to ~6%, p99 latency 13-22 µs.
+
+Setup comes from the scenario registry ('fig8_bisection'); only the
+NIC/routing stack varies per curve."""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.netsim import LeafSpine, bisection_pairs
-from repro.netsim.sim import SimConfig, run_sim
+from repro.scenarios import get_scenario, run_scenario
 
 from .common import emit, pctl, timeit
 
 
 def run() -> None:
-    rng = np.random.default_rng(0)
-    t0 = LeafSpine(n_leaves=8, n_spines=8, hosts_per_leaf=8, n_planes=1)
-    flows = bisection_pairs(t0, range(t0.n_hosts), rng)
+    base = get_scenario("fig8_bisection")
     for name, nic, routing in (("eth", "dcqcn", "ecmp"),
                                ("spx", "spx", "ar")):
-        us = timeit(lambda: run_sim(
-            t0.copy(), flows,
-            SimConfig(slots=600, nic=nic, routing=routing, seed=1)),
-            iters=1, warmup=0)
-        r = run_sim(t0.copy(), flows,
-                    SimConfig(slots=600, nic=nic, routing=routing, seed=1))
+        spec = base.with_sim(nic=nic, routing=routing)
+        us = timeit(lambda: run_scenario(spec), iters=1, warmup=0)
+        r = run_scenario(spec)
         gp = r.mean_goodput
         lat = r.rtt[r.rtt.shape[0] // 2:]
         emit(f"fig8.bisection.{name}", us,

@@ -4,31 +4,24 @@
 peaks lower.  (right) Victim All2All (16 nodes) + noise All2All (48
 nodes): ETH victim collapses ~80%; SPX is near-perfectly isolated.
 (Fig 10) DeepSeek-V3-proxy training step time with and without RDMA
-bisection noise: ETH degrades ~1.6x, SPX unchanged."""
+bisection noise: ETH degrades ~1.6x, SPX unchanged.
+
+Setups come from the scenario registry ('fig9_single_all2all',
+'fig9_victim_noise', 'fig10_victim_alone', 'fig10_victim_noise')."""
 from __future__ import annotations
 
-import numpy as np
-
-from repro.netsim import LeafSpine, all2all, bisection_pairs
-from repro.netsim.sim import SimConfig, run_sim
+from repro.scenarios import get_scenario, run_scenario
 
 from .common import emit
 
-
-def _mean_gp(res, group):
-    return res.group_mean(group)
+STACKS = (("eth", "dcqcn", "ecmp"), ("spx", "spx", "ar"))
 
 
 def run() -> None:
-    rng = np.random.default_rng(3)
-    t0 = LeafSpine(n_leaves=8, n_spines=8, hosts_per_leaf=8, n_planes=1)
-
     # --- single All2All ---
-    flows = all2all(t0, range(32), group="main")
-    for name, nic, routing in (("eth", "dcqcn", "ecmp"),
-                               ("spx", "spx", "ar")):
-        r = run_sim(t0.copy(), flows,
-                    SimConfig(slots=400, nic=nic, routing=routing, seed=2))
+    base = get_scenario("fig9_single_all2all")
+    for name, nic, routing in STACKS:
+        r = run_scenario(base.with_sim(nic=nic, routing=routing))
         # collective bw is gated by the slowest flow (stragglers, §2.1)
         gated = float(r.mean_goodput.min() * 31)
         per_rank = r.mean_goodput.reshape(32, 31).sum(1)
@@ -38,14 +31,9 @@ def run() -> None:
 
     # --- victim + noise: ranks interleaved across leaves (the paper's
     # random-uniform placement), so they share uplinks ---
-    victims = list(range(0, 64, 4))
-    noise = [h for h in range(64) if h % 4 != 0]
-    flows = (all2all(t0, victims, group="victim") +
-             all2all(t0, noise, group="noise"))
-    for name, nic, routing in (("eth", "dcqcn", "ecmp"),
-                               ("spx", "spx", "ar")):
-        r = run_sim(t0.copy(), flows,
-                    SimConfig(slots=400, nic=nic, routing=routing, seed=2))
+    base = get_scenario("fig9_victim_noise")
+    for name, nic, routing in STACKS:
+        r = run_scenario(base.with_sim(nic=nic, routing=routing))
         vi = r.groups.index("victim")
         vflows = r.mean_goodput[r.group_of == vi]
         v = vflows.reshape(16, 15).sum(1)
@@ -56,15 +44,12 @@ def run() -> None:
     # --- Fig 10: training step time under noise ---
     # step = compute + comm; comm bytes fixed, comm time = bytes / victim bw
     compute_ms, comm_ideal_ms = 400.0, 267.0   # 667 ms baseline split
-    for name, nic, routing in (("eth", "dcqcn", "ecmp"),
-                               ("spx", "spx", "ar")):
+    for name, nic, routing in STACKS:
         for noisy in (False, True):
-            fl = all2all(t0, victims, group="victim")
-            if noisy:
-                fl += bisection_pairs(t0, noise, rng, group="noise")
-            r = run_sim(t0.copy(), fl,
-                        SimConfig(slots=400, nic=nic, routing=routing,
-                                  seed=4))
+            scen = ("fig10_victim_noise" if noisy
+                    else "fig10_victim_alone")
+            r = run_scenario(get_scenario(scen).with_sim(nic=nic,
+                                                         routing=routing))
             vi = r.groups.index("victim")
             vflows = r.mean_goodput[r.group_of == vi]
             bw = max(float(vflows.min() * 15), 1e-3)   # straggler-gated

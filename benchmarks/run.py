@@ -13,7 +13,7 @@ def main() -> None:
                    fig1c_maxflow_failures, fig8_bisection, fig9_isolation,
                    fig11_static_resiliency, fig12_flap_recovery,
                    fig14_large_scale, fig15_plane_lb, kernels_bench,
-                   roofline)
+                   roofline, scenario_sweep)
     print("name,us_per_call,derived")
     modules = [
         ("fig1a", fig1a_latency_all2all),
@@ -27,6 +27,7 @@ def main() -> None:
         ("fig15", fig15_plane_lb),
         ("kernels", kernels_bench),
         ("roofline", roofline),
+        ("scenarios", scenario_sweep),
     ]
     failed = []
     for name, mod in modules:

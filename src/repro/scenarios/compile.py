@@ -1,0 +1,275 @@
+"""Lower a `ScenarioSpec` to the `(topo, flows, events)` triple that
+`netsim.sim.run_sim` consumes.
+
+Compilation is deterministic: the same (spec, workload_seed) produces
+byte-identical flow lists and an events closure with identical effects.
+All randomness flows through one `np.random.default_rng(workload_seed)`
+consumed in declaration order (tenants first, then workloads), plus one
+derived per-fault stream for 'random_fail'.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from repro.netsim.fabric import Flow
+from repro.netsim.sim import SimConfig, SimResult, run_sim
+from repro.netsim.topology import LeafSpine
+from repro.netsim.workloads import all2all, bisection_pairs, ring_neighbors
+
+from .spec import (FaultSpec, ScenarioSpec, TenantSpec, WorkloadSpec,
+                   fault_transition_slots)
+
+
+@dataclass
+class CompiledScenario:
+    """Single-use run bundle: `topo` is mutated in place by `events`,
+    so compile again (cheap) for a fresh run."""
+    spec: ScenarioSpec
+    topo: LeafSpine
+    flows: List[Flow]
+    cfg: SimConfig
+    events: Callable[[int, LeafSpine], None]
+    tenants: Dict[str, List[int]]
+    fault_slots: Tuple[Tuple[int, str], ...]   # (slot, label), sorted
+
+    def run(self) -> SimResult:
+        return run_sim(self.topo, self.flows, self.cfg, events=self.events)
+
+
+# ---------------------------------------------------------------------------
+# tenants
+# ---------------------------------------------------------------------------
+
+def resolve_tenants(spec: ScenarioSpec, rng: np.random.Generator
+                    ) -> Dict[str, List[int]]:
+    n = spec.topo.n_hosts
+    taken: set = set()
+    out: Dict[str, List[int]] = {}
+    for t in spec.tenants:
+        if t.placement == "explicit":
+            hosts = list(t.hosts)
+        elif t.placement == "block":
+            count = n - t.offset if t.n_hosts is None else t.n_hosts
+            hosts = list(range(t.offset, t.offset + count))
+        elif t.placement == "interleave":
+            hosts = list(range(t.offset, n, t.stride))
+            if t.n_hosts is not None:
+                hosts = hosts[:t.n_hosts]
+        elif t.placement == "random":
+            pool = np.array(sorted(set(range(n)) - taken))
+            count = len(pool) if t.n_hosts is None else t.n_hosts
+            hosts = sorted(int(h) for h in
+                           rng.choice(pool, size=count, replace=False))
+        elif t.placement == "remainder":
+            hosts = sorted(set(range(n)) - taken)
+            if t.n_hosts is not None:
+                hosts = hosts[:t.n_hosts]
+        else:                                          # pragma: no cover
+            raise ValueError(t.placement)
+        clash = taken & set(hosts)
+        if clash:
+            raise ValueError(
+                f"{spec.name}: tenant {t.name} overlaps hosts {clash}")
+        bad = [h for h in hosts if not 0 <= h < n]
+        if bad:
+            raise ValueError(
+                f"{spec.name}: tenant {t.name} hosts {bad} outside "
+                f"[0, {n})")
+        taken |= set(hosts)
+        out[t.name] = hosts
+    return out
+
+
+# ---------------------------------------------------------------------------
+# workloads
+# ---------------------------------------------------------------------------
+
+def _build_workload(w: WorkloadSpec, topo: LeafSpine, hosts: List[int],
+                    rng: np.random.Generator, group: str) -> List[Flow]:
+    if w.kind == "bisection":
+        flows = bisection_pairs(topo, hosts, rng, group=group)
+        for f in flows:
+            f.demand *= w.demand
+            f.bytes_total = w.bytes_total
+        return flows
+    if w.kind == "all2all":
+        flows = all2all(topo, hosts, group=group,
+                        bytes_per_pair=w.bytes_total)
+        for f in flows:
+            f.demand *= w.demand
+        return flows
+    if w.kind == "allreduce":
+        flows = ring_neighbors(hosts, group=group,
+                               bytes_per_hop=w.bytes_total)
+        for f in flows:
+            f.demand *= w.demand
+        return flows
+    if w.kind == "incast":
+        sinks, srcs = hosts[:w.sinks], hosts[w.sinks:]
+        return [Flow(int(a), int(b), w.demand, w.bytes_total, group=group)
+                for a in srcs for b in sinks]
+    if w.kind == "permutation":
+        order = rng.permutation(hosts)
+        return [Flow(int(order[i]), int(order[(i + 1) % len(order)]),
+                     w.demand, w.bytes_total, group=group)
+                for i in range(len(order))]
+    if w.kind == "storage":
+        flows = []
+        arr = np.asarray(hosts)
+        for h in hosts:
+            peers = arr[arr != h]
+            dsts = rng.choice(peers, size=min(w.fanout, len(peers)),
+                              replace=False)
+            flows += [Flow(int(h), int(d), w.demand, w.bytes_total,
+                           group=group) for d in dsts]
+        return flows
+    if w.kind == "pairs":
+        return [Flow(int(a), int(b), w.demand, w.bytes_total, group=group)
+                for a, b in w.pairs]
+    raise ValueError(f"unknown workload kind {w.kind!r}")
+
+
+def build_flows(spec: ScenarioSpec, topo: LeafSpine,
+                tenants: Dict[str, List[int]],
+                rng: np.random.Generator) -> List[Flow]:
+    flows: List[Flow] = []
+    for w in spec.workloads:
+        group = w.group or w.tenant
+        fl = _build_workload(w, topo, tenants[w.tenant], rng, group)
+        if w.start_slot:
+            for f in fl:
+                f.start_slot = w.start_slot
+        flows += fl
+    return flows
+
+
+# ---------------------------------------------------------------------------
+# fault schedule -> events closure
+# ---------------------------------------------------------------------------
+
+def _planes(f: FaultSpec, topo: LeafSpine) -> List[int]:
+    return list(range(topo.n_planes)) if f.plane < 0 else [f.plane]
+
+
+def _flap(t: int, f: FaultSpec, fail, restore) -> None:
+    """Shared periodic kill/restore phase logic for *_flap faults."""
+    stop = np.inf if f.stop_slot is None else f.stop_slot
+    if f.start_slot <= t < stop:
+        ph = (t - f.start_slot) % f.period
+        down = max(1, int(f.period * f.duty))
+        if ph == 0:
+            fail()
+        elif ph == down:
+            restore()
+    elif f.stop_slot is not None and t == f.stop_slot:
+        restore()
+
+
+def make_events(spec: ScenarioSpec
+                ) -> Tuple[Callable[[int, LeafSpine], None],
+                           Tuple[Tuple[int, str], ...]]:
+    cap_link = spec.topo.uplink_cap
+    cap_acc = spec.topo.access_cap
+    faults = spec.faults
+    # per-fault derived streams so 'random_fail' draws don't depend on
+    # how many other faults exist or fire first
+    fail_seeds = {i: (spec.workload_seed, 7919, i)
+                  for i, f in enumerate(faults) if f.kind == "random_fail"}
+
+    def _restore_uplink(topo, p, leaf, spine):
+        topo.up[p, leaf, spine] = cap_link
+        topo.down[p, spine, leaf] = cap_link
+
+    def events(t: int, topo: LeafSpine) -> None:
+        for i, f in enumerate(faults):
+            if f.kind == "link_kill":
+                if t == f.start_slot:
+                    for p in _planes(f, topo):
+                        topo.fail_uplink(p, f.leaf, f.spine, f.frac)
+                elif f.stop_slot is not None and t == f.stop_slot:
+                    for p in _planes(f, topo):
+                        _restore_uplink(topo, p, f.leaf, f.spine)
+            elif f.kind == "link_flap":
+                _flap(t, f,
+                      lambda: [topo.fail_uplink(p, f.leaf, f.spine, f.frac)
+                               for p in _planes(f, topo)],
+                      lambda: [_restore_uplink(topo, p, f.leaf, f.spine)
+                               for p in _planes(f, topo)])
+            elif f.kind == "access_kill":
+                if t == f.start_slot:
+                    for p in _planes(f, topo):
+                        topo.fail_access(p, f.host)
+                elif f.stop_slot is not None and t == f.stop_slot:
+                    for p in _planes(f, topo):
+                        topo.restore_access(p, f.host)
+            elif f.kind == "access_flap":
+                _flap(t, f,
+                      lambda: [topo.fail_access(p, f.host)
+                               for p in _planes(f, topo)],
+                      lambda: [topo.restore_access(p, f.host)
+                               for p in _planes(f, topo)])
+            elif f.kind == "cascade":
+                for j, s in enumerate(f.spines):
+                    if t == f.start_slot + j * f.period:
+                        for p in _planes(f, topo):
+                            topo.up[p, :, s] = 0.0
+                            topo.down[p, s, :] = 0.0
+            elif f.kind == "straggler":
+                if t == f.start_slot:
+                    for p in _planes(f, topo):
+                        topo.access[p, f.host] = cap_acc * f.frac
+                elif f.stop_slot is not None and t == f.stop_slot:
+                    for p in _planes(f, topo):
+                        topo.access[p, f.host] = cap_acc
+            elif f.kind == "leaf_trim":
+                if t == f.start_slot:
+                    for p in _planes(f, topo):
+                        topo.trim_leaf_uplinks(p, f.leaf, f.frac)
+            elif f.kind == "random_fail":
+                if t == f.start_slot:
+                    topo.random_link_failures(
+                        np.random.default_rng(fail_seeds[i]), f.frac)
+
+    slots = sorted(
+        {sl for f in faults
+         for sl in fault_transition_slots(f, spec.sim.slots)},
+        key=lambda x: (x[0], x[1]))
+    return events, tuple(slots)
+
+
+# ---------------------------------------------------------------------------
+# top level
+# ---------------------------------------------------------------------------
+
+def compile_scenario(spec: ScenarioSpec) -> CompiledScenario:
+    spec.validate()
+    topo = LeafSpine(
+        n_leaves=spec.topo.n_leaves, n_spines=spec.topo.n_spines,
+        hosts_per_leaf=spec.topo.hosts_per_leaf,
+        n_planes=spec.topo.n_planes,
+        parallel_links=spec.topo.parallel_links,
+        link_cap=spec.topo.link_cap, access_cap=spec.topo.access_cap)
+    rng = np.random.default_rng(spec.workload_seed)
+    tenants = resolve_tenants(spec, rng)
+    flows = build_flows(spec, topo, tenants, rng)
+    if not flows:
+        raise ValueError(f"{spec.name}: scenario compiled to zero flows")
+    events, fault_slots = make_events(spec)
+    cfg = SimConfig(
+        slots=spec.sim.slots, slot_us=spec.sim.slot_us,
+        routing=spec.sim.routing, nic=spec.sim.nic,
+        base_rtt_us=spec.sim.base_rtt_us,
+        warmup_frac=spec.sim.warmup_frac,
+        sw_lb_delay_ms=spec.sim.sw_lb_delay_ms,
+        seed=spec.sim.seed, record_every=spec.sim.record_every)
+    return CompiledScenario(spec=spec, topo=topo, flows=flows, cfg=cfg,
+                            events=events, tenants=tenants,
+                            fault_slots=fault_slots)
+
+
+def run_scenario(spec: ScenarioSpec) -> SimResult:
+    """Compile + simulate in one call (fresh topology every time)."""
+    return compile_scenario(spec).run()

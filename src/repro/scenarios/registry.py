@@ -1,0 +1,297 @@
+"""Named scenario library.
+
+Ports the paper-figure experiments (fig8/fig9/fig10/fig11/fig12) to
+declarative specs — the `benchmarks/fig*.py` scripts pull their setups
+from here — and adds new multi-tenant / failure-compound scenarios the
+bespoke scripts never covered.  Every entry is a zero-argument factory so
+specs stay immutable and cheap to parameterize via `.with_sim(...)`.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from .spec import (FaultSpec, ScenarioSpec, SimSpec, TenantSpec,
+                   TopologySpec, WorkloadSpec)
+
+SCENARIOS: Dict[str, Callable[[], ScenarioSpec]] = {}
+
+_TESTBED = TopologySpec(n_leaves=8, n_spines=8, hosts_per_leaf=8,
+                        n_planes=1)
+
+
+def register(fn: Callable[[], ScenarioSpec]) -> Callable[[], ScenarioSpec]:
+    spec = fn()
+    spec.validate()
+    SCENARIOS[spec.name] = fn
+    return fn
+
+
+def get_scenario(name: str) -> ScenarioSpec:
+    try:
+        return SCENARIOS[name]()
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; known: {sorted(SCENARIOS)}"
+        ) from None
+
+
+def list_scenarios() -> List[str]:
+    return sorted(SCENARIOS)
+
+
+# ---------------------------------------------------------------------------
+# paper-figure ports
+# ---------------------------------------------------------------------------
+
+@register
+def fig8_bisection() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="fig8_bisection",
+        description="Fig 8 / §6.2: RDMA bisection at maximum load, "
+                    "64 endpoints, worst-case cross-spine pairing.",
+        topo=_TESTBED,
+        tenants=(TenantSpec("main"),),
+        workloads=(WorkloadSpec("bisection"),),
+        sim=SimSpec(slots=600, seed=1),
+        workload_seed=0)
+
+
+@register
+def fig9_single_all2all() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="fig9_single_all2all",
+        description="Fig 9 (left) / §6.3: one 32-rank All2All, capacity "
+                    "ceiling per stack.",
+        topo=_TESTBED,
+        tenants=(TenantSpec("main", placement="block", n_hosts=32),),
+        workloads=(WorkloadSpec("all2all"),),
+        sim=SimSpec(slots=400, seed=2))
+
+
+@register
+def fig9_victim_noise() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="fig9_victim_noise",
+        description="Fig 9 (right) / §6.3: 16-rank victim All2All "
+                    "interleaved with a 48-rank noise All2All.",
+        topo=_TESTBED,
+        tenants=(TenantSpec("victim", placement="interleave", stride=4,
+                            n_hosts=16),
+                 TenantSpec("noise", placement="remainder")),
+        workloads=(WorkloadSpec("all2all", tenant="victim"),
+                   WorkloadSpec("all2all", tenant="noise")),
+        sim=SimSpec(slots=400, seed=2))
+
+
+@register
+def fig10_victim_alone() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="fig10_victim_alone",
+        description="Fig 10 baseline: 16-rank training All2All with the "
+                    "fabric otherwise idle.",
+        topo=_TESTBED,
+        tenants=(TenantSpec("victim", placement="interleave", stride=4,
+                            n_hosts=16),),
+        workloads=(WorkloadSpec("all2all", tenant="victim"),),
+        sim=SimSpec(slots=400, seed=4),
+        workload_seed=3)
+
+
+@register
+def fig10_victim_noise() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="fig10_victim_noise",
+        description="Fig 10: training All2All next to RDMA-bisection "
+                    "noise; step-time dilation per stack.",
+        topo=_TESTBED,
+        tenants=(TenantSpec("victim", placement="interleave", stride=4,
+                            n_hosts=16),
+                 TenantSpec("noise", placement="remainder")),
+        workloads=(WorkloadSpec("all2all", tenant="victim"),
+                   WorkloadSpec("bisection", tenant="noise")),
+        sim=SimSpec(slots=400, seed=4),
+        workload_seed=3)
+
+
+def fig11_partial_uplink(keep: float) -> ScenarioSpec:
+    """Fig 1d / Fig 11 / §6.4 port, parameterized by surviving-uplink
+    fraction on leaf 0 (whole discrete links are disabled)."""
+    t = _TESTBED
+    n_keep = max(1, round(t.n_spines * keep))
+    faults = tuple(FaultSpec("link_kill", start_slot=0, plane=0, leaf=0,
+                             spine=s)
+                   for s in range(n_keep, t.n_spines))
+    return ScenarioSpec(
+        name=f"fig11_keep{int(keep * 100)}pct",
+        description="Fig 11 / §6.4: All2All with leaf-0 uplinks reduced "
+                    f"to {int(keep * 100)}% capacity.",
+        topo=t,
+        tenants=(TenantSpec("main", placement="block", n_hosts=48),),
+        workloads=(WorkloadSpec("all2all"),),
+        faults=faults,
+        sim=SimSpec(slots=400, seed=5, routing="war"))
+
+
+@register
+def fig11_degraded_leaf() -> ScenarioSpec:
+    from dataclasses import replace
+    return replace(fig11_partial_uplink(0.5), name="fig11_degraded_leaf")
+
+
+@register
+def fig12_plane_flap() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="fig12_plane_flap",
+        description="Fig 12 / §6.4: one host-plane link dies at slot 50; "
+                    "hardware PLB vs software LB recovery "
+                    "(swlb via .with_sim(nic='swlb', slots=12000)).",
+        topo=TopologySpec(n_leaves=2, n_spines=2, hosts_per_leaf=4,
+                          n_planes=4, access_cap=0.25),
+        tenants=(TenantSpec("main", placement="explicit", hosts=(0, 4)),),
+        workloads=(WorkloadSpec("pairs", pairs=((0, 4),)),),
+        faults=(FaultSpec("access_kill", start_slot=50, plane=1, host=0),),
+        sim=SimSpec(slots=600, slot_us=100.0, seed=6))
+
+
+# ---------------------------------------------------------------------------
+# new scenarios
+# ---------------------------------------------------------------------------
+
+@register
+def multi_tenant_50_50() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="multi_tenant_50_50",
+        description="Two equal 32-rank All2All tenants interleaved on "
+                    "every leaf — symmetric-contention isolation probe.",
+        topo=_TESTBED,
+        tenants=(TenantSpec("a", placement="interleave", stride=2,
+                            n_hosts=32),
+                 TenantSpec("b", placement="remainder")),
+        workloads=(WorkloadSpec("all2all", tenant="a"),
+                   WorkloadSpec("all2all", tenant="b")),
+        sim=SimSpec(slots=400, seed=7))
+
+
+@register
+def multi_tenant_75_25() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="multi_tenant_75_25",
+        description="Asymmetric split: a 16-rank tenant shares leaves "
+                    "with a 48-rank tenant (small-tenant starvation "
+                    "probe).",
+        topo=_TESTBED,
+        tenants=(TenantSpec("small", placement="interleave", stride=4,
+                            n_hosts=16),
+                 TenantSpec("large", placement="remainder")),
+        workloads=(WorkloadSpec("all2all", tenant="small"),
+                   WorkloadSpec("all2all", tenant="large")),
+        sim=SimSpec(slots=400, seed=8))
+
+
+@register
+def flap_during_incast() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="flap_during_incast",
+        description="30-source incast onto 2 sinks while a sink-leaf "
+                    "uplink flaps every 60 slots — reaction time under "
+                    "sustained congestion.",
+        topo=_TESTBED,
+        tenants=(TenantSpec("main", placement="block", n_hosts=32),),
+        workloads=(WorkloadSpec("incast", sinks=2, demand=0.5),),
+        faults=(FaultSpec("link_flap", start_slot=100, period=60,
+                          duty=0.34, plane=0, leaf=0, spine=0),),
+        sim=SimSpec(slots=400, seed=9))
+
+
+@register
+def cascading_spine_loss() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="cascading_spine_loss",
+        description="Rolling cascade: spines 7, 6, 5 die 80 slots apart "
+                    "under a 48-rank All2All (weighted-AR re-balance "
+                    "after each loss).",
+        topo=_TESTBED,
+        tenants=(TenantSpec("main", placement="block", n_hosts=48),),
+        workloads=(WorkloadSpec("all2all"),),
+        faults=(FaultSpec("cascade", start_slot=100, period=80,
+                          spines=(7, 6, 5)),),
+        sim=SimSpec(slots=400, seed=10, routing="war"))
+
+
+@register
+def straggler_failure_compound() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="straggler_failure_compound",
+        description="Compound fault: host 5 slows to 30% for slots "
+                    "80-280 while an unrelated uplink dies at slot 150 "
+                    "(§5.2 telemetry signatures under overlap).",
+        topo=_TESTBED,
+        tenants=(TenantSpec("main", placement="block", n_hosts=32),),
+        workloads=(WorkloadSpec("all2all"),),
+        faults=(FaultSpec("straggler", start_slot=80, stop_slot=280,
+                          host=5, frac=0.3, plane=-1),
+                FaultSpec("link_kill", start_slot=150, plane=0, leaf=1,
+                          spine=2)),
+        sim=SimSpec(slots=400, seed=11))
+
+
+@register
+def storage_background_mix() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="storage_background_mix",
+        description="32-rank training All2All sharing the fabric with "
+                    "low-rate storage/checkpoint background traffic from "
+                    "the other 32 hosts.",
+        topo=_TESTBED,
+        tenants=(TenantSpec("train", placement="interleave", stride=2,
+                            n_hosts=32),
+                 TenantSpec("storage", placement="remainder")),
+        workloads=(WorkloadSpec("all2all", tenant="train"),
+                   WorkloadSpec("storage", tenant="storage", demand=0.25,
+                                fanout=3)),
+        sim=SimSpec(slots=400, seed=12))
+
+
+@register
+def permutation_stress() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="permutation_stress",
+        description="Random permutation at line rate over all 64 hosts — "
+                    "ECMP's classic collision workload "
+                    "(.with_sim(routing='ecmp', nic='dcqcn') for the ETH "
+                    "baseline).",
+        topo=_TESTBED,
+        tenants=(TenantSpec("main"),),
+        workloads=(WorkloadSpec("permutation"),),
+        sim=SimSpec(slots=400, seed=13))
+
+
+@register
+def staggered_incast_bursts() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="staggered_incast_bursts",
+        description="Two 15-source incasts on disjoint tenants, the "
+                    "second admitted 150 slots late — burst-on-busy "
+                    "admission dynamics.",
+        topo=_TESTBED,
+        tenants=(TenantSpec("early", placement="block", n_hosts=16),
+                 TenantSpec("late", placement="block", offset=16,
+                            n_hosts=16)),
+        workloads=(WorkloadSpec("incast", tenant="early", demand=0.8),
+                   WorkloadSpec("incast", tenant="late", demand=0.8,
+                                start_slot=150)),
+        sim=SimSpec(slots=400, seed=14))
+
+
+@register
+def allreduce_under_random_failures() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="allreduce_under_random_failures",
+        description="Ring allreduce over 64 hosts with 10% uniform "
+                    "random fabric link failures at slot 100 "
+                    "(Fig 1c / §6.4 operating point).",
+        topo=_TESTBED,
+        tenants=(TenantSpec("main"),),
+        workloads=(WorkloadSpec("allreduce", bytes_total=220.0),),
+        faults=(FaultSpec("random_fail", start_slot=100, frac=0.10),),
+        sim=SimSpec(slots=400, seed=15, routing="war"))

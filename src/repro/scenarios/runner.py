@@ -1,0 +1,226 @@
+"""Batched scenario execution: (seed × routing × nic) grids, parallelized
+across processes, each run distilled into one `ScenarioMetrics` record.
+
+Metrics (per run):
+  * per-tenant goodput mean / p01 / p99 across the tenant's flows
+    (post-warmup, normalized to line rate; p01 is the straggler tail
+    that gates collectives, p99 the best-flow upper tail);
+  * isolation index — Jain fairness across tenants' demand-normalized
+    goodput (1.0 = perfectly proportional sharing);
+  * recovery slots after each fault transition — first slot at which
+    total goodput re-attains 90% of the post-fault steady state;
+  * completion-tail ratio — p99 / median completion slot over finite
+    transfers;
+  * §5.1 symmetry check on final uplink utilization via
+    `core.telemetry.symmetry_check` — non-uniform planes and outlier
+    spines are flagged automatically.
+"""
+from __future__ import annotations
+
+import os
+from concurrent.futures import ProcessPoolExecutor
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.telemetry import symmetry_check
+
+from .compile import compile_scenario
+from .registry import get_scenario
+from .spec import ScenarioSpec
+
+
+@dataclass(frozen=True)
+class SweepGrid:
+    """The cartesian run grid.  Each seed perturbs both the sim seed and
+    the workload seed (placement / pairing / ECMP hashes all re-draw).
+    `routings`/`nics` of None inherit the spec's own setting."""
+    seeds: Tuple[int, ...] = (0,)
+    routings: Optional[Tuple[str, ...]] = None
+    nics: Optional[Tuple[str, ...]] = None
+    slots: Optional[int] = None          # override spec.sim.slots
+
+    def points(self, spec: ScenarioSpec) -> List[ScenarioSpec]:
+        out = []
+        for seed in self.seeds:
+            for routing in self.routings or (spec.sim.routing,):
+                for nic in self.nics or (spec.sim.nic,):
+                    s = spec.with_sim(seed=spec.sim.seed + seed,
+                                      routing=routing, nic=nic,
+                                      **({"slots": self.slots}
+                                         if self.slots else {}))
+                    out.append(s.with_workload_seed(
+                        spec.workload_seed + seed))
+        return out
+
+
+@dataclass
+class ScenarioMetrics:
+    scenario: str
+    seed: int
+    routing: str
+    nic: str
+    mean_goodput: float
+    tenant_mean: Dict[str, float]
+    tenant_p01: Dict[str, float]     # straggler tail — gates collectives
+    tenant_p99: Dict[str, float]     # best-flow upper tail
+    isolation_index: float
+    recovery_slots: Tuple[Tuple[int, str, int], ...]  # (slot, label, rec)
+    completion_tail: float
+    symmetry_cv: float
+    symmetry_uniform: bool
+    symmetry_outliers: Tuple[Tuple[int, int], ...]    # (plane, spine)
+    extra: Dict[str, float] = field(default_factory=dict)
+
+    CSV_FIELDS = ("scenario", "seed", "routing", "nic", "mean_goodput",
+                  "isolation_index", "completion_tail", "symmetry_cv",
+                  "worst_recovery_slots", "tenants")
+
+    @staticmethod
+    def csv_header() -> str:
+        return ",".join(ScenarioMetrics.CSV_FIELDS)
+
+    def worst_recovery(self) -> int:
+        recs = [r for _, _, r in self.recovery_slots]
+        return max(recs) if recs else 0
+
+    def to_row(self) -> str:
+        tenants = ";".join(f"{k}={v:.3f}"
+                           for k, v in sorted(self.tenant_mean.items()))
+        ct = "nan" if np.isnan(self.completion_tail) \
+            else f"{self.completion_tail:.2f}"
+        return (f"{self.scenario},{self.seed},{self.routing},{self.nic},"
+                f"{self.mean_goodput:.4f},{self.isolation_index:.4f},"
+                f"{ct},{self.symmetry_cv:.4f},"
+                f"{self.worst_recovery()},{tenants}")
+
+
+# ---------------------------------------------------------------------------
+# single run -> metrics
+# ---------------------------------------------------------------------------
+
+def _jain(x: np.ndarray) -> float:
+    x = np.asarray(x, np.float64)
+    if x.size == 0 or (x <= 0).all():
+        return 1.0
+    return float(x.sum() ** 2 / (x.size * (x ** 2).sum() + 1e-30))
+
+
+def _recovery(total: np.ndarray, fault_slots, record_every: int,
+              horizon: int) -> Tuple[Tuple[int, str, int], ...]:
+    """Slots until total goodput re-attains 90% of the steady state that
+    establishes itself before the next fault (or the run end).  -1 = never
+    recovered inside the window."""
+    out = []
+    bounds = [s for s, _ in fault_slots] + [horizon]
+    for i, (slot, label) in enumerate(fault_slots):
+        lo = slot // record_every + 1
+        hi = min(bounds[i + 1] // record_every, total.shape[0])
+        post = total[lo:hi]
+        if post.size == 0:
+            out.append((slot, label, -1))
+            continue
+        tail = post[-max(1, post.size // 4):]
+        steady = float(np.median(tail))
+        ok = np.flatnonzero(post >= 0.9 * steady)
+        rec = int((ok[0] + 1) * record_every) if ok.size else -1
+        out.append((slot, label, rec))
+    return tuple(out)
+
+
+def run_point(spec: ScenarioSpec) -> ScenarioMetrics:
+    """Compile + simulate one grid point and distill metrics."""
+    c = compile_scenario(spec)
+    res = c.run()
+
+    demand = np.array([f.demand for f in c.flows])
+    tenant_mean: Dict[str, float] = {}
+    tenant_p01: Dict[str, float] = {}
+    tenant_p99: Dict[str, float] = {}
+    norm: List[float] = []
+    for gi, gname in enumerate(res.groups):
+        sel = res.group_of == gi
+        gp = res.mean_goodput[sel]
+        tenant_mean[gname] = float(gp.mean())
+        tenant_p01[gname] = float(np.quantile(gp, 0.01))
+        tenant_p99[gname] = float(np.quantile(gp, 0.99))
+        d = max(float(demand[sel].mean()), 1e-12)
+        norm.append(float(gp.mean()) / d)
+
+    total = res.goodput.sum(1)
+    denom = max(float(demand.sum()), 1e-12)
+    recovery = _recovery(total / denom, c.fault_slots,
+                         spec.sim.record_every, spec.sim.slots)
+
+    finite = res.completion_slot[res.completion_slot >= 0]
+    if finite.size >= 2 and np.median(finite) > 0:
+        tail = float(np.quantile(finite, 0.99) / np.median(finite))
+    else:
+        tail = float("nan")
+
+    # §5.1: per-plane spine-aggregate utilization should be uniform under
+    # AR; outliers flag faults (expected when the scenario injects them).
+    worst_cv, uniform, outliers = 0.0, True, []
+    for p in range(res.util_up_last.shape[0]):
+        rep = symmetry_check(f"plane{p}.spines",
+                             res.util_up_last[p].sum(0))
+        worst_cv = max(worst_cv, rep.cv)
+        uniform &= rep.uniform
+        outliers += [(p, s) for s in rep.outliers]
+
+    return ScenarioMetrics(
+        scenario=spec.name, seed=spec.sim.seed, routing=spec.sim.routing,
+        nic=spec.sim.nic,
+        mean_goodput=float(res.mean_goodput.mean()),
+        tenant_mean=tenant_mean, tenant_p01=tenant_p01,
+        tenant_p99=tenant_p99,
+        isolation_index=_jain(np.asarray(norm)),
+        recovery_slots=recovery, completion_tail=tail,
+        symmetry_cv=float(worst_cv), symmetry_uniform=bool(uniform),
+        symmetry_outliers=tuple(outliers))
+
+
+# ---------------------------------------------------------------------------
+# sweeps
+# ---------------------------------------------------------------------------
+
+def _resolve(spec_or_name) -> ScenarioSpec:
+    if isinstance(spec_or_name, str):
+        return get_scenario(spec_or_name)
+    return spec_or_name
+
+
+def sweep(spec_or_name, grid: Optional[SweepGrid] = None,
+          processes: Optional[int] = None) -> List[ScenarioMetrics]:
+    """Run one scenario over the grid.  `processes=0/1` forces serial;
+    None sizes the pool to min(n_points, cpus)."""
+    spec = _resolve(spec_or_name)
+    points = (grid or SweepGrid()).points(spec)
+    return _execute(points, processes)
+
+
+def sweep_many(names: Sequence, grid: Optional[SweepGrid] = None,
+               processes: Optional[int] = None) -> List[ScenarioMetrics]:
+    """Run several scenarios over one shared grid, batched through a
+    single process pool."""
+    points: List[ScenarioSpec] = []
+    g = grid or SweepGrid()
+    for n in names:
+        points += g.points(_resolve(n))
+    return _execute(points, processes)
+
+
+def _execute(points: List[ScenarioSpec],
+             processes: Optional[int]) -> List[ScenarioMetrics]:
+    if processes is None:
+        processes = min(len(points), os.cpu_count() or 1)
+    if processes <= 1 or len(points) <= 1:
+        return [run_point(p) for p in points]
+    with ProcessPoolExecutor(max_workers=processes) as ex:
+        return list(ex.map(run_point, points))
+
+
+def metrics_csv(rows: Iterable[ScenarioMetrics]) -> str:
+    return "\n".join([ScenarioMetrics.csv_header()] +
+                     [m.to_row() for m in rows])

@@ -1,0 +1,223 @@
+"""Declarative scenario DSL: tenants, workloads, faults, and simulation
+parameters composed into a single picklable `ScenarioSpec`.
+
+A scenario is data, not code: the spec layer carries *what* to simulate
+(topology shape, which hosts belong to which tenant, which collective each
+tenant runs, which links fail when), `compile.py` lowers it to the
+`(topo, flows, events)` triple `netsim.sim.run_sim` consumes, and
+`runner.py` sweeps it over (seed, routing, nic) grids.  Everything here is
+a frozen dataclass so specs hash, compare, and cross process boundaries.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+WORKLOAD_KINDS = ("bisection", "all2all", "allreduce", "incast",
+                  "permutation", "storage", "pairs")
+FAULT_KINDS = ("link_kill", "link_flap", "access_kill", "access_flap",
+               "cascade", "straggler", "leaf_trim", "random_fail")
+PLACEMENTS = ("block", "interleave", "random", "remainder", "explicit")
+
+
+@dataclass(frozen=True)
+class TopologySpec:
+    """Shape of the multi-plane leaf–spine fabric (mirrors `LeafSpine`)."""
+    n_leaves: int = 8
+    n_spines: int = 8
+    hosts_per_leaf: int = 8
+    n_planes: int = 1
+    parallel_links: int = 1
+    link_cap: float = 1.0
+    access_cap: float = 1.0
+
+    @property
+    def n_hosts(self) -> int:
+        return self.n_leaves * self.hosts_per_leaf
+
+    @property
+    def uplink_cap(self) -> float:
+        return self.link_cap * self.parallel_links
+
+
+@dataclass(frozen=True)
+class TenantSpec:
+    """A named set of hosts.  Tenants are resolved in declaration order and
+    never overlap; each workload targets one tenant by name.
+
+    placement:
+      'explicit'   — use `hosts` verbatim.
+      'block'      — `n_hosts` consecutive hosts starting at `offset`.
+      'interleave' — every `stride`-th host starting at `offset`
+                     (the paper's random-uniform placement proxy).
+      'random'     — `n_hosts` drawn without replacement from the
+                     still-unassigned pool (consumes workload rng).
+      'remainder'  — every host not claimed by an earlier tenant.
+    """
+    name: str
+    placement: str = "remainder"
+    hosts: Tuple[int, ...] = ()
+    n_hosts: Optional[int] = None
+    offset: int = 0
+    stride: int = 1
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """One traffic pattern bound to a tenant.
+
+    kind:
+      'bisection'   — worst-case cross-spine pairing at line rate (Fig 8).
+      'all2all'     — full-mesh, per-flow demand 1/(n-1) (Fig 9).
+      'allreduce'   — ring neighbor streams (AllGather/ReduceScatter).
+      'incast'      — every non-sink tenant host sends to `sinks` sinks.
+      'permutation' — random ring over a shuffled host order.
+      'storage'     — low-rate background: each host to `fanout` random
+                      peers (checkpoint/dataset traffic proxy).
+      'pairs'       — explicit (src, dst) list.
+
+    `demand` scales the builder's native per-flow rate ('incast',
+    'permutation', 'storage', 'pairs' use it directly as the per-flow
+    offered rate).  `bytes_total` turns an open-loop stream into a
+    finite transfer (enables completion-tail metrics); `start_slot`
+    delays admission (staggered bursts).
+    """
+    kind: str
+    tenant: str = "main"
+    demand: float = 1.0
+    bytes_total: float = float("inf")
+    start_slot: int = 0
+    sinks: int = 1                       # incast
+    fanout: int = 2                      # storage
+    pairs: Tuple[Tuple[int, int], ...] = ()
+    group: Optional[str] = None          # metric group; default = tenant
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One failure/degradation schedule applied to the topology.
+
+    kind:
+      'link_kill'   — remove `frac` of (plane, leaf, spine) uplink at
+                      `start_slot`; restore at `stop_slot` if set.
+      'link_flap'   — periodic kill/restore of one uplink: down for
+                      `duty`×`period` slots of every `period`, between
+                      `start_slot` and `stop_slot`.
+      'access_kill' — host NIC-plane port down at `start_slot`
+                      (restored at `stop_slot` if set).
+      'access_flap' — periodic version of access_kill.
+      'cascade'     — rolling spine loss: spine `spines[i]` dies (all
+                      leaves) at `start_slot + i*period`.
+      'straggler'   — host access capacity scaled to `frac` between
+                      `start_slot` and `stop_slot` (slow-rank injection).
+      'leaf_trim'   — leaf uplink capacity scaled to `frac` at
+                      `start_slot` (Fig 16 consolidation).
+      'random_fail' — uniform random fabric link failures of fraction
+                      `frac` at `start_slot` (Fig 1c / §6.4).
+
+    `plane` = -1 applies to every plane.
+    """
+    kind: str
+    start_slot: int = 0
+    stop_slot: Optional[int] = None
+    period: int = 0
+    duty: float = 0.5
+    plane: int = 0
+    leaf: int = 0
+    spine: int = 0
+    spines: Tuple[int, ...] = ()
+    host: int = 0
+    frac: float = 1.0
+
+
+@dataclass(frozen=True)
+class SimSpec:
+    """Simulation parameters (mirrors `netsim.sim.SimConfig`)."""
+    slots: int = 400
+    slot_us: float = 10.0
+    routing: str = "ar"          # 'ar' | 'war' | 'ecmp'
+    nic: str = "spx"             # 'spx' | 'dcqcn' | 'global' | 'esr' | 'swlb'
+    base_rtt_us: float = 4.0
+    warmup_frac: float = 0.25
+    sw_lb_delay_ms: float = 1000.0
+    seed: int = 0
+    record_every: int = 1
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """A complete, self-describing experiment."""
+    name: str
+    topo: TopologySpec = field(default_factory=TopologySpec)
+    tenants: Tuple[TenantSpec, ...] = (TenantSpec("main"),)
+    workloads: Tuple[WorkloadSpec, ...] = ()
+    faults: Tuple[FaultSpec, ...] = ()
+    sim: SimSpec = field(default_factory=SimSpec)
+    workload_seed: int = 0
+    description: str = ""
+
+    # ---- ergonomic copies -------------------------------------------------
+    def with_sim(self, **kw) -> "ScenarioSpec":
+        """Copy with SimSpec fields replaced (nic/routing/slots/seed/...)."""
+        return replace(self, sim=replace(self.sim, **kw))
+
+    def with_workload_seed(self, seed: int) -> "ScenarioSpec":
+        return replace(self, workload_seed=seed)
+
+    def validate(self) -> "ScenarioSpec":
+        names = [t.name for t in self.tenants]
+        if len(set(names)) != len(names):
+            raise ValueError(f"{self.name}: duplicate tenant names {names}")
+        for t in self.tenants:
+            if t.placement not in PLACEMENTS:
+                raise ValueError(
+                    f"{self.name}: unknown placement {t.placement!r}")
+            if t.placement == "explicit" and not t.hosts:
+                raise ValueError(
+                    f"{self.name}: tenant {t.name} explicit but no hosts")
+        for w in self.workloads:
+            if w.kind not in WORKLOAD_KINDS:
+                raise ValueError(f"{self.name}: unknown workload {w.kind!r}")
+            if w.tenant not in names:
+                raise ValueError(
+                    f"{self.name}: workload targets unknown tenant "
+                    f"{w.tenant!r}")
+        for f in self.faults:
+            if f.kind not in FAULT_KINDS:
+                raise ValueError(f"{self.name}: unknown fault {f.kind!r}")
+            if f.kind in ("link_flap", "access_flap", "cascade") \
+                    and f.period <= 0:
+                raise ValueError(
+                    f"{self.name}: {f.kind} requires period > 0")
+            if f.kind == "cascade" and not f.spines:
+                raise ValueError(f"{self.name}: cascade requires spines")
+        if self.sim.routing not in ("ar", "war", "ecmp"):
+            raise ValueError(
+                f"{self.name}: unknown routing {self.sim.routing!r}")
+        if self.sim.nic not in ("spx", "dcqcn", "global", "esr", "swlb"):
+            raise ValueError(f"{self.name}: unknown nic {self.sim.nic!r}")
+        return self
+
+
+def fault_transition_slots(f: FaultSpec, horizon: int
+                           ) -> Tuple[Tuple[int, str], ...]:
+    """Slots (< horizon) at which this fault *degrades* the fabric —
+    the instants the runner measures recovery from.  Restores are not
+    transitions."""
+    out = []
+    if f.kind in ("link_kill", "access_kill", "straggler", "leaf_trim",
+                  "random_fail"):
+        if f.start_slot < horizon:
+            out.append((f.start_slot, f.kind))
+    elif f.kind in ("link_flap", "access_flap"):
+        stop = horizon if f.stop_slot is None else min(f.stop_slot, horizon)
+        t = f.start_slot
+        while t < stop:
+            out.append((t, f.kind))
+            t += f.period
+    elif f.kind == "cascade":
+        for i, _ in enumerate(f.spines):
+            t = f.start_slot + i * f.period
+            if t < horizon:
+                out.append((t, f"cascade[{i}]"))
+    return tuple(out)

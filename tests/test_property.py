@@ -1,4 +1,10 @@
 """Hypothesis property tests on system invariants."""
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; property tests skipped")
+
 import jax
 import jax.numpy as jnp
 import numpy as np
