@@ -1,0 +1,112 @@
+"""Backend benchmark: NumPy process-pool vs JAX batched scenario sweeps.
+
+Runs the same (seeds x routings) grid of one registry scenario through
+both backends and reports wall-clock, simulated slots/sec, and the
+speedup.  The default grid is the paper's Fig 9 isolation scenario
+(`fig9_victim_noise`, the registry port of `benchmarks/fig9_isolation`)
+over 16 seeds x (ar, ecmp) — the acceptance workload for the JAX port.
+
+The JAX backend is timed twice: cold (first call pays `jax.jit`
+compilation, once per (scenario, routing, nic) structure) and warm
+(compilation cache hit — the steady state for any sweep that reuses a
+structure, i.e. every multi-seed study).
+
+CLI (CI runs the smoke variant):
+
+  PYTHONPATH=src python -m benchmarks.backend_bench
+  PYTHONPATH=src python -m benchmarks.backend_bench --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import Optional, Tuple
+
+# one XLA host device per core, so the jax backend's (routing, nic)
+# groups run concurrently like the NumPy pool's workers do; must be set
+# before JAX initializes (the runner imports it lazily, on first use)
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        f"{_flags} --xla_force_host_platform_device_count="
+        f"{os.cpu_count() or 1}").strip()
+
+from repro.scenarios import SweepGrid, list_scenarios, sweep  # noqa: E402
+
+from .common import emit
+
+DEFAULT_SCENARIO = "fig9_victim_noise"
+DEFAULT_ROUTINGS = ("ar", "ecmp")
+DEFAULT_SEEDS = 16
+
+
+def run(scenario: str = DEFAULT_SCENARIO, n_seeds: int = DEFAULT_SEEDS,
+        routings: Tuple[str, ...] = DEFAULT_ROUTINGS,
+        slots: Optional[int] = None,
+        processes: Optional[int] = None) -> dict:
+    grid = SweepGrid(seeds=tuple(range(n_seeds)), routings=routings,
+                     slots=slots)
+    # numpy first: the process pool must fork before JAX spins up its
+    # thread pools in this process
+    t0 = time.perf_counter()
+    rows_np = sweep(scenario, grid, processes=processes)
+    t_np = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    rows_jx = sweep(scenario, grid, backend="jax")
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sweep(scenario, grid, backend="jax")
+    t_warm = time.perf_counter() - t0
+
+    n_points = len(rows_np)
+    total_slots = n_points * (slots or _spec_slots(scenario))
+    for name, wall in (("numpy_pool", t_np), ("jax_cold", t_cold),
+                       ("jax_warm", t_warm)):
+        emit(f"backend_bench.{scenario}.{name}", wall * 1e6,
+             f"wall_s={wall:.3f},points={n_points},"
+             f"slots_per_s={total_slots / max(wall, 1e-9):.0f}")
+    emit(f"backend_bench.{scenario}.speedup", 0.0,
+         f"cold={t_np / max(t_cold, 1e-9):.2f}x,"
+         f"warm={t_np / max(t_warm, 1e-9):.2f}x")
+    # both backends must agree on what they simulated (goodput to 4 dp)
+    mism = sum(a.to_row() != b.to_row()
+               for a, b in zip(rows_np, rows_jx))
+    emit(f"backend_bench.{scenario}.row_mismatches", float(mism),
+         "numpy-vs-jax CSV rows (float32 jitter tolerated via "
+         "4dp rounding; exact parity is the x64 test suite's job)")
+    return {"numpy": t_np, "jax_cold": t_cold, "jax_warm": t_warm}
+
+
+def _spec_slots(scenario: str) -> int:
+    from repro.scenarios import get_scenario
+    return get_scenario(scenario).sim.slots
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--scenario", default=DEFAULT_SCENARIO,
+                   choices=list_scenarios())
+    p.add_argument("--seeds", type=int, default=DEFAULT_SEEDS)
+    p.add_argument("--routings", nargs="+", default=list(DEFAULT_ROUTINGS))
+    p.add_argument("--slots", type=int, default=None,
+                   help="override spec slots (default: spec's own)")
+    p.add_argument("--processes", type=int, default=None,
+                   help="numpy pool size (default: min(points, cpus))")
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-sized: 2 seeds, 100 slots")
+    args = p.parse_args(argv)
+    print("name,us_per_call,derived")
+    if args.smoke:
+        run(args.scenario, n_seeds=2, routings=tuple(args.routings),
+            slots=100, processes=args.processes)
+    else:
+        run(args.scenario, n_seeds=args.seeds,
+            routings=tuple(args.routings), slots=args.slots,
+            processes=args.processes)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -23,7 +23,8 @@ DEFAULT_SCENARIOS = ("multi_tenant_50_50", "flap_during_incast",
 
 def run(scenarios=DEFAULT_SCENARIOS, n_seeds: int = 2,
         slots: Optional[int] = 200, processes: Optional[int] = None,
-        stacks=(("spx", "ar"), ("dcqcn", "ecmp"))) -> None:
+        stacks=(("spx", "ar"), ("dcqcn", "ecmp")),
+        backend: str = "numpy") -> None:
     # the paper pairs stacks (SPX NIC + AR, DCQCN + ECMP); sweep each
     # pairing over seeds × scenarios rather than a nic × routing product
     rows: List = []
@@ -32,7 +33,8 @@ def run(scenarios=DEFAULT_SCENARIOS, n_seeds: int = 2,
         for nic, routing in stacks:
             grid = SweepGrid(seeds=tuple(range(n_seeds)), nics=(nic,),
                              routings=(routing,), slots=slots)
-            rows.extend(sweep_many(scenarios, grid, processes=processes))
+            rows.extend(sweep_many(scenarios, grid, processes=processes,
+                                   backend=backend))
 
     us = timeit(_all, iters=1, warmup=0)
     n = max(len(rows), 1)
@@ -52,10 +54,12 @@ def main(argv=None) -> None:
     p.add_argument("--seeds", type=int, default=2)
     p.add_argument("--slots", type=int, default=200)
     p.add_argument("--processes", type=int, default=None)
+    p.add_argument("--backend", default="numpy", choices=["numpy", "jax"],
+                   help="numpy: process-pool; jax: batched vmap sweeps")
     args = p.parse_args(argv)
     print("name,us_per_call,derived")
     run(tuple(args.scenarios), n_seeds=args.seeds, slots=args.slots,
-        processes=args.processes)
+        processes=args.processes, backend=args.backend)
 
 
 if __name__ == "__main__":

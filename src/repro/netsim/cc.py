@@ -25,6 +25,8 @@ SPX_RTT_GAIN = 0.15
 DCQCN_ALPHA_G = 0.0625
 DCQCN_AI = 0.01
 MIN_RATE = 0.01
+TARGET_RTT_US = 12.0
+PROBE_TIMEOUT = 3
 
 
 @dataclass
@@ -32,8 +34,8 @@ class NicState:
     mode: str
     n_flows: int
     n_planes: int
-    target_rtt_us: float = 12.0
-    probe_timeout: int = 3
+    target_rtt_us: float = TARGET_RTT_US
+    probe_timeout: int = PROBE_TIMEOUT
     sw_lb_delay_slots: int = 0       # 'swlb': reaction delay in slots
 
     rate: np.ndarray = field(init=False)        # (F, P) allowances

@@ -22,6 +22,13 @@ import numpy as np
 
 from .topology import LeafSpine
 
+# fabric constants — the JAX backend (netsim/jx) imports these so the two
+# engines cannot drift when one is tuned
+ECN_QUEUE_THRESH = 3.0
+AR_TEMPERATURE = 0.25
+JSQ_BINS = 16
+Q_CAP = 64.0
+
 
 @dataclass
 class Flow:
@@ -86,9 +93,10 @@ class SlotResult:
 
 class FluidFabric:
     def __init__(self, topo: LeafSpine, base_rtt_us: float = 4.0,
-                 slot_us: float = 10.0, ecn_queue_thresh: float = 3.0,
-                 ar_temperature: float = 0.25, jsq_bins: int = 16,
-                 q_cap: float = 64.0):
+                 slot_us: float = 10.0,
+                 ecn_queue_thresh: float = ECN_QUEUE_THRESH,
+                 ar_temperature: float = AR_TEMPERATURE,
+                 jsq_bins: int = JSQ_BINS, q_cap: float = Q_CAP):
         self.t = topo
         self.state = FabricState.zeros(topo)
         self.base_rtt = base_rtt_us

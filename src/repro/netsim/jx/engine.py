@@ -1,0 +1,631 @@
+"""Jitted slot loop: the JAX twin of `netsim.sim.run_sim`.
+
+One slot is a pure function `(SimCarry, slot inputs) -> SimCarry` that
+reproduces, operation for operation, the NumPy pipeline:
+
+  PLB plane split -> routing fractions (AR / weighted-AR from the queue
+  carry, ECMP from precompiled assignment segments) -> per-link bottleneck
+  scaling -> queue/ECN/RTT evolution -> NIC control update
+  (`spx|dcqcn|global|esr|swlb`) -> loss-stall masking -> transfer
+  completion.
+
+The loop runs under `lax.scan`; whole sweep axes (seeds, each with its own
+flow population and fault timeline) run as one `jax.vmap` batch.  Fault
+schedules are compiled to capacity-multiplier timelines by `events.py` and
+enter the scan compressed to their piecewise-constant segment snapshots
+(per-slot segment-id gathers re-expand them); ECMP spine assignments
+arrive as step-function segments precomputed by
+`events.ecmp_assign_segments` (the dead-path re-hash depends only on the
+static timeline, so its RNG stream is replayed exactly on the host).
+
+With x64 enabled the trajectory matches the NumPy backend within 1e-5
+(registry-wide parity is enforced by `tests/test_jx_parity.py`); without
+x64 it runs float32 — faster, looser tolerance.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache, partial
+from typing import List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.netsim.cc import (DCQCN_AI, DCQCN_ALPHA_G, MIN_RATE,
+                             PROBE_TIMEOUT, SPX_AI, SPX_MD, SPX_RTT_GAIN,
+                             TARGET_RTT_US)
+from repro.netsim.fabric import (AR_TEMPERATURE, ECN_QUEUE_THRESH,
+                                 JSQ_BINS, Q_CAP, FlowArrays)
+from repro.netsim.sim import SimConfig
+
+from .events import (FaultTimeline, compile_fault_timeline,
+                     ecmp_assign_segments)
+from .state import FlowBatch, NicCarry, SimCarry, init_carry
+
+_EPS = 1e-12
+
+# flipped on first dispatch; scenarios.runner consults it to decide
+# whether forking a process pool is still safe in this process
+_BACKEND_USED = False
+
+
+@dataclass(frozen=True)
+class JxConfig:
+    """Static (hashable) simulation parameters: everything `lax.scan`
+    needs resolved at trace time — sim knobs, topology shape, and the
+    `FluidFabric` constants."""
+    slots: int
+    slot_us: float
+    routing: str
+    nic: str
+    base_rtt_us: float
+    warmup_frac: float
+    record_every: int
+    sw_lb_delay_slots: int
+    n_planes: int
+    n_leaves: int
+    n_spines: int
+    n_hosts: int
+    uplink_cap: float
+    access_cap: float
+    target_rtt_us: float = TARGET_RTT_US
+    probe_timeout: int = PROBE_TIMEOUT
+    ecn_queue_thresh: float = ECN_QUEUE_THRESH
+    ar_temperature: float = AR_TEMPERATURE
+    jsq_bins: int = JSQ_BINS
+    q_cap: float = Q_CAP
+
+    @classmethod
+    def from_sim(cls, cfg: SimConfig, topo) -> "JxConfig":
+        """`topo` is a `TopologySpec` (or anything with the same shape
+        attributes and a uniform base capacity)."""
+        return cls(
+            slots=cfg.slots, slot_us=cfg.slot_us, routing=cfg.routing,
+            nic=cfg.nic, base_rtt_us=cfg.base_rtt_us,
+            warmup_frac=cfg.warmup_frac, record_every=cfg.record_every,
+            sw_lb_delay_slots=cfg.sw_lb_delay_slots(),
+            n_planes=topo.n_planes, n_leaves=topo.n_leaves,
+            n_spines=topo.n_spines, n_hosts=topo.n_hosts,
+            uplink_cap=topo.link_cap * topo.parallel_links,
+            access_cap=topo.access_cap)
+
+
+@dataclass
+class JxSimResult:
+    """Distilled run output — the fields `scenarios.runner` consumes.
+    Unlike the NumPy `SimResult` there is no dense `(T, F)` goodput
+    record; the per-flow mean and the per-slot total are accumulated
+    inside the scan instead."""
+    mean_goodput: np.ndarray     # (F,) post-warmup average
+    completion_slot: np.ndarray  # (F,) -1 = unfinished
+    total_goodput: np.ndarray    # (T_rec,) summed over flows per frame
+    util_up_last: np.ndarray     # (P, L, S)
+    groups: List[str]
+    group_of: np.ndarray
+    slot_us: float
+
+    def group_mean(self, group: str) -> float:
+        gi = self.groups.index(group)
+        return float(self.mean_goodput[self.group_of == gi].mean())
+
+
+# ---------------------------------------------------------------------------
+# NIC: plane split + control update (port of netsim.cc.NicState)
+# ---------------------------------------------------------------------------
+
+def _plane_split(cfg: JxConfig, nic: NicCarry,
+                 demand: jnp.ndarray) -> jnp.ndarray:
+    P = cfg.n_planes
+    if cfg.nic == "dcqcn":
+        w = jnp.ones_like(nic.rate) / P
+        return jnp.minimum(demand[:, None] * w, nic.rate)
+    if cfg.nic == "swlb":
+        elig = nic.eligible
+        n_up = jnp.maximum(elig.sum(1, keepdims=True), 1)
+        return jnp.where(elig, demand[:, None] / n_up, 0.0)
+    if cfg.nic in ("global", "esr"):
+        elig = nic.eligible
+        n_up = jnp.maximum(elig.sum(1, keepdims=True), 1)
+        shared = nic.rate.min(1, keepdims=True)
+        return jnp.where(elig, demand[:, None] * shared / n_up, 0.0)
+    # spx: rate-filter then weight by allowance
+    elig = nic.eligible & (nic.rate > MIN_RATE + 1e-9)
+    any_ok = elig.any(1, keepdims=True)
+    elig = jnp.where(any_ok, elig, nic.eligible)
+    w = jnp.where(elig, nic.rate, 0.0)
+    s = w.sum(1, keepdims=True)
+    w = jnp.where(s > 0, w / jnp.maximum(s, 1e-12), 1.0 / P)
+    return jnp.minimum(demand[:, None] * w,
+                       jnp.where(elig, nic.rate, 0.0))
+
+
+def _probe(cfg: JxConfig, nic: NicCarry, rate: jnp.ndarray,
+           probe_ok: jnp.ndarray, slot: jnp.ndarray) -> NicCarry:
+    miss = ~probe_ok
+    probe_miss = jnp.where(miss, nic.probe_miss + 1, 0)
+    dead = probe_miss >= cfg.probe_timeout
+    eligible, pending = nic.eligible, nic.pending_fail
+    if cfg.nic == "swlb" and cfg.sw_lb_delay_slots > 0:
+        newly = dead & eligible & (pending == 0)
+        pending = jnp.where(newly, slot + cfg.sw_lb_delay_slots, pending)
+        fire = (pending > 0) & (slot >= pending)
+        eligible = jnp.where(fire & dead, False, eligible)
+        healed = ~dead & ~eligible
+        eligible = jnp.where(healed, True, eligible)
+        pending = jnp.where(~dead, 0, pending)
+    else:
+        was = eligible
+        eligible = ~dead
+        just_back = eligible & ~was
+        rate = jnp.where(just_back, 0.5, rate)
+    rate = jnp.where(~eligible, MIN_RATE, rate)
+    return NicCarry(rate=rate, alpha=nic.alpha, probe_miss=probe_miss,
+                    eligible=eligible, pending_fail=pending)
+
+
+def _nic_update(cfg: JxConfig, nic: NicCarry, rtt: jnp.ndarray,
+                ecn: jnp.ndarray, probe_ok: jnp.ndarray,
+                slot: jnp.ndarray) -> NicCarry:
+    if cfg.nic == "dcqcn":
+        ecn_any = ecn.max(1, keepdims=True)
+        alpha = ((1 - DCQCN_ALPHA_G) * nic.alpha +
+                 DCQCN_ALPHA_G * (ecn_any > 0))
+        cut = nic.rate * (1 - alpha / 2)
+        grow = jnp.minimum(nic.rate + DCQCN_AI, 1.0)
+        rate = jnp.clip(jnp.where(ecn_any > 0, cut, grow), MIN_RATE, 1.0)
+        return nic._replace(rate=rate, alpha=alpha)
+
+    if cfg.nic in ("global", "esr"):
+        agg_ecn = ecn.max(1, keepdims=True)
+        agg_rtt = rtt.max(1, keepdims=True)
+        cut = nic.rate * SPX_MD
+        rtt_err = (agg_rtt - cfg.target_rtt_us) / cfg.target_rtt_us
+        trim = nic.rate * (1 - SPX_RTT_GAIN * jnp.clip(rtt_err, 0, 2))
+        grow = jnp.minimum(nic.rate + SPX_AI, 1.0)
+        new = jnp.where(agg_ecn > 0, cut,
+                        jnp.where(rtt_err > 0.25, trim, grow))
+        if cfg.nic == "esr":
+            new = jnp.where(agg_ecn > 0, new * 0.85, new)
+        rate = jnp.clip(new, MIN_RATE, 1.0)
+        return _probe(cfg, nic, rate, probe_ok, slot)
+
+    # spx / swlb: per-plane contexts
+    rtt_err = (rtt - cfg.target_rtt_us) / cfg.target_rtt_us
+    cut = nic.rate * (SPX_MD + (1 - SPX_MD) * jnp.clip(1 - ecn, 0, 1))
+    trim = nic.rate * (1 - SPX_RTT_GAIN * jnp.clip(rtt_err, 0, 2))
+    grow = jnp.minimum(nic.rate + SPX_AI, 1.0)
+    rate = jnp.clip(
+        jnp.where(ecn > 0, cut, jnp.where(rtt_err > 0.25, trim, grow)),
+        MIN_RATE, 1.0)
+    return _probe(cfg, nic, rate, probe_ok, slot)
+
+
+# ---------------------------------------------------------------------------
+# routing fractions (port of FluidFabric.pair_fractions / ecmp_fractions)
+# ---------------------------------------------------------------------------
+
+def _pair_fractions(cfg: JxConfig, q_up: jnp.ndarray, q_down: jnp.ndarray,
+                    up: jnp.ndarray, down: jnp.ndarray,
+                    remote_weights: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """(P, L_src, L_dst, S) spine split; 'war' folds in remote weights."""
+    cap = jnp.minimum(up[:, :, None, :],
+                      jnp.swapaxes(down, 1, 2)[:, None, :, :])
+    up_mask = cap > 1e-9
+    q = (q_up[:, :, None, :] +
+         jnp.swapaxes(q_down, 1, 2)[:, None, :, :])
+    qbin = jnp.floor(jnp.clip(q / 8.0, 0, 1 - 1e-9) * cfg.jsq_bins) + 1.0
+    w = cap
+    if remote_weights is not None:
+        w = w * jnp.swapaxes(remote_weights, 1, 2)[:, None, :, :]
+    score = qbin / jnp.maximum(w, 1e-9)
+    logit = jnp.where(up_mask, -score / cfg.ar_temperature, -1e30)
+    logit -= logit.max(-1, keepdims=True)
+    e = jnp.exp(logit)
+    sums = e.sum(-1, keepdims=True)
+    return jnp.where(sums > 0, e / jnp.maximum(sums, 1e-30), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# one slot
+# ---------------------------------------------------------------------------
+
+class _AggPerms(NamedTuple):
+    """Flow -> bucket aggregation plans.  XLA CPU scatters (and one-hot
+    matmuls) are an order of magnitude slower than gathers, so every
+    per-slot "sum flows into buckets" becomes: gather flows into a
+    `(n_buckets, width)` layout (rows padded with index F, which reads a
+    zero row) and sum the width axis.  The permutations are static per
+    run — ECMP's spine assignment is piecewise-constant, so it gets one
+    plan per capacity segment.
+
+    The ECMP plan (`ecmp_load`) stacks uplink and downlink buckets into
+    one `(n_seg, P, L*S + S*L, C)` matrix.  In float64 (parity mode) its
+    width axis is summed strictly left-to-right (flow order): those sums
+    feed the queue integrators, where a last-ulp tree-reduction
+    difference vs NumPy's sequential `np.add.at` can walk a queue across
+    an ECN threshold and fork the trajectory.  Float32 runs take the
+    fast tree reduction instead — they drift from the f64 reference at
+    ulp level regardless.  AR/WAR fractions are smooth in the loads, so
+    their aggregations tolerate tree reduction at either precision."""
+    src: jnp.ndarray        # (H, Cs)  flows by src host
+    dst: jnp.ndarray        # (H, Cd)  flows by dst host
+    pair: jnp.ndarray       # (L*L, Cp) flows by (src_leaf, dst_leaf)
+    ecmp_load: jnp.ndarray  # (n_seg, P, L*S + S*L, Cu)
+
+
+def _perm_matrix(keys: np.ndarray, n_buckets: int, width: int,
+                 pad: int) -> np.ndarray:
+    """(n_buckets, width) flow indices grouped by key, flow order
+    preserved within a bucket, padded with `pad`."""
+    perm = np.full((n_buckets, width), pad, np.int32)
+    keys = np.asarray(keys)
+    order = np.argsort(keys, kind="stable")
+    sk = keys[order]
+    counts = np.bincount(sk, minlength=n_buckets)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    ranks = np.arange(len(sk)) - starts[sk]
+    perm[sk, ranks] = order
+    return perm
+
+
+def _seg_sum(vals: jnp.ndarray, perm: jnp.ndarray) -> jnp.ndarray:
+    """vals (F, P), perm (K, C) -> (K, P) bucket sums."""
+    pad = jnp.concatenate(
+        [vals, jnp.zeros((1, vals.shape[1]), vals.dtype)], 0)
+    return pad[perm].sum(1)
+
+
+def _slot_step(cfg: JxConfig, fb: FlowBatch, pair_idx: jnp.ndarray,
+               aggs: _AggPerms, assign_segments: jnp.ndarray,
+               seg_up: jnp.ndarray, seg_down: jnp.ndarray,
+               seg_acc: jnp.ndarray, carry: SimCarry, xs):
+    # timelines are piecewise-constant, so the scan carries only the
+    # (n_seg, ...) boundary snapshots and gathers the current segment
+    t, seg = xs
+    P, L, S = cfg.n_planes, cfg.n_leaves, cfg.n_spines
+    up = seg_up[seg] * cfg.uplink_cap                     # (P, L, S)
+    down = seg_down[seg] * cfg.uplink_cap                 # (P, S, L)
+    acc = (seg_acc[seg] * cfg.access_cap).T               # (H, P)
+
+    demand = jnp.where(carry.done | (t < fb.start_slot), 0.0, fb.demand)
+    offered = _plane_split(cfg, carry.nic, demand)        # (F, P)
+    fabric_rate = jnp.where(fb.same_leaf[:, None], 0.0, offered)
+
+    # ---- link loads + per-flow path scale/queue, without any (F, P, S)
+    # intermediate: AR/WAR fractions are leaf-pair quantities, so flows
+    # aggregate to (P, L, L) before touching the spine axis; ECMP's
+    # one-hot spine choice reduces to (F, P) gathers + padded bucket sums.
+    if cfg.routing == "ecmp":
+        assign = assign_segments[seg]                     # (F, P)
+        p_iota = jnp.arange(P)[None, :].repeat(fabric_rate.shape[0], 0)
+        padT = jnp.concatenate(
+            [fabric_rate, jnp.zeros((1, P), fabric_rate.dtype)], 0).T
+        pidx = jnp.arange(P)[:, None, None]
+        g = padT[pidx, aggs.ecmp_load[seg]]               # (P, LS+SL, C)
+        if g.dtype == jnp.float64:
+            # parity mode: accumulate in flow order — see _AggPerms.
+            # fori_loop (not a Python unroll) keeps the traced graph
+            # O(1) in the bucket width for huge flow populations.
+            loads = jax.lax.fori_loop(
+                1, g.shape[2],
+                lambda c, acc: acc + jax.lax.dynamic_index_in_dim(
+                    g, c, 2, keepdims=False),
+                g[:, :, 0])
+        else:
+            # float32 production mode diverges from NumPy at ulp level
+            # regardless, so take the fast tree reduction
+            loads = g.sum(-1)
+        load_up = loads[:, :L * S].reshape(P, L, S)
+        load_down = loads[:, L * S:].reshape(P, S, L)
+    else:
+        rw = None
+        if cfg.routing == "war":
+            rw = down / jnp.maximum(down.max(axis=1, keepdims=True), 1e-9)
+        pair = _pair_fractions(cfg, carry.q_up, carry.q_down, up, down, rw)
+        rate_pair = _seg_sum(fabric_rate, aggs.pair).T.reshape(P, L, L)
+        load_up = jnp.einsum("plm,plms->pls", rate_pair, pair)
+        load_down = jnp.einsum("plm,plms->psm", rate_pair, pair)
+    load_acc_tx = _seg_sum(offered, aggs.src)             # (H, P)
+    load_acc_rx = _seg_sum(offered, aggs.dst)
+
+    # ---- bottleneck scaling ----
+    f_up = jnp.minimum(1.0, up / jnp.maximum(load_up, _EPS))
+    f_down = jnp.minimum(1.0, down / jnp.maximum(load_down, _EPS))
+    f_acc_tx = jnp.minimum(1.0, acc / jnp.maximum(load_acc_tx, _EPS))
+    f_acc_rx = jnp.minimum(1.0, acc / jnp.maximum(load_acc_rx, _EPS))
+    up_alive_tx = acc[fb.src] > _EPS                      # (F, P)
+    up_alive_rx = acc[fb.dst] > _EPS
+
+    # ---- achieved + queue delay per (flow, plane) ----
+    if cfg.routing == "ecmp":
+        scale_f = jnp.minimum(
+            f_up[p_iota, fb.src_leaf[:, None], assign],
+            f_down[p_iota, assign, fb.dst_leaf[:, None]])
+        through = fabric_rate * scale_f
+        qmean = (carry.q_up[p_iota, fb.src_leaf[:, None], assign] +
+                 carry.q_down[p_iota, assign, fb.dst_leaf[:, None]])
+    else:
+        scale_pair = jnp.minimum(
+            f_up[:, :, None, :],
+            f_down.transpose(0, 2, 1)[:, None, :, :])     # (P, L, L, S)
+        path_scale = (pair * scale_pair).sum(-1).reshape(P, L * L)
+        through = fabric_rate * path_scale[:, pair_idx].T
+        q_pair = (carry.q_up[:, :, None, :] +
+                  carry.q_down.transpose(0, 2, 1)[:, None, :, :])
+        qmean = (pair * q_pair).sum(-1).reshape(P, L * L)[:, pair_idx].T
+    local = jnp.where(fb.same_leaf[:, None], offered, 0.0)
+    acc_scale = jnp.minimum(f_acc_tx[fb.src], f_acc_rx[fb.dst])
+    achieved_pp = (through + local) * acc_scale
+    achieved_pp = jnp.where(up_alive_tx & up_alive_rx, achieved_pp, 0.0)
+    qmean = jnp.where(fb.same_leaf[:, None], 0.0, qmean)
+    rtt = cfg.base_rtt_us + qmean * cfg.slot_us * 0.5
+    ecn = jnp.where(qmean > cfg.ecn_queue_thresh,
+                    jnp.minimum(1.0, qmean / (4 * cfg.ecn_queue_thresh)),
+                    0.0)
+
+    # ---- queue evolution ----
+    q_up = jnp.clip(carry.q_up + (load_up - up) / jnp.maximum(up, _EPS),
+                    0.0, cfg.q_cap)
+    q_up = jnp.where(up <= _EPS, 0.0, q_up)
+    q_down = jnp.clip(carry.q_down + (load_down - down) /
+                      jnp.maximum(down, _EPS), 0.0, cfg.q_cap)
+    q_down = jnp.where(down <= _EPS, 0.0, q_down)
+    util = load_up / jnp.maximum(up, _EPS)
+
+    # ---- NIC control update (pre-stall rates, as in run_sim) ----
+    probe_ok = (acc[fb.src] > _EPS) & (acc[fb.dst] > _EPS)
+    nic = _nic_update(cfg, carry.nic, rtt, ecn, probe_ok, t)
+
+    # ---- packet-loss stall + completion ----
+    stalled = ((offered > 1e-9) & (achieved_pp <= 1e-9)).any(1)
+    achieved = jnp.where(stalled, 0.0, achieved_pp.sum(1))
+
+    remaining = carry.remaining - achieved
+    newly = (~carry.done) & (remaining <= 0)
+    w = jnp.maximum(offered, _EPS)
+    qdelay = (((rtt * w).sum(1) / w.sum(1)) - cfg.base_rtt_us) \
+        / cfg.slot_us
+    completion = jnp.where(
+        newly, t + jnp.ceil(qdelay).astype(carry.completion.dtype),
+        carry.completion)
+    done = carry.done | newly
+
+    # ---- post-warmup accumulation (replaces dense (T, F) recording) ----
+    r = cfg.record_every
+    n_rec = (cfg.slots + r - 1) // r
+    w0 = int(n_rec * cfg.warmup_frac)
+    rec = (t % r) == 0
+    if n_rec > w0:
+        counted = rec & ((t // r) >= w0)
+    else:
+        counted = rec
+    goodput_sum = carry.goodput_sum + jnp.where(counted, achieved, 0.0)
+
+    new_carry = SimCarry(
+        q_up=q_up, q_down=q_down, nic=nic, remaining=remaining,
+        done=done, completion=completion, goodput_sum=goodput_sum,
+        util_up=util)
+    return new_carry, achieved.sum()
+
+
+def _simulate(cfg: JxConfig, fb: FlowBatch, seg_up, seg_down, seg_acc,
+              assign_segments, aggs, seg_id):
+    carry0 = init_carry(fb, cfg.n_planes, cfg.n_leaves, cfg.n_spines)
+    pair_idx = fb.src_leaf * cfg.n_leaves + fb.dst_leaf
+    xs = (jnp.arange(cfg.slots), seg_id)
+    step = partial(_slot_step, cfg, fb, pair_idx, aggs, assign_segments,
+                   jnp.asarray(seg_up), jnp.asarray(seg_down),
+                   jnp.asarray(seg_acc))
+    carry, totals = jax.lax.scan(step, carry0, xs)
+    r = cfg.record_every
+    n_rec = (cfg.slots + r - 1) // r
+    w0 = int(n_rec * cfg.warmup_frac)
+    frames = (n_rec - w0) if n_rec > w0 else n_rec
+    return (carry.goodput_sum / frames, carry.completion, totals,
+            carry.util_up)
+
+
+@lru_cache(maxsize=None)
+def _jitted(cfg: JxConfig, batched: bool, n_shards: int = 1):
+    fn = partial(_simulate, cfg)
+    if not batched:
+        return jax.jit(fn)
+    fn = jax.vmap(fn, in_axes=(0, 0, 0, 0, 0, 0, None))
+    if n_shards == 1:
+        return jax.jit(fn)
+    # shard the batch axis over host devices: XLA CPU serializes separate
+    # executions even across devices, but one pmap launch runs its
+    # per-device shards on parallel threads — the single-process
+    # equivalent of the NumPy backend's process pool
+    return jax.pmap(fn, in_axes=(0, 0, 0, 0, 0, 0, None))
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def _prepared(compiled) -> Tuple[JxConfig, FlowArrays, FaultTimeline]:
+    spec = compiled.spec
+    cfg = JxConfig.from_sim(compiled.cfg, spec.topo)
+    fa = FlowArrays.build(compiled.flows, compiled.topo)
+    if not jax.config.jax_enable_x64:
+        finite = fa.bytes_total[np.isfinite(fa.bytes_total)]
+        if finite.size and finite.max() > 2 ** 24:
+            import warnings
+            warnings.warn(
+                f"{spec.name}: bytes_total up to {finite.max():.3g} "
+                "exceeds float32 integer resolution (2^24); remaining-"
+                "bytes tracking will stall and transfers may never "
+                "complete — enable x64 (JAX_ENABLE_X64=1) or rescale "
+                "bytes_total", stacklevel=3)
+    return cfg, fa, compile_fault_timeline(spec)
+
+
+def _seg_id(boundaries, slots: int) -> np.ndarray:
+    """(T,) index of the capacity segment governing each slot."""
+    return (np.searchsorted(np.asarray(list(boundaries)),
+                            np.arange(slots), side="right") - 1) \
+        .astype(np.int32)
+
+
+def _assign_for(cfg: JxConfig, fa: FlowArrays, tl: FaultTimeline,
+                seed: int, boundaries) -> np.ndarray:
+    if cfg.routing == "ecmp":
+        return ecmp_assign_segments(fa.src_leaf, fa.dst_leaf, tl, seed,
+                                    cfg.n_spines, boundaries,
+                                    uplink_cap=cfg.uplink_cap)
+    return np.zeros((1, len(fa), cfg.n_planes), np.int32)
+
+
+def _seg_caps(tl: FaultTimeline, boundaries
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Compress a dense timeline to its boundary snapshots
+    ((n_seg, ...) each) — the engine re-expands via `_seg_id` gathers."""
+    b = list(boundaries)
+    return tl.up[b], tl.down[b], tl.access[b]
+
+
+def _agg_widths(cfg: JxConfig, fa: FlowArrays,
+                assign: np.ndarray) -> Tuple[int, ...]:
+    """Max bucket sizes for each aggregation axis (shared across a batch
+    so the padded perm matrices stack)."""
+    def w(keys, n):
+        return max(1, int(np.bincount(keys, minlength=n).max()))
+    H, L, S, P = cfg.n_hosts, cfg.n_leaves, cfg.n_spines, cfg.n_planes
+    wu = 1
+    if cfg.routing == "ecmp":
+        for g in range(assign.shape[0]):
+            for p in range(P):
+                wu = max(wu,
+                         w(fa.src_leaf * S + assign[g][:, p], L * S),
+                         w(assign[g][:, p] * L + fa.dst_leaf, S * L))
+    return (w(fa.src, H), w(fa.dst, H),
+            w(fa.src_leaf * L + fa.dst_leaf, L * L), wu)
+
+
+def _aggs_for(cfg: JxConfig, fa: FlowArrays, assign: np.ndarray,
+              widths: Tuple[int, ...]) -> _AggPerms:
+    ws, wd, wp, wu = widths
+    H, L, S, P = cfg.n_hosts, cfg.n_leaves, cfg.n_spines, cfg.n_planes
+    F = len(fa)
+    if cfg.routing == "ecmp":
+        load = np.stack([
+            np.stack([np.concatenate([
+                _perm_matrix(fa.src_leaf * S + assign[g][:, p],
+                             L * S, wu, F),
+                _perm_matrix(assign[g][:, p] * L + fa.dst_leaf,
+                             S * L, wu, F)]) for p in range(P)])
+            for g in range(assign.shape[0])])
+    else:
+        load = np.full((1, P, 1, 1), F, np.int32)
+    return _AggPerms(
+        src=_perm_matrix(fa.src, H, ws, F),
+        dst=_perm_matrix(fa.dst, H, wd, F),
+        pair=_perm_matrix(fa.src_leaf * L + fa.dst_leaf, L * L, wp, F),
+        ecmp_load=load)
+
+
+def _wrap(cfg: JxConfig, fa: FlowArrays, out) -> JxSimResult:
+    mean_goodput, completion, totals, util = (np.asarray(o) for o in out)
+    return JxSimResult(
+        mean_goodput=mean_goodput,
+        completion_slot=completion.astype(np.int64),
+        total_goodput=totals[::cfg.record_every],
+        util_up_last=util, groups=fa.groups, group_of=fa.group,
+        slot_us=cfg.slot_us)
+
+
+def run_compiled(compiled) -> JxSimResult:
+    """Simulate one `CompiledScenario` on the JAX backend."""
+    global _BACKEND_USED
+    _BACKEND_USED = True
+    cfg, fa, tl = _prepared(compiled)
+    boundaries = tuple(tl.change_slots())
+    segs = _assign_for(cfg, fa, tl, compiled.cfg.seed, boundaries)
+    aggs = _aggs_for(cfg, fa, segs, _agg_widths(cfg, fa, segs))
+    up, down, acc = _seg_caps(tl, boundaries)
+    out = _jitted(cfg, False)(
+        FlowBatch.from_arrays(fa), up, down, acc, segs, aggs,
+        _seg_id(boundaries, cfg.slots))
+    return _wrap(cfg, fa, out)
+
+
+def dispatch_compiled_batch(points: List):
+    """Build and asynchronously dispatch one batch of structurally
+    identical `CompiledScenario`s (same scenario / routing / nic /
+    slots — only seeds differ).  Returns an opaque handle for
+    `finalize_batch`; the computation runs concurrently with whatever
+    the caller does next (JAX CPU execution is async).  With
+    `XLA_FLAGS=--xla_force_host_platform_device_count=N` the batch axis
+    is `pmap`-sharded over the N host devices (padding the batch by
+    replicating the last point if needed), keeping every core busy
+    without a process pool."""
+    global _BACKEND_USED
+    _BACKEND_USED = True
+    prepared = [_prepared(c) for c in points]
+    cfg = prepared[0][0]
+    F = len(prepared[0][1])
+    for c, (cfg_i, fa_i, _) in zip(points, prepared):
+        if cfg_i != cfg or len(fa_i) != F:
+            raise ValueError(
+                "batched points must be structurally identical "
+                f"(got {cfg_i} with {len(fa_i)} flows vs {cfg} with {F}); "
+                "group grid points by (scenario, routing, nic) first")
+    # shared segment boundaries: union of capacity-change slots, so every
+    # element's ECMP re-hash replay sees each change exactly once
+    boundaries = tuple(sorted({b for _, _, tl in prepared
+                               for b in tl.change_slots()}))
+    assigns = [_assign_for(cfg, fa, tl, c.cfg.seed, boundaries)
+               for c, (_, fa, tl) in zip(points, prepared)]
+    widths = tuple(map(max, zip(*(
+        _agg_widths(cfg, fa, a)
+        for (_, fa, _), a in zip(prepared, assigns)))))
+    aggs = [_aggs_for(cfg, fa, a, widths)
+            for (_, fa, _), a in zip(prepared, assigns)]
+    fb = FlowBatch.stack([fa for _, fa, _ in prepared])
+    caps = [_seg_caps(tl, boundaries) for _, _, tl in prepared]
+    up = np.stack([u for u, _, _ in caps])
+    down = np.stack([d for _, d, _ in caps])
+    acc = np.stack([a for _, _, a in caps])
+    seg_id = _seg_id(boundaries, cfg.slots)
+    aggs_b = _AggPerms(*(np.stack(col) for col in zip(*aggs)))
+    args = [fb, up, down, acc, np.stack(assigns), aggs_b]
+    B = len(points)
+    n_dev = len(jax.devices())
+    shards = min(B, n_dev) if n_dev > 1 and B > 1 else 1
+    if shards > 1:
+        padded = -B % shards
+
+        def shape(a):
+            if padded:
+                a = np.concatenate(
+                    [np.asarray(a),
+                     np.repeat(np.asarray(a)[-1:], padded, 0)])
+            return np.asarray(a).reshape(
+                (shards, (B + padded) // shards) + np.shape(a)[1:])
+
+        args = [jax.tree_util.tree_map(shape, a) for a in args]
+    out = _jitted(cfg, True, shards)(*args, seg_id)
+    # keep only what finalize needs — dropping the dense per-point
+    # timelines here frees O(B*T*fabric) host memory while the batch
+    # computes
+    return cfg, [fa for _, fa, _ in prepared], shards, out
+
+
+def finalize_batch(handle) -> List[JxSimResult]:
+    """Block on a `dispatch_compiled_batch` handle and unpack per-point
+    results (dropping any pmap padding)."""
+    cfg, fas, shards, out = handle
+    outs = [np.asarray(o) for o in out]
+    if shards > 1:
+        outs = [o.reshape((-1,) + o.shape[2:]) for o in outs]
+    return [_wrap(cfg, fa, [o[b] for o in outs])
+            for b, fa in enumerate(fas)]
+
+
+def run_compiled_batch(points: List) -> List[JxSimResult]:
+    """Simulate a batch of `CompiledScenario`s that share structure as
+    one batched (vmap, pmap-sharded when multiple host devices exist)
+    computation — the JAX replacement for the process-pool sweep."""
+    return finalize_batch(dispatch_compiled_batch(points))

@@ -1,0 +1,195 @@
+"""Compile `FaultSpec` schedules to dense per-slot capacity timelines.
+
+`lax.scan` cannot call the Python closures `scenarios.compile.make_events`
+builds, so the JAX engine consumes faults as data: for every slot `t` the
+timeline holds the capacity *multiplier* (relative to the pristine
+capacity) of every uplink `(T, P, L, S)`, downlink `(T, P, S, L)`, and
+access port `(T, P, H)` — exactly the state the callback-driven path
+would have left on a `LeafSpine` after `events(t)` ran (the property
+suite checks this slot-by-slot on random `FaultSpec`s).
+
+This is an independent interpretation of the `FaultSpec` semantics, not a
+replay of `make_events`; multipliers compose the same way the in-place
+topology mutations do (kills multiply, restores reset to 1).  Dynamic
+Python event callbacks remain a NumPy-backend-only feature.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.scenarios.spec import (FAULT_KINDS, FaultSpec, ScenarioSpec,
+                                  fault_planes, flap_phase)
+
+
+@dataclass(frozen=True)
+class FaultTimeline:
+    """Per-slot capacity multipliers, 1.0 = pristine.  All arrays are
+    float64 and non-negative."""
+    up: np.ndarray         # (T, P, L, S)
+    down: np.ndarray       # (T, P, S, L)
+    access: np.ndarray     # (T, P, H)
+
+    @property
+    def slots(self) -> int:
+        return self.up.shape[0]
+
+    def change_slots(self) -> List[int]:
+        """Slots (always including 0) at which any fabric (up/down/access)
+        multiplier differs from the previous slot — the only instants the
+        ECMP re-hash or routing weights can see a different fabric."""
+        out = [0]
+        for t in range(1, self.slots):
+            if (not np.array_equal(self.up[t], self.up[t - 1])
+                    or not np.array_equal(self.down[t], self.down[t - 1])
+                    or not np.array_equal(self.access[t],
+                                          self.access[t - 1])):
+                out.append(t)
+        return out
+
+
+def has_static_timeline(spec: ScenarioSpec) -> bool:
+    """True iff every fault is a `FaultSpec` of a known kind — i.e. the
+    schedule compiles to a dense timeline the JAX backend can consume."""
+    return all(isinstance(f, FaultSpec) and f.kind in FAULT_KINDS
+               for f in spec.faults)
+
+
+# ---------------------------------------------------------------------------
+# compiler
+# ---------------------------------------------------------------------------
+
+def _apply_fault(t: int, i: int, f: FaultSpec, up: np.ndarray,
+                 down: np.ndarray, access: np.ndarray,
+                 unit_rel: float, workload_seed: int) -> None:
+    """Mutate multiplier arrays in place with fault `f`'s slot-`t` effect.
+    `unit_rel` is one discrete link as a multiplier (link_cap/uplink_cap)."""
+    P = up.shape[0]
+    if f.kind == "link_kill":
+        if t == f.start_slot:
+            for p in fault_planes(f, P):
+                up[p, f.leaf, f.spine] *= (1.0 - f.frac)
+                down[p, f.spine, f.leaf] *= (1.0 - f.frac)
+        elif f.stop_slot is not None and t == f.stop_slot:
+            for p in fault_planes(f, P):
+                up[p, f.leaf, f.spine] = 1.0
+                down[p, f.spine, f.leaf] = 1.0
+    elif f.kind == "link_flap":
+        ph = flap_phase(t, f)
+        for p in fault_planes(f, P):
+            if ph == "fail":
+                up[p, f.leaf, f.spine] *= (1.0 - f.frac)
+                down[p, f.spine, f.leaf] *= (1.0 - f.frac)
+            elif ph == "restore":
+                up[p, f.leaf, f.spine] = 1.0
+                down[p, f.spine, f.leaf] = 1.0
+    elif f.kind == "access_kill":
+        if t == f.start_slot:
+            for p in fault_planes(f, P):
+                access[p, f.host] = 0.0
+        elif f.stop_slot is not None and t == f.stop_slot:
+            for p in fault_planes(f, P):
+                access[p, f.host] = 1.0
+    elif f.kind == "access_flap":
+        ph = flap_phase(t, f)
+        for p in fault_planes(f, P):
+            if ph == "fail":
+                access[p, f.host] = 0.0
+            elif ph == "restore":
+                access[p, f.host] = 1.0
+    elif f.kind == "cascade":
+        for j, s in enumerate(f.spines):
+            if t == f.start_slot + j * f.period:
+                for p in fault_planes(f, P):
+                    up[p, :, s] = 0.0
+                    down[p, s, :] = 0.0
+    elif f.kind == "straggler":
+        if t == f.start_slot:
+            for p in fault_planes(f, P):
+                access[p, f.host] = f.frac
+        elif f.stop_slot is not None and t == f.stop_slot:
+            for p in fault_planes(f, P):
+                access[p, f.host] = 1.0
+    elif f.kind == "leaf_trim":
+        if t == f.start_slot:
+            for p in fault_planes(f, P):
+                up[p, f.leaf, :] *= f.frac
+                down[p, :, f.leaf] *= f.frac
+    elif f.kind == "random_fail":
+        if t == f.start_slot:
+            # same derived stream as make_events: independent of other
+            # faults' existence and firing order
+            rng = np.random.default_rng((workload_seed, 7919, i))
+            L, S = up.shape[1], up.shape[2]
+            for p in range(P):
+                mask = rng.random((L, S)) < f.frac
+                up[p] = np.maximum(up[p] - mask * unit_rel, 0.0)
+                down[p] = np.maximum(down[p] - mask.T * unit_rel, 0.0)
+    else:                                            # pragma: no cover
+        raise ValueError(f"unknown fault kind {f.kind!r}")
+
+
+def compile_fault_timeline(spec: ScenarioSpec) -> FaultTimeline:
+    """Lower `spec.faults` to dense multiplier timelines over
+    `spec.sim.slots` slots.  Timeline[t] equals the fabric state *after*
+    the slot-`t` events fired (mirroring `run_sim`, which applies events
+    at the top of each slot)."""
+    if not has_static_timeline(spec):
+        raise ValueError(
+            f"{spec.name}: faults are not all static FaultSpecs; the JAX "
+            "backend cannot compile dynamic event callbacks")
+    topo, T = spec.topo, spec.sim.slots
+    P, L, S = topo.n_planes, topo.n_leaves, topo.n_spines
+    H = topo.n_hosts
+    up = np.ones((P, L, S))
+    down = np.ones((P, S, L))
+    access = np.ones((P, H))
+    unit_rel = topo.link_cap / topo.uplink_cap    # one discrete link
+    out_up = np.empty((T, P, L, S))
+    out_down = np.empty((T, P, S, L))
+    out_access = np.empty((T, P, H))
+    for t in range(T):
+        for i, f in enumerate(spec.faults):
+            _apply_fault(t, i, f, up, down, access, unit_rel,
+                         spec.workload_seed)
+        out_up[t] = up
+        out_down[t] = down
+        out_access[t] = access
+    return FaultTimeline(up=out_up, down=out_down, access=out_access)
+
+
+# ---------------------------------------------------------------------------
+# ECMP assignment replay
+# ---------------------------------------------------------------------------
+
+def ecmp_assign_segments(src_leaf: np.ndarray, dst_leaf: np.ndarray,
+                         timeline: FaultTimeline, seed: int,
+                         n_spines: int, boundaries: Sequence[int],
+                         uplink_cap: float = 1.0) -> np.ndarray:
+    """Replay `run_sim`'s ECMP spine assignment (initial hash + dead-path
+    re-hash) against the static capacity timeline.
+
+    The NumPy path re-checks assignments every slot but only *draws* from
+    its RNG on slots where a currently-assigned path died with an alive
+    alternative — which can only happen when fabric capacity changed.
+    Replaying the check at each capacity-change boundary therefore
+    consumes the RNG identically and yields the exact per-slot assignment
+    as a step function over the boundary segments: (n_seg, F, P) int.
+    """
+    from repro.netsim.sim import rehash_dead_assign
+
+    F = src_leaf.shape[0]
+    P = timeline.up.shape[1]
+    rng = np.random.default_rng(seed)
+    assign = rng.integers(0, n_spines, size=(F, P))
+    segments = []
+    for b in boundaries:
+        cap = np.minimum(
+            timeline.up[b][:, src_leaf, :],
+            np.swapaxes(timeline.down[b], 1, 2)[:, dst_leaf, :])  # (P, F, S)
+        cap = cap.transpose(1, 0, 2) * uplink_cap                 # (F, P, S)
+        assign = rehash_dead_assign(cap > 1e-12, assign, rng, n_spines)
+        segments.append(assign.copy())
+    return np.stack(segments).astype(np.int32)

@@ -22,6 +22,13 @@ class SimConfig:
     sw_lb_delay_ms: float = 1000.0
     seed: int = 0
     record_every: int = 1
+    backend: str = "numpy"       # 'numpy' | 'jax' (see repro.netsim.jx)
+
+    def sw_lb_delay_slots(self) -> int:
+        """swlb reaction delay in slots (0 for hardware-PLB stacks) —
+        shared by both backends so the conversion cannot drift."""
+        return (int(self.sw_lb_delay_ms * 1000 / self.slot_us)
+                if self.nic == "swlb" else 0)
 
 
 @dataclass
@@ -39,6 +46,37 @@ class SimResult:
         gi = self.groups.index(group)
         return float(self.mean_goodput[self.group_of == gi].mean())
 
+    @property
+    def total_goodput(self) -> np.ndarray:
+        """(T_rec,) goodput summed over flows — the field shared with the
+        JAX backend's `JxSimResult` (which never materializes `goodput`)."""
+        return self.goodput.sum(1)
+
+
+def rehash_dead_assign(alive: np.ndarray, assign: np.ndarray,
+                       rng: np.random.Generator, n_spines: int
+                       ) -> np.ndarray:
+    """Re-hash ECMP assignments whose path died onto a surviving spine.
+
+    `alive`: (F, P, S) path liveness; `assign`: (F, P) current spine per
+    (flow, plane).  Draws from `rng` only when some assignment is dead
+    with an alive alternative — the JAX backend's host-side replay
+    (`netsim.jx.events.ecmp_assign_segments`) shares this function so
+    both backends consume the RNG stream draw-for-draw."""
+    cur = np.take_along_axis(alive, assign[:, :, None], axis=2)[:, :, 0]
+    bad = ~cur & alive.any(-1)
+    if bad.any():
+        # deterministic re-hash: first alive spine after a seeded offset
+        off = rng.integers(0, n_spines, size=assign.shape)
+        order = (off[:, :, None] + np.arange(n_spines)[None, None]) \
+            % n_spines
+        alive_ord = np.take_along_axis(alive, order, axis=2)
+        first = np.argmax(alive_ord, axis=2)
+        new = np.take_along_axis(order, first[:, :, None],
+                                 axis=2)[:, :, 0]
+        assign = np.where(bad, new, assign)
+    return assign
+
 
 def run_sim(topo: LeafSpine, flows: List[Flow], cfg: SimConfig,
             events: Optional[Callable[[int, LeafSpine], None]] = None,
@@ -49,10 +87,8 @@ def run_sim(topo: LeafSpine, flows: List[Flow], cfg: SimConfig,
     fabric = FluidFabric(topo, base_rtt_us=cfg.base_rtt_us,
                          slot_us=cfg.slot_us)
     nic = NicState(
-        mode=cfg.nic if cfg.nic != "swlb" else "swlb",
-        n_flows=F, n_planes=P,
-        sw_lb_delay_slots=int(cfg.sw_lb_delay_ms * 1000 / cfg.slot_us)
-        if cfg.nic == "swlb" else 0)
+        mode=cfg.nic, n_flows=F, n_planes=P,
+        sw_lb_delay_slots=cfg.sw_lb_delay_slots())
 
     # ECMP static assignment: one spine per (flow, plane).  Routing
     # withdraws dead paths (slow control plane), so flows whose assigned
@@ -65,20 +101,7 @@ def run_sim(topo: LeafSpine, flows: List[Flow], cfg: SimConfig,
             topo.up[:, fa.src_leaf, :],
             np.swapaxes(topo.down, 1, 2)[:, fa.dst_leaf, :])  # (P, F, S)
         cap = cap.transpose(1, 0, 2)                          # (F, P, S)
-        alive = cap > 1e-12
-        cur = np.take_along_axis(
-            alive, assign[:, :, None], axis=2)[:, :, 0]
-        bad = ~cur & alive.any(-1)
-        if bad.any():
-            # deterministic re-hash: first alive spine after a seeded offset
-            off = rng.integers(0, S, size=assign.shape)
-            order = (off[:, :, None] + np.arange(S)[None, None]) % S
-            alive_ord = np.take_along_axis(alive, order, axis=2)
-            first = np.argmax(alive_ord, axis=2)
-            new = np.take_along_axis(order, first[:, :, None],
-                                     axis=2)[:, :, 0]
-            assign = np.where(bad, new, assign)
-        return assign
+        return rehash_dead_assign(cap > 1e-12, assign, rng, S)
     remaining = fa.bytes_total.copy()
     done = np.zeros(F, bool)
     completion = np.full(F, -1, np.int64)

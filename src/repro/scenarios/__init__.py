@@ -5,5 +5,5 @@ from .spec import (FaultSpec, ScenarioSpec, SimSpec, TenantSpec,
 from .compile import (CompiledScenario, compile_scenario, run_scenario)
 from .registry import (SCENARIOS, fig11_partial_uplink, get_scenario,
                        list_scenarios, register)
-from .runner import (ScenarioMetrics, SweepGrid, metrics_csv, run_point,
-                     sweep, sweep_many)
+from .runner import (ScenarioMetrics, SweepGrid, distill_metrics,
+                     metrics_csv, run_point, sweep, sweep_many)

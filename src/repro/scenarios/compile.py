@@ -10,7 +10,7 @@ derived per-fault stream for 'random_fail'.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -20,13 +20,13 @@ from repro.netsim.topology import LeafSpine
 from repro.netsim.workloads import all2all, bisection_pairs, ring_neighbors
 
 from .spec import (FaultSpec, ScenarioSpec, TenantSpec, WorkloadSpec,
-                   fault_transition_slots)
+                   fault_planes, fault_transition_slots, flap_phase)
 
 
 @dataclass
 class CompiledScenario:
-    """Single-use run bundle: `topo` is mutated in place by `events`,
-    so compile again (cheap) for a fresh run."""
+    """Single-use run bundle: `topo` is mutated in place by `events` on
+    the NumPy backend, so compile again (cheap) for a fresh run."""
     spec: ScenarioSpec
     topo: LeafSpine
     flows: List[Flow]
@@ -35,7 +35,17 @@ class CompiledScenario:
     tenants: Dict[str, List[int]]
     fault_slots: Tuple[Tuple[int, str], ...]   # (slot, label), sorted
 
-    def run(self) -> SimResult:
+    def run(self, backend: Optional[str] = None):
+        """Simulate.  `backend` overrides the spec's `sim.backend`;
+        'jax' lowers the fault schedule to a static timeline and runs the
+        jitted engine (lazy import keeps NumPy pool workers JAX-free)."""
+        backend = backend or self.cfg.backend
+        if backend == "jax":
+            from repro.netsim.jx.engine import run_compiled
+            return run_compiled(self)
+        if backend != "numpy":
+            raise ValueError(
+                f"unknown backend {backend!r}; expected 'numpy' or 'jax'")
         return run_sim(self.topo, self.flows, self.cfg, events=self.events)
 
 
@@ -69,6 +79,11 @@ def resolve_tenants(spec: ScenarioSpec, rng: np.random.Generator
                 hosts = hosts[:t.n_hosts]
         else:                                          # pragma: no cover
             raise ValueError(t.placement)
+        if len(set(hosts)) != len(hosts):
+            dupes = sorted({h for h in hosts if hosts.count(h) > 1})
+            raise ValueError(
+                f"{spec.name}: tenant {t.name} lists hosts {dupes} "
+                "more than once")
         clash = taken & set(hosts)
         if clash:
             raise ValueError(
@@ -127,6 +142,11 @@ def _build_workload(w: WorkloadSpec, topo: LeafSpine, hosts: List[int],
                            group=group) for d in dsts]
         return flows
     if w.kind == "pairs":
+        foreign = sorted({h for p in w.pairs for h in p} - set(hosts))
+        if foreign:
+            raise ValueError(
+                f"pairs workload for tenant {w.tenant!r} references "
+                f"hosts {foreign} outside the tenant")
         return [Flow(int(a), int(b), w.demand, w.bytes_total, group=group)
                 for a, b in w.pairs]
     raise ValueError(f"unknown workload kind {w.kind!r}")
@@ -151,20 +171,16 @@ def build_flows(spec: ScenarioSpec, topo: LeafSpine,
 # ---------------------------------------------------------------------------
 
 def _planes(f: FaultSpec, topo: LeafSpine) -> List[int]:
-    return list(range(topo.n_planes)) if f.plane < 0 else [f.plane]
+    return list(fault_planes(f, topo.n_planes))
 
 
 def _flap(t: int, f: FaultSpec, fail, restore) -> None:
-    """Shared periodic kill/restore phase logic for *_flap faults."""
-    stop = np.inf if f.stop_slot is None else f.stop_slot
-    if f.start_slot <= t < stop:
-        ph = (t - f.start_slot) % f.period
-        down = max(1, int(f.period * f.duty))
-        if ph == 0:
-            fail()
-        elif ph == down:
-            restore()
-    elif f.stop_slot is not None and t == f.stop_slot:
+    """Periodic kill/restore for *_flap faults (phase math shared with
+    the JAX timeline compiler via `spec.flap_phase`)."""
+    ph = flap_phase(t, f)
+    if ph == "fail":
+        fail()
+    elif ph == "restore":
         restore()
 
 
@@ -264,7 +280,8 @@ def compile_scenario(spec: ScenarioSpec) -> CompiledScenario:
         base_rtt_us=spec.sim.base_rtt_us,
         warmup_frac=spec.sim.warmup_frac,
         sw_lb_delay_ms=spec.sim.sw_lb_delay_ms,
-        seed=spec.sim.seed, record_every=spec.sim.record_every)
+        seed=spec.sim.seed, record_every=spec.sim.record_every,
+        backend=spec.sim.backend)
     return CompiledScenario(spec=spec, topo=topo, flows=flows, cfg=cfg,
                             events=events, tenants=tenants,
                             fault_slots=fault_slots)

@@ -17,35 +17,56 @@ Metrics (per run):
 """
 from __future__ import annotations
 
+import multiprocessing
 import os
+import sys
 from concurrent.futures import ProcessPoolExecutor
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.telemetry import symmetry_check
 
-from .compile import compile_scenario
+from .compile import CompiledScenario, compile_scenario
 from .registry import get_scenario
-from .spec import ScenarioSpec
+from .spec import NICS, ROUTINGS, ScenarioSpec
 
 
 @dataclass(frozen=True)
 class SweepGrid:
     """The cartesian run grid.  Each seed perturbs both the sim seed and
     the workload seed (placement / pairing / ECMP hashes all re-draw).
-    `routings`/`nics` of None inherit the spec's own setting."""
+    `routings`/`nics` of None inherit the spec's own setting; unknown or
+    empty values raise immediately rather than silently falling back."""
     seeds: Tuple[int, ...] = (0,)
     routings: Optional[Tuple[str, ...]] = None
     nics: Optional[Tuple[str, ...]] = None
     slots: Optional[int] = None          # override spec.sim.slots
 
     def points(self, spec: ScenarioSpec) -> List[ScenarioSpec]:
+        routings = (self.routings if self.routings is not None
+                    else (spec.sim.routing,))
+        nics = self.nics if self.nics is not None else (spec.sim.nic,)
+        if not routings or not nics:
+            raise ValueError(
+                f"{spec.name}: sweep grid has an empty "
+                f"{'routings' if not routings else 'nics'} tuple — pass "
+                "None to inherit the spec's setting")
+        for r in routings:
+            if r not in ROUTINGS:
+                raise ValueError(
+                    f"{spec.name}: unknown routing {r!r} in sweep grid; "
+                    f"known: {ROUTINGS}")
+        for n in nics:
+            if n not in NICS:
+                raise ValueError(
+                    f"{spec.name}: unknown nic {n!r} in sweep grid; "
+                    f"known: {NICS}")
         out = []
         for seed in self.seeds:
-            for routing in self.routings or (spec.sim.routing,):
-                for nic in self.nics or (spec.sim.nic,):
+            for routing in routings:
+                for nic in nics:
                     s = spec.with_sim(seed=spec.sim.seed + seed,
                                       routing=routing, nic=nic,
                                       **({"slots": self.slots}
@@ -130,10 +151,17 @@ def _recovery(total: np.ndarray, fault_slots, record_every: int,
 
 
 def run_point(spec: ScenarioSpec) -> ScenarioMetrics:
-    """Compile + simulate one grid point and distill metrics."""
+    """Compile + simulate one grid point (on `spec.sim.backend`) and
+    distill metrics."""
     c = compile_scenario(spec)
-    res = c.run()
+    return distill_metrics(spec, c, c.run())
 
+
+def distill_metrics(spec: ScenarioSpec, c: CompiledScenario,
+                    res) -> ScenarioMetrics:
+    """Shared metric distillation — `res` is a NumPy `SimResult` or a JAX
+    `JxSimResult`; both expose mean_goodput / completion_slot /
+    total_goodput / util_up_last / groups / group_of."""
     demand = np.array([f.demand for f in c.flows])
     tenant_mean: Dict[str, float] = {}
     tenant_p01: Dict[str, float] = {}
@@ -148,7 +176,7 @@ def run_point(spec: ScenarioSpec) -> ScenarioMetrics:
         d = max(float(demand[sel].mean()), 1e-12)
         norm.append(float(gp.mean()) / d)
 
-    total = res.goodput.sum(1)
+    total = np.asarray(res.total_goodput)
     denom = max(float(demand.sum()), 1e-12)
     recovery = _recovery(total / denom, c.fault_slots,
                          spec.sim.record_every, spec.sim.slots)
@@ -192,33 +220,124 @@ def _resolve(spec_or_name) -> ScenarioSpec:
 
 
 def sweep(spec_or_name, grid: Optional[SweepGrid] = None,
-          processes: Optional[int] = None) -> List[ScenarioMetrics]:
-    """Run one scenario over the grid.  `processes=0/1` forces serial;
-    None sizes the pool to min(n_points, cpus)."""
+          processes: Optional[int] = None,
+          backend: Optional[str] = None) -> List[ScenarioMetrics]:
+    """Run one scenario over the grid.  `backend=None` inherits the
+    spec's `sim.backend`.  'numpy' fans grid points out over a process
+    pool (`processes=0/1` forces serial; None sizes the pool to
+    min(n_points, cpus)); 'jax' runs each (routing, nic) group's seed
+    axis as one vmapped computation in this process — `processes` is
+    ignored."""
     spec = _resolve(spec_or_name)
     points = (grid or SweepGrid()).points(spec)
-    return _execute(points, processes)
+    return _execute(points, processes, backend)
 
 
 def sweep_many(names: Sequence, grid: Optional[SweepGrid] = None,
-               processes: Optional[int] = None) -> List[ScenarioMetrics]:
+               processes: Optional[int] = None,
+               backend: Optional[str] = None) -> List[ScenarioMetrics]:
     """Run several scenarios over one shared grid, batched through a
-    single process pool."""
+    single process pool (numpy) or per-group vmapped batches (jax).
+    `backend=None` inherits from the specs (which must agree)."""
     points: List[ScenarioSpec] = []
     g = grid or SweepGrid()
     for n in names:
         points += g.points(_resolve(n))
-    return _execute(points, processes)
+    return _execute(points, processes, backend)
 
 
-def _execute(points: List[ScenarioSpec],
-             processes: Optional[int]) -> List[ScenarioMetrics]:
+def _execute(points: List[ScenarioSpec], processes: Optional[int],
+             backend: Optional[str] = None) -> List[ScenarioMetrics]:
+    if backend is None:
+        inherited = {p.sim.backend for p in points}
+        if len(inherited) > 1:
+            raise ValueError(
+                f"sweep mixes spec backends {sorted(inherited)}; pass "
+                "backend= explicitly")
+        backend = inherited.pop() if inherited else "numpy"
+    if backend == "jax":
+        return _execute_jax(points)
+    if backend != "numpy":
+        raise ValueError(
+            f"unknown backend {backend!r}; expected 'numpy' or 'jax'")
+    # make the override symmetric: run_point honors each spec's own
+    # sim.backend, so pin it to numpy or a backend="numpy" sweep of
+    # jax-backend specs would silently still run on JAX
+    points = [replace(p, sim=replace(p.sim, backend="numpy"))
+              if p.sim.backend != "numpy" else p for p in points]
     if processes is None:
         processes = min(len(points), os.cpu_count() or 1)
     if processes <= 1 or len(points) <= 1:
         return [run_point(p) for p in points]
-    with ProcessPoolExecutor(max_workers=processes) as ex:
+    # forking a parent whose XLA backend is live (multithreaded) can
+    # deadlock the workers, so after a backend="jax" sweep ran in this
+    # process switch to the spawn family.  Merely having jax *imported*
+    # is fine — repro.core pulls it in transitively, and penalizing
+    # every NumPy sweep with spawn start-up costs would be wrong.
+    # Spawn/forkserver re-import __main__, which is impossible for
+    # stdin/heredoc programs — fall back to serial there rather than
+    # crash or risk the fork.
+    if _xla_backend_live():
+        main_file = getattr(sys.modules.get("__main__"), "__file__", None)
+        if main_file is not None and not os.path.exists(main_file):
+            return [run_point(p) for p in points]
+        methods = multiprocessing.get_all_start_methods()
+        ctx = multiprocessing.get_context(
+            "forkserver" if "forkserver" in methods else "spawn")
+    else:
+        ctx = multiprocessing.get_context()
+    with ProcessPoolExecutor(max_workers=processes, mp_context=ctx) as ex:
         return list(ex.map(run_point, points))
+
+
+def _xla_backend_live() -> bool:
+    """True iff an XLA backend (and its thread pools) was plausibly
+    created in this process — not merely `import jax`.  First line: our
+    own jax engine's dispatch flag (set on actual use, not import).
+    Second line: jax's backend cache (private, so probed defensively —
+    if jax renames it we degrade to the first check)."""
+    if getattr(sys.modules.get("repro.netsim.jx.engine"),
+               "_BACKEND_USED", False):
+        return True
+    xb = sys.modules.get("jax._src.xla_bridge")
+    return bool(getattr(xb, "_backends", None))
+
+
+def _execute_jax(points: List[ScenarioSpec]) -> List[ScenarioMetrics]:
+    """Batched single-process sweep: group grid points that share
+    structure (same scenario / routing / nic / slots — i.e. everything
+    except the seeds), run each group as one `vmap` batch, and distill
+    in the original point order.
+
+    All groups are dispatched before any is awaited (JAX CPU execution
+    is async, so host-side prep of group N+1 overlaps group N's
+    compute), and with
+    `XLA_FLAGS=--xla_force_host_platform_device_count=N` each group's
+    batch axis is pmap-sharded over the N host devices (the
+    single-process analogue of the NumPy backend's process pool)."""
+    from repro.netsim.jx.engine import (dispatch_compiled_batch,
+                                        finalize_batch)
+
+    order: List = []
+    groups: Dict = {}
+    for i, p in enumerate(points):
+        key = replace(p, sim=replace(p.sim, seed=0, backend="numpy"),
+                      workload_seed=0)
+        if key not in groups:
+            groups[key] = []
+            order.append(key)
+        groups[key].append(i)
+    dispatched = []
+    for key in order:
+        idxs = groups[key]
+        compiled = [compile_scenario(points[i]) for i in idxs]
+        dispatched.append((idxs, compiled,
+                           dispatch_compiled_batch(compiled)))
+    results: List[Optional[ScenarioMetrics]] = [None] * len(points)
+    for idxs, compiled, handle in dispatched:
+        for i, c, r in zip(idxs, compiled, finalize_batch(handle)):
+            results[i] = distill_metrics(points[i], c, r)
+    return results
 
 
 def metrics_csv(rows: Iterable[ScenarioMetrics]) -> str:

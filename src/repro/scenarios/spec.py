@@ -18,6 +18,9 @@ WORKLOAD_KINDS = ("bisection", "all2all", "allreduce", "incast",
 FAULT_KINDS = ("link_kill", "link_flap", "access_kill", "access_flap",
                "cascade", "straggler", "leaf_trim", "random_fail")
 PLACEMENTS = ("block", "interleave", "random", "remainder", "explicit")
+ROUTINGS = ("ar", "war", "ecmp")
+NICS = ("spx", "dcqcn", "global", "esr", "swlb")
+BACKENDS = ("numpy", "jax")
 
 
 @dataclass(frozen=True)
@@ -142,6 +145,7 @@ class SimSpec:
     sw_lb_delay_ms: float = 1000.0
     seed: int = 0
     record_every: int = 1
+    backend: str = "numpy"       # 'numpy' | 'jax'
 
 
 @dataclass(frozen=True)
@@ -182,6 +186,13 @@ class ScenarioSpec:
                 raise ValueError(
                     f"{self.name}: workload targets unknown tenant "
                     f"{w.tenant!r}")
+            if w.kind == "pairs":
+                bad = [p for p in w.pairs
+                       for h in p if not 0 <= h < self.topo.n_hosts]
+                if bad:
+                    raise ValueError(
+                        f"{self.name}: pairs endpoints outside "
+                        f"[0, {self.topo.n_hosts}): {bad}")
         for f in self.faults:
             if f.kind not in FAULT_KINDS:
                 raise ValueError(f"{self.name}: unknown fault {f.kind!r}")
@@ -191,12 +202,38 @@ class ScenarioSpec:
                     f"{self.name}: {f.kind} requires period > 0")
             if f.kind == "cascade" and not f.spines:
                 raise ValueError(f"{self.name}: cascade requires spines")
-        if self.sim.routing not in ("ar", "war", "ecmp"):
+        if self.sim.routing not in ROUTINGS:
             raise ValueError(
                 f"{self.name}: unknown routing {self.sim.routing!r}")
-        if self.sim.nic not in ("spx", "dcqcn", "global", "esr", "swlb"):
+        if self.sim.nic not in NICS:
             raise ValueError(f"{self.name}: unknown nic {self.sim.nic!r}")
+        if self.sim.backend not in BACKENDS:
+            raise ValueError(
+                f"{self.name}: unknown backend {self.sim.backend!r}")
         return self
+
+
+def fault_planes(f: FaultSpec, n_planes: int) -> Tuple[int, ...]:
+    """Planes a fault applies to (`plane=-1` means every plane)."""
+    return tuple(range(n_planes)) if f.plane < 0 else (f.plane,)
+
+
+def flap_phase(t: int, f: FaultSpec) -> str:
+    """'fail' | 'restore' | '' for a periodic *_flap fault at slot `t`.
+    Single source of truth for the duty/period/stop arithmetic — the
+    event-callback path (`compile.make_events`) and the JAX timeline
+    compiler (`netsim.jx.events`) must agree bit-for-bit."""
+    stop = float("inf") if f.stop_slot is None else f.stop_slot
+    if f.start_slot <= t < stop:
+        ph = (t - f.start_slot) % f.period
+        down = max(1, int(f.period * f.duty))
+        if ph == 0:
+            return "fail"
+        if ph == down:
+            return "restore"
+    elif f.stop_slot is not None and t == f.stop_slot:
+        return "restore"
+    return ""
 
 
 def fault_transition_slots(f: FaultSpec, horizon: int

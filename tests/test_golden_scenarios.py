@@ -1,0 +1,81 @@
+"""Golden-metric regression tests.
+
+`tests/golden/scenarios.json` snapshots the distilled `ScenarioMetrics`
+of every registry scenario at seed 0 (each spec's own defaults, NumPy
+backend).  Any engine, compiler, or registry change that shifts goodput,
+isolation, recovery, or tail metrics fails here — deliberately.
+
+To re-baseline after an *intentional* behavior change:
+
+    PYTHONPATH=src python -m pytest tests/test_golden_scenarios.py \
+        --update-golden
+
+then review and commit the JSON diff alongside the change that caused it.
+"""
+import json
+import math
+from pathlib import Path
+
+import pytest
+
+from repro.scenarios import get_scenario, list_scenarios, run_point
+
+GOLDEN = Path(__file__).parent / "golden" / "scenarios.json"
+# float64 ops are deterministic, but libm/SIMD exp() may differ by an
+# ulp across platforms; 1e-6 relative absorbs that without hiding
+# behavioral drift
+RTOL, ATOL = 1e-6, 1e-9
+
+
+def _snapshot(name: str) -> dict:
+    m = run_point(get_scenario(name))
+    return {
+        "mean_goodput": m.mean_goodput,
+        "tenant_mean": m.tenant_mean,
+        "tenant_p01": m.tenant_p01,
+        "tenant_p99": m.tenant_p99,
+        "isolation_index": m.isolation_index,
+        "recovery_slots": [list(r) for r in m.recovery_slots],
+        "completion_tail": (None if math.isnan(m.completion_tail)
+                            else m.completion_tail),
+        "symmetry_cv": m.symmetry_cv,
+        "symmetry_uniform": m.symmetry_uniform,
+    }
+
+
+def _assert_close(got, want, path):
+    if isinstance(want, dict):
+        assert set(got) == set(want), f"{path}: keys {set(got)}^{set(want)}"
+        for k in want:
+            _assert_close(got[k], want[k], f"{path}.{k}")
+    elif isinstance(want, list):
+        assert len(got) == len(want), f"{path}: length"
+        for i, (g, w) in enumerate(zip(got, want)):
+            _assert_close(g, w, f"{path}[{i}]")
+    elif isinstance(want, float) and not isinstance(want, bool):
+        assert got == pytest.approx(want, rel=RTOL, abs=ATOL), path
+    else:
+        assert got == want, f"{path}: {got!r} != {want!r}"
+
+
+@pytest.mark.parametrize("name", sorted(list_scenarios()))
+def test_golden_scenario(name, request):
+    got = _snapshot(name)
+    if request.config.getoption("--update-golden"):
+        data = (json.loads(GOLDEN.read_text()) if GOLDEN.exists() else {})
+        data[name] = got
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN.write_text(json.dumps(data, indent=2, sort_keys=True) +
+                          "\n")
+        pytest.skip(f"golden updated for {name}")
+    assert GOLDEN.exists(), \
+        "tests/golden/scenarios.json missing — run with --update-golden"
+    data = json.loads(GOLDEN.read_text())
+    assert name in data, f"{name} not in golden file — run --update-golden"
+    _assert_close(got, data[name], name)
+
+
+def test_golden_covers_whole_registry():
+    data = json.loads(GOLDEN.read_text())
+    assert sorted(data) == sorted(list_scenarios()), \
+        "golden file out of sync with the scenario registry"

@@ -1,0 +1,131 @@
+"""NumPy-vs-JAX backend parity.
+
+Every registry scenario compiles to a static fault timeline, so the JAX
+backend must reproduce the NumPy trajectory.  With x64 enabled the two
+engines agree within 1e-5 on mean goodput, completion slots, the total
+goodput time series, and every distilled per-tenant metric — across
+routings (ar | war | ecmp) and NIC stacks (spx | dcqcn).
+
+Fast cross-product cases run in tier-1; the full-length all-registry
+sweep and the batched-sweep equivalence run under `-m slow` (the CI
+jax-backend job includes them).
+"""
+import numpy as np
+import pytest
+from jax.experimental import enable_x64
+
+from repro.netsim.jx import compile_fault_timeline, has_static_timeline
+from repro.scenarios import (SweepGrid, compile_scenario, distill_metrics,
+                             get_scenario, list_scenarios, sweep)
+
+TOL = 1e-5
+
+
+def _run_both(spec):
+    with enable_x64():
+        ref = compile_scenario(spec).run(backend="numpy")
+        jres = compile_scenario(spec).run(backend="jax")
+    return ref, jres
+
+
+def _assert_parity(spec, ref, jres):
+    np.testing.assert_allclose(jres.mean_goodput, ref.mean_goodput,
+                               atol=TOL, rtol=TOL)
+    np.testing.assert_array_equal(jres.completion_slot,
+                                  ref.completion_slot)
+    np.testing.assert_allclose(jres.total_goodput, ref.total_goodput,
+                               atol=TOL * len(ref.mean_goodput), rtol=TOL)
+    np.testing.assert_allclose(jres.util_up_last, ref.util_up_last,
+                               atol=TOL, rtol=TOL)
+    assert jres.groups == ref.groups
+    np.testing.assert_array_equal(jres.group_of, ref.group_of)
+    c = compile_scenario(spec)
+    m_ref = distill_metrics(spec, c, ref)
+    m_jx = distill_metrics(spec, c, jres)
+    for t in m_ref.tenant_mean:
+        assert m_jx.tenant_mean[t] == pytest.approx(m_ref.tenant_mean[t],
+                                                    abs=TOL)
+        assert m_jx.tenant_p01[t] == pytest.approx(m_ref.tenant_p01[t],
+                                                   abs=TOL)
+        assert m_jx.tenant_p99[t] == pytest.approx(m_ref.tenant_p99[t],
+                                                   abs=TOL)
+    assert m_jx.isolation_index == pytest.approx(m_ref.isolation_index,
+                                                 abs=TOL)
+    assert m_jx.recovery_slots == m_ref.recovery_slots
+
+
+# ---------------------------------------------------------------------------
+# tier-1: routing x nic cross on representative scenarios (reduced slots)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("routing", ["ar", "war", "ecmp"])
+@pytest.mark.parametrize("nic", ["spx", "dcqcn", "global", "esr", "swlb"])
+def test_parity_routing_nic_cross(routing, nic):
+    spec = get_scenario("flap_during_incast").with_sim(
+        slots=160, routing=routing, nic=nic)
+    ref, jres = _run_both(spec)
+    _assert_parity(spec, ref, jres)
+
+
+def test_parity_swlb_delayed_exclusion():
+    """swlb's software-timescale plane exclusion (pending_fail firing)
+    must match: run fig12 long enough for the delayed reaction."""
+    spec = get_scenario("fig12_plane_flap").with_sim(nic="swlb",
+                                                     slots=2000)
+    ref, jres = _run_both(spec)
+    _assert_parity(spec, ref, jres)
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("fig9_victim_noise", dict(slots=120)),           # two tenants, AR
+    ("fig12_plane_flap", dict()),                     # 4 planes, probe loss
+    ("cascading_spine_loss", dict(slots=200)),        # WAR + cascade
+    ("allreduce_under_random_failures", dict()),      # finite transfers
+    ("straggler_failure_compound", dict(slots=200)),  # compound faults
+])
+def test_parity_representative(name, kw):
+    spec = get_scenario(name).with_sim(**kw) if kw else get_scenario(name)
+    ref, jres = _run_both(spec)
+    _assert_parity(spec, ref, jres)
+
+
+def test_every_registry_scenario_has_static_timeline():
+    for name in list_scenarios():
+        spec = get_scenario(name)
+        assert has_static_timeline(spec)
+        tl = compile_fault_timeline(spec)
+        assert tl.up.shape[0] == spec.sim.slots
+
+
+def test_dynamic_event_closures_rejected():
+    import dataclasses
+    spec = get_scenario("fig8_bisection")
+    bogus = dataclasses.replace(spec, faults=(lambda t, topo: None,))
+    with pytest.raises(ValueError, match="dynamic"):
+        compile_fault_timeline(bogus)
+
+
+# ---------------------------------------------------------------------------
+# slow: full-length parity over the whole registry + batched sweeps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("routing", ["ar", "war", "ecmp"])
+@pytest.mark.parametrize("nic", ["spx", "dcqcn"])
+@pytest.mark.parametrize("name", sorted(list_scenarios()))
+def test_parity_full_registry_cross(name, routing, nic):
+    """The acceptance claim verbatim: every registry scenario, full
+    length, across ar|war|ecmp x spx|dcqcn, within 1e-5 in float64."""
+    spec = get_scenario(name).with_sim(routing=routing, nic=nic)
+    ref, jres = _run_both(spec)
+    _assert_parity(spec, ref, jres)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("routing", ["ar", "ecmp"])
+def test_parity_batched_sweep_matches_serial(routing):
+    grid = SweepGrid(seeds=(0, 1, 2), routings=(routing,), slots=150)
+    with enable_x64():
+        serial = sweep("fig9_victim_noise", grid, processes=1)
+        batched = sweep("fig9_victim_noise", grid, backend="jax")
+    assert [m.to_row() for m in serial] == [m.to_row() for m in batched]

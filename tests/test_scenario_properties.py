@@ -1,0 +1,204 @@
+"""Hypothesis property tests for the scenario compiler and the JAX
+fault-timeline compiler.
+
+Invariants:
+  * `resolve_tenants` partitions the host set exactly — tenants are
+    pairwise disjoint, in range, and a trailing 'remainder' tenant makes
+    the union cover every host.
+  * `compile_fault_timeline` is consistent with the callback-driven
+    path: on random `FaultSpec` schedules the dense multiplier timeline
+    equals (slot by slot) the capacities `make_events`'s closure leaves
+    on a mutated `LeafSpine`, and multipliers are always non-negative.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; property tests skipped")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.netsim.jx.events import compile_fault_timeline  # noqa: E402
+from repro.netsim.topology import LeafSpine  # noqa: E402
+from repro.scenarios import (FaultSpec, ScenarioSpec, SimSpec,  # noqa: E402
+                             TenantSpec, TopologySpec, WorkloadSpec)
+from repro.scenarios.compile import (compile_scenario,  # noqa: E402
+                                     make_events, resolve_tenants)
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+TOPO = st.builds(
+    TopologySpec,
+    n_leaves=st.integers(2, 4), n_spines=st.integers(2, 4),
+    hosts_per_leaf=st.integers(2, 4), n_planes=st.integers(1, 3))
+
+
+# ---------------------------------------------------------------------------
+# tenant placement partitions hosts
+# ---------------------------------------------------------------------------
+
+@st.composite
+def _tenant_lists(draw):
+    """Random but overlap-free layouts: an interleave head OR a run of
+    blocks from host 0, then random tenants (which draw from the
+    still-unassigned pool, so they never clash), then a 'remainder'."""
+    topo = draw(TOPO)
+    n = topo.n_hosts
+    tenants, budget = [], n - 1     # leave >= 1 host for the remainder
+    if draw(st.booleans()):
+        stride = draw(st.integers(2, 4))
+        offset = draw(st.integers(0, stride - 1))
+        avail = len(range(offset, n, stride))
+        take = draw(st.integers(1, max(1, min(avail, budget))))
+        tenants.append(TenantSpec("iv", placement="interleave",
+                                  offset=offset, stride=stride,
+                                  n_hosts=take))
+        budget -= take
+    else:
+        offset = 0
+        for i in range(draw(st.integers(0, 2))):
+            if budget <= 0:
+                break
+            take = draw(st.integers(1, budget))
+            tenants.append(TenantSpec(f"b{i}", placement="block",
+                                      offset=offset, n_hosts=take))
+            offset += take
+            budget -= take
+    for i in range(draw(st.integers(0, 2))):
+        if budget <= 0:
+            break
+        take = draw(st.integers(1, budget))
+        tenants.append(TenantSpec(f"r{i}", placement="random",
+                                  n_hosts=take))
+        budget -= take
+    tenants.append(TenantSpec("rest", placement="remainder"))
+    return topo, tuple(tenants)
+
+
+@given(data=_tenant_lists(), seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_tenant_placements_partition_hosts(data, seed):
+    topo, tenants = data
+    spec = ScenarioSpec(
+        name="prop", topo=topo, tenants=tenants,
+        workloads=(WorkloadSpec("allreduce", tenant="rest"),),
+        workload_seed=seed)
+    placed = resolve_tenants(spec, np.random.default_rng(seed))
+    all_hosts = [h for hosts in placed.values() for h in hosts]
+    # pairwise disjoint and in range...
+    assert len(all_hosts) == len(set(all_hosts))
+    assert all(0 <= h < topo.n_hosts for h in all_hosts)
+    # ...and the trailing remainder makes it a full partition
+    assert set(all_hosts) == set(range(topo.n_hosts))
+    # declared sizes honored
+    for t in tenants:
+        if t.n_hosts is not None:
+            assert len(placed[t.name]) == t.n_hosts
+
+
+# ---------------------------------------------------------------------------
+# compiled timelines == callback-driven mutations, slot by slot
+# ---------------------------------------------------------------------------
+
+def _fault_strategy(topo: TopologySpec, slots: int):
+    planes = st.integers(-1, topo.n_planes - 1)
+    start = st.integers(0, slots - 1)
+    stop = st.one_of(st.none(), st.integers(1, slots + 10))
+    frac = st.sampled_from([0.25, 0.5, 1.0])
+    leaf = st.integers(0, topo.n_leaves - 1)
+    spine = st.integers(0, topo.n_spines - 1)
+    host = st.integers(0, topo.n_hosts - 1)
+    period = st.integers(1, slots)
+    return st.one_of(
+        st.builds(FaultSpec, kind=st.just("link_kill"), start_slot=start,
+                  stop_slot=stop, plane=planes, leaf=leaf, spine=spine,
+                  frac=frac),
+        st.builds(FaultSpec, kind=st.just("link_flap"), start_slot=start,
+                  stop_slot=stop, period=period,
+                  duty=st.sampled_from([0.25, 0.5, 0.9]), plane=planes,
+                  leaf=leaf, spine=spine, frac=frac),
+        st.builds(FaultSpec, kind=st.just("access_kill"),
+                  start_slot=start, stop_slot=stop, plane=planes,
+                  host=host),
+        st.builds(FaultSpec, kind=st.just("access_flap"),
+                  start_slot=start, stop_slot=stop, period=period,
+                  duty=st.sampled_from([0.25, 0.5]), plane=planes,
+                  host=host),
+        st.builds(FaultSpec, kind=st.just("cascade"), start_slot=start,
+                  period=period,
+                  spines=st.lists(spine, min_size=1, max_size=3,
+                                  unique=True).map(tuple),
+                  plane=planes),
+        st.builds(FaultSpec, kind=st.just("straggler"), start_slot=start,
+                  stop_slot=stop, plane=planes, host=host, frac=frac),
+        st.builds(FaultSpec, kind=st.just("leaf_trim"), start_slot=start,
+                  plane=planes, leaf=leaf, frac=frac),
+        st.builds(FaultSpec, kind=st.just("random_fail"),
+                  start_slot=start, frac=st.sampled_from([0.1, 0.5])),
+    )
+
+
+@st.composite
+def _fault_specs(draw):
+    topo = draw(TOPO)
+    slots = draw(st.integers(4, 40))
+    faults = draw(st.lists(_fault_strategy(topo, slots), min_size=0,
+                           max_size=3))
+    seed = draw(st.integers(0, 2 ** 16))
+    return ScenarioSpec(
+        name="prop_faults", topo=topo,
+        workloads=(WorkloadSpec("pairs", pairs=((0, topo.n_hosts - 1),)),),
+        faults=tuple(faults), sim=SimSpec(slots=slots),
+        workload_seed=seed).validate()
+
+
+@given(spec=_fault_specs())
+@settings(**SETTINGS)
+def test_timeline_matches_callback_mutations(spec):
+    tl = compile_fault_timeline(spec)
+    assert (tl.up >= 0).all() and (tl.down >= 0).all() \
+        and (tl.access >= 0).all()
+    events, _ = make_events(spec)
+    topo = LeafSpine(
+        n_leaves=spec.topo.n_leaves, n_spines=spec.topo.n_spines,
+        hosts_per_leaf=spec.topo.hosts_per_leaf,
+        n_planes=spec.topo.n_planes)
+    for t in range(spec.sim.slots):
+        events(t, topo)
+        np.testing.assert_allclose(
+            tl.up[t] * spec.topo.uplink_cap, topo.up, rtol=0, atol=1e-12,
+            err_msg=f"uplinks diverge at slot {t}")
+        np.testing.assert_allclose(
+            tl.down[t] * spec.topo.uplink_cap, topo.down, rtol=0,
+            atol=1e-12, err_msg=f"downlinks diverge at slot {t}")
+        np.testing.assert_allclose(
+            tl.access[t] * spec.topo.access_cap, topo.access, rtol=0,
+            atol=1e-12, err_msg=f"access diverges at slot {t}")
+
+
+@given(spec=_fault_specs())
+@settings(max_examples=15, deadline=None)
+def test_timeline_change_slots_are_sound(spec):
+    """`change_slots` must list slot 0 plus exactly the slots where the
+    fabric differs from the previous slot (the ECMP re-hash replay and
+    the batched sweep rely on this)."""
+    tl = compile_fault_timeline(spec)
+    changes = tl.change_slots()
+    assert changes[0] == 0
+    assert changes == sorted(set(changes))
+    for t in range(1, spec.sim.slots):
+        changed = not (np.array_equal(tl.up[t], tl.up[t - 1])
+                       and np.array_equal(tl.down[t], tl.down[t - 1])
+                       and np.array_equal(tl.access[t], tl.access[t - 1]))
+        assert (t in changes) == changed
+
+
+def test_compiled_scenario_tenant_partition_concrete():
+    """Non-hypothesis anchor: registry scenarios partition all hosts."""
+    from repro.scenarios import get_scenario, list_scenarios
+    for name in list_scenarios():
+        c = compile_scenario(get_scenario(name))
+        hosts = [h for hs in c.tenants.values() for h in hs]
+        assert len(hosts) == len(set(hosts))
+        assert all(0 <= h < c.spec.topo.n_hosts for h in hosts)

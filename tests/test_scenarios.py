@@ -168,6 +168,91 @@ def test_sweep_grid_shape_and_inheritance():
     assert points[0].workload_seed != points[1].workload_seed
 
 
+def test_sweep_grid_rejects_unknown_routing_and_nic():
+    spec = get_scenario("fig8_bisection")
+    with pytest.raises(ValueError, match="unknown routing 'warp'"):
+        SweepGrid(routings=("ar", "warp")).points(spec)
+    with pytest.raises(ValueError, match="unknown nic 'tcp'"):
+        SweepGrid(nics=("tcp",)).points(spec)
+
+
+def test_sweep_grid_rejects_empty_tuples():
+    # () used to silently fall back to the spec's own routing/nic —
+    # only None may inherit
+    spec = get_scenario("fig8_bisection")
+    with pytest.raises(ValueError, match="empty routings"):
+        SweepGrid(routings=()).points(spec)
+    with pytest.raises(ValueError, match="empty nics"):
+        SweepGrid(nics=()).points(spec)
+
+
+def test_pairs_endpoints_validated():
+    out_of_range = ScenarioSpec(
+        name="bad_pairs", topo=SMALL, tenants=(TenantSpec("main"),),
+        workloads=(WorkloadSpec("pairs", pairs=((0, 99),)),))
+    with pytest.raises(ValueError, match="pairs endpoints"):
+        out_of_range.validate()
+    negative = ScenarioSpec(
+        name="neg_pairs", topo=SMALL, tenants=(TenantSpec("main"),),
+        workloads=(WorkloadSpec("pairs", pairs=((0, -3),)),))
+    with pytest.raises(ValueError, match="pairs endpoints"):
+        negative.validate()
+    foreign = ScenarioSpec(
+        name="foreign_pairs", topo=SMALL,
+        tenants=(TenantSpec("a", placement="block", n_hosts=2),
+                 TenantSpec("b", placement="remainder")),
+        workloads=(WorkloadSpec("pairs", tenant="a", pairs=((0, 3),)),))
+    with pytest.raises(ValueError, match="outside the tenant"):
+        compile_scenario(foreign)
+
+
+def test_duplicate_explicit_tenant_hosts_rejected():
+    spec = ScenarioSpec(
+        name="dup_hosts", topo=SMALL,
+        tenants=(TenantSpec("a", placement="explicit", hosts=(1, 1, 2)),),
+        workloads=(WorkloadSpec("all2all", tenant="a"),))
+    with pytest.raises(ValueError, match="more than once"):
+        compile_scenario(spec)
+
+
+def test_unknown_backend_rejected():
+    spec = get_scenario("fig8_bisection").with_sim(slots=20)
+    with pytest.raises(ValueError, match="backend"):
+        spec.with_sim(backend="torch").validate()
+    with pytest.raises(ValueError, match="backend"):
+        compile_scenario(spec).run(backend="torch")
+
+
+def test_backend_field_dispatches_jax():
+    from jax.experimental import enable_x64
+    spec = get_scenario("fig12_plane_flap").with_sim(slots=80,
+                                                     backend="jax")
+    with enable_x64():   # f32 trajectories may fork at CC thresholds
+        m = run_point(spec)
+        ref = run_point(spec.with_sim(backend="numpy"))
+    assert m.mean_goodput == pytest.approx(ref.mean_goodput, abs=1e-5)
+
+
+def test_sweep_backend_override_beats_spec_backend():
+    # sweep(backend="numpy") must not silently run jax-backend specs on
+    # JAX: the engine's dispatch flag stays untouched
+    import sys
+    from repro.scenarios import sweep
+    spec = get_scenario("fig12_plane_flap").with_sim(slots=40,
+                                                     backend="jax")
+    engine = sys.modules.get("repro.netsim.jx.engine")
+    was = getattr(engine, "_BACKEND_USED", False) if engine else False
+    try:
+        if engine is not None:
+            engine._BACKEND_USED = False
+        sweep(spec, SweepGrid(seeds=(0,)), backend="numpy")
+        engine = sys.modules.get("repro.netsim.jx.engine")
+        assert not getattr(engine, "_BACKEND_USED", False)
+    finally:
+        if engine is not None:
+            engine._BACKEND_USED = was
+
+
 def test_sweep_parallel_matches_serial():
     grid = SweepGrid(seeds=(0, 1), slots=40)
     serial = sweep("multi_tenant_50_50", grid, processes=1)
