@@ -4,29 +4,25 @@ degrades non-proportionally (hash collisions on survivors + DCQCN
 overreaction).  §6.4: at 10% fabric failures SPX keeps within 3-10% of the
 capacity-proportional ideal.
 
-Setup comes from the parameterized scenario factory
-`fig11_partial_uplink(keep)` (registry entry 'fig11_degraded_leaf' is the
-canonical keep=0.5 point)."""
+The surviving-uplink fraction is a `faults` axis of the
+`fig11_static_resiliency` experiment (tuples from
+`fig11_partial_uplink(keep)`), so the whole figure is one cached grid."""
 from __future__ import annotations
 
-from repro.scenarios import fig11_partial_uplink, run_scenario
+from repro.experiments import get_experiment, run_experiment
+from repro.experiments.library import STACK_NAMES
 
 from .common import emit
 
 
 def run() -> None:
-    n_hosts_used = 48
-    for keep in (1.0, 0.75, 0.5, 0.25):
-        base = fig11_partial_uplink(keep)
-        for name, nic, routing in (("eth", "dcqcn", "ecmp"),
-                                   ("spx", "spx", "war")):
-            r = run_scenario(base.with_sim(nic=nic, routing=routing))
-            per_rank = r.mean_goodput.reshape(n_hosts_used, -1).sum(1)
-            # the degraded leaf's ranks gate the collective (§2.1)
-            gated = float(r.mean_goodput.min() * (n_hosts_used - 1))
-            emit(f"fig11.a2a.keep{int(keep * 100)}pct.{name}", 0.0,
-                 f"bw_frac={per_rank.mean():.3f},"
-                 f"cct_gated_bw={gated:.3f}")
+    rs = run_experiment(get_experiment("fig11_static_resiliency"))
+    for row in rs.rows():
+        x = row["extra"]
+        emit(f"fig11.a2a.keep{row['axis.faults']}pct."
+             f"{STACK_NAMES[row['nic']]}", 0.0,
+             f"bw_frac={x['bw_frac']:.3f},"
+             f"cct_gated_bw={x['cct_gated_bw']:.3f}")
 
 
 if __name__ == "__main__":

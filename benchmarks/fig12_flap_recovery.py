@@ -2,36 +2,25 @@
 rate in <3 ms; a software LB (reaction above the NCCL layer) needs ~1 s —
 ~400x slower.
 
-Setup comes from the scenario registry ('fig12_plane_flap'); the software
-LB curve only swaps the NIC stack and lengthens the horizon."""
+The `fig12_flap_recovery` experiment zips the NIC stack with the horizon
+and software-LB delay over the registry's 'fig12_plane_flap' scenario."""
 from __future__ import annotations
 
-import numpy as np
-
-from repro.scenarios import get_scenario, run_scenario
+from repro.experiments import get_experiment, run_experiment
+from repro.experiments.library import STACK_NAMES
 
 from .common import emit
 
 
 def run() -> None:
-    base = get_scenario("fig12_plane_flap")
-    slot_us = base.sim.slot_us
-    fail_slot = base.faults[0].start_slot
-
-    for name, nic, delay_ms, slots in (("hw_plb", "spx", 0.0, 600),
-                                       ("sw_lb", "swlb", 1000.0, 12000)):
-        r = run_scenario(base.with_sim(nic=nic, slots=slots,
-                                       sw_lb_delay_ms=delay_ms))
-        g = r.goodput[:, 0]
-        # recovery = first slot after failure with goodput >= 0.9 x the
-        # 3-plane steady state (0.75 of original line rate)
-        post = np.flatnonzero((np.arange(len(g)) > fail_slot) &
-                              (g >= 0.9 * 0.75))
-        rec_ms = ((post[0] - fail_slot) * slot_us / 1000.0
-                  if len(post) else float("inf"))
-        emit(f"fig12.flap_recovery.{name}", rec_ms * 1e3,
-             f"recovery_ms={rec_ms:.2f},steady={g[-10:].mean():.3f},"
-             f"pre_fail={g[fail_slot - 5]:.3f}")
+    rs = run_experiment(get_experiment("fig12_flap_recovery"))
+    for row in rs.rows():
+        x = row["extra"]
+        name = "hw_plb" if row["nic"] == "spx" else "sw_lb"
+        emit(f"fig12.flap_recovery.{name}", x["recovery_ms"] * 1e3,
+             f"recovery_ms={x['recovery_ms']:.2f},"
+             f"steady={x['steady']:.3f},"
+             f"pre_fail={x['pre_fail']:.3f}")
 
 
 if __name__ == "__main__":

@@ -7,94 +7,41 @@
 * message-size convergence: short bursts end before the PLB accumulates
   per-plane congestion signals (fresh CC state per burst).
 * ESR (entropy-based source routing): entangled CC+LB loops oscillate.
-"""
+
+All three sub-studies are experiments over `fig15_testbed` specs
+(`repro.experiments.library`) — the testbed's trimmed planes are
+`leaf_trim` faults, the burst pattern a `one2many` workload."""
 from __future__ import annotations
 
-import numpy as np
-
-from repro.netsim import LeafSpine, all2all, one_to_many
-from repro.netsim.fabric import Flow
-from repro.netsim.sim import SimConfig, run_sim
+from repro.experiments import get_experiment, run_experiment
+from repro.experiments.library import STACK_NAMES
 
 from .common import emit
 
 
-def _testbed(asym: bool) -> LeafSpine:
-    # 16 NICs/leaf, 4 planes of 200G ports (access 0.25 x line), leaf
-    # uplinks 16 x 200G per plane (2 spines x 8 parallel x 0.25)
-    t = LeafSpine(n_leaves=3, n_spines=2, hosts_per_leaf=16, n_planes=4,
-                  parallel_links=8, link_cap=0.25, access_cap=0.25)
-    if asym:
-        t.trim_leaf_uplinks(2, 1, 0.25)   # plane 2 / leaf 1 -> 4 links
-        t.trim_leaf_uplinks(3, 2, 0.25)   # plane 3 / leaf 2 -> 4 links
-    return t
-
-
-def _main_noise_flows(t: LeafSpine, kind: str):
-    mains, noises = [], []
-    for leaf in range(3):
-        base = leaf * 16
-        mains += list(range(base, base + 8))
-        noises += list(range(base + 8, base + 16))
-    if kind == "one2many":
-        fl = one_to_many(t, mains[:8], mains[8:], group="main")
-    else:
-        fl = all2all(t, mains, group="main")
-    fl += all2all(t, noises, group="noise")
-    return fl
-
-
 def run() -> None:
-    for kind in ("one2many", "all2all"):
-        for name, nic in (("spx", "spx"), ("globalcc", "global")):
-            for asym in (False, True):
-                t = _testbed(asym)
-                fl = _main_noise_flows(t, kind)
-                r = run_sim(t, fl, SimConfig(slots=500, nic=nic,
-                                             routing="ar", seed=8))
-                mi = r.groups.index("main")
-                flows_per_nic = 16 if kind == "one2many" else 23
-                n_nics = 8 if kind == "one2many" else 24
-                per_nic = r.mean_goodput[r.group_of == mi].reshape(
-                    n_nics, -1).sum(1)
-                tag = "asym" if asym else "base"
-                emit(f"fig15.{kind}.{name}.{tag}", 0.0,
-                     f"per_nic_bw={per_nic.mean():.3f}")
+    # --- per-plane CC vs Global CC, base vs asymmetric fabric ---
+    rs = run_experiment(get_experiment("fig15_lb_asymmetry"))
+    for row in rs.rows():
+        scen = row["axis.scenario"]           # fig15_{kind}_{base|asym}
+        kind = scen.split("_")[1]
+        tag = scen.rsplit("_", 1)[1]
+        emit(f"fig15.{kind}.{STACK_NAMES[row['nic']]}.{tag}", 0.0,
+             f"per_nic_bw={row['extra']['per_nic_bw']:.3f}")
 
     # --- message-size convergence (fresh PLB state per burst) ---
-    # ideal per-flow rate = NIC line / 16 destinations
-    per_flow = 1.0 / 16
-    for msg_slots in (5, 20, 80, 320):
-        t = _testbed(True)
-        fl = _main_noise_flows(t, "one2many")
-        warm = 150          # noise saturates the degraded planes first
-        for f in fl:
-            if f.group == "main":
-                f.bytes_total = msg_slots * per_flow
-                f.start_slot = warm
-        r = run_sim(t, fl, SimConfig(slots=8 * msg_slots + 2 * warm,
-                                     nic="spx", routing="ar", seed=9,
-                                     warmup_frac=0.0))
-        mi = r.groups.index("main")
-        comp = r.completion_slot[r.group_of == mi].astype(float)
-        comp[comp < 0] = r.goodput.shape[0]
-        comp -= warm
-        ratio = msg_slots / max(float(np.mean(comp)), 1e-9)
-        emit(f"fig15c.convergence.msg{msg_slots}slots", 0.0,
-             f"normalized_bw={min(ratio, 1.0):.3f}")
+    rs = run_experiment(get_experiment("fig15_msg_convergence"))
+    for row in rs.rows():
+        ms = row["axis.workloads[0].bytes_total"]
+        emit(f"fig15c.convergence.msg{ms}slots", 0.0,
+             f"normalized_bw={row['extra']['normalized_bw']:.3f}")
 
     # --- ESR oscillation ---
-    for name, nic in (("spx", "spx"), ("esr", "esr")):
-        t = _testbed(True)
-        fl = _main_noise_flows(t, "all2all")
-        r = run_sim(t, fl, SimConfig(slots=600, nic=nic, routing="ar",
-                                     seed=10))
-        mi = r.groups.index("main")
-        series = r.goodput[:, r.group_of == mi].sum(1)
-        tail = series[len(series) // 2:]
-        osc = float(tail.std() / max(tail.mean(), 1e-9))
-        emit(f"fig15d.esr_oscillation.{name}", 0.0,
-             f"bw_cv={osc:.3f},mean={tail.mean():.2f}")
+    rs = run_experiment(get_experiment("fig15_esr_oscillation"))
+    for row in rs.rows():
+        x = row["extra"]
+        emit(f"fig15d.esr_oscillation.{STACK_NAMES[row['nic']]}", 0.0,
+             f"bw_cv={x['bw_cv']:.3f},mean={x['mean_bw']:.2f}")
 
 
 if __name__ == "__main__":

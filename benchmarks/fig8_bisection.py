@@ -4,29 +4,27 @@ distribution and p99 latency, SPX (per-packet AR) vs ETH (ECMP+DCQCN).
 Paper: SPX p01 = 98% of line rate, p99 latency 8-9 µs; ETH median 75% with
 pairs collapsing to ~6%, p99 latency 13-22 µs.
 
-Setup comes from the scenario registry ('fig8_bisection'); only the
-NIC/routing stack varies per curve."""
+The sweep is the `fig8_bisection_stacks` experiment (registry scenario
+'fig8_bisection' x the paired NIC/routing stacks)."""
 from __future__ import annotations
 
-import numpy as np
+import time
 
-from repro.scenarios import get_scenario, run_scenario
+from repro.experiments import get_experiment, run_experiment
+from repro.experiments.library import STACK_NAMES
 
-from .common import emit, pctl, timeit
+from .common import emit
 
 
 def run() -> None:
-    base = get_scenario("fig8_bisection")
-    for name, nic, routing in (("eth", "dcqcn", "ecmp"),
-                               ("spx", "spx", "ar")):
-        spec = base.with_sim(nic=nic, routing=routing)
-        us = timeit(lambda: run_scenario(spec), iters=1, warmup=0)
-        r = run_scenario(spec)
-        gp = r.mean_goodput
-        lat = r.rtt[r.rtt.shape[0] // 2:]
-        emit(f"fig8.bisection.{name}", us,
-             f"p01_bw={pctl(gp, 0.01):.3f},median_bw={np.median(gp):.3f},"
-             f"p99_lat_us={pctl(lat, 0.99):.1f}")
+    t0 = time.perf_counter()
+    rs = run_experiment(get_experiment("fig8_bisection_stacks"))
+    us = (time.perf_counter() - t0) / max(len(rs), 1) * 1e6
+    for row in rs.rows():
+        x = row["extra"]
+        emit(f"fig8.bisection.{STACK_NAMES[row['nic']]}", us,
+             f"p01_bw={x['p01_bw']:.3f},median_bw={x['median_bw']:.3f},"
+             f"p99_lat_us={x['p99_lat_us']:.1f}")
 
 
 if __name__ == "__main__":

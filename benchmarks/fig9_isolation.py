@@ -6,57 +6,43 @@ nodes): ETH victim collapses ~80%; SPX is near-perfectly isolated.
 (Fig 10) DeepSeek-V3-proxy training step time with and without RDMA
 bisection noise: ETH degrades ~1.6x, SPX unchanged.
 
-Setups come from the scenario registry ('fig9_single_all2all',
-'fig9_victim_noise', 'fig10_victim_alone', 'fig10_victim_noise')."""
+Sweeps are the `fig9_isolation` and `fig10_step_time` experiments
+(scenario x stack grids over the registry entries)."""
 from __future__ import annotations
 
-from repro.scenarios import get_scenario, run_scenario
+from repro.experiments import get_experiment, run_experiment
+from repro.experiments.library import STACK_NAMES
 
 from .common import emit
 
-STACKS = (("eth", "dcqcn", "ecmp"), ("spx", "spx", "ar"))
-
 
 def run() -> None:
-    # --- single All2All ---
-    base = get_scenario("fig9_single_all2all")
-    for name, nic, routing in STACKS:
-        r = run_scenario(base.with_sim(nic=nic, routing=routing))
-        # collective bw is gated by the slowest flow (stragglers, §2.1)
-        gated = float(r.mean_goodput.min() * 31)
-        per_rank = r.mean_goodput.reshape(32, 31).sum(1)
-        emit(f"fig9.single_a2a.{name}", 0.0,
-             f"rank_bw_frac={per_rank.mean():.3f},"
-             f"cct_gated_bw={gated:.3f}")
-
-    # --- victim + noise: ranks interleaved across leaves (the paper's
-    # random-uniform placement), so they share uplinks ---
-    base = get_scenario("fig9_victim_noise")
-    for name, nic, routing in STACKS:
-        r = run_scenario(base.with_sim(nic=nic, routing=routing))
-        vi = r.groups.index("victim")
-        vflows = r.mean_goodput[r.group_of == vi]
-        v = vflows.reshape(16, 15).sum(1)
-        gated = float(vflows.min() * 15)
-        emit(f"fig9.victim_a2a.{name}", 0.0,
-             f"victim_bw_frac={v.mean():.3f},cct_gated_bw={gated:.3f}")
+    # --- Fig 9: single All2All ceiling + victim/noise isolation ---
+    rs = run_experiment(get_experiment("fig9_isolation"))
+    for row in rs.rows():
+        name = STACK_NAMES[row["nic"]]
+        x = row["extra"]
+        if row["axis.scenario"] == "fig9_single_all2all":
+            emit(f"fig9.single_a2a.{name}", 0.0,
+                 f"rank_bw_frac={x['rank_bw_frac']:.3f},"
+                 f"cct_gated_bw={x['cct_gated_bw']:.3f}")
+        else:
+            emit(f"fig9.victim_a2a.{name}", 0.0,
+                 f"victim_bw_frac={x['victim_bw_frac']:.3f},"
+                 f"cct_gated_bw={x['cct_gated_bw']:.3f}")
 
     # --- Fig 10: training step time under noise ---
     # step = compute + comm; comm bytes fixed, comm time = bytes / victim bw
     compute_ms, comm_ideal_ms = 400.0, 267.0   # 667 ms baseline split
-    for name, nic, routing in STACKS:
-        for noisy in (False, True):
-            scen = ("fig10_victim_noise" if noisy
-                    else "fig10_victim_alone")
-            r = run_scenario(get_scenario(scen).with_sim(nic=nic,
-                                                         routing=routing))
-            vi = r.groups.index("victim")
-            vflows = r.mean_goodput[r.group_of == vi]
-            bw = max(float(vflows.min() * 15), 1e-3)   # straggler-gated
-            step = compute_ms + comm_ideal_ms / bw
-            tag = "noise" if noisy else "alone"
-            emit(f"fig10.dsv3_step.{name}.{tag}", step * 1e3,
-                 f"step_ms={step:.0f},victim_bw={bw:.3f}")
+    rs = run_experiment(get_experiment("fig10_step_time"))
+    for row in rs.rows():
+        name = STACK_NAMES[row["nic"]]
+        bw = row["extra"]["victim_gated_bw"]   # straggler-gated
+        step = compute_ms + comm_ideal_ms / bw
+        tag = ("noise" if row["axis.scenario"] == "fig10_victim_noise"
+               else "alone")
+        emit(f"fig10.dsv3_step.{name}.{tag}", step * 1e3,
+             f"step_ms={step:.0f},victim_bw={bw:.3f}")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,13 @@
-"""Scenario grid sweeps: seeds × routing × nic over named registry
-scenarios, parallelized across processes by the scenario runner.
+"""Scenario grid sweeps: seeds × stacks over named registry scenarios,
+lowered onto `Experiment` definitions (scenario × seed axes per stack)
+with an optional on-disk run cache and ResultSet JSON output.
 
-CLI (also invoked by CI as a 2-scenario smoke):
+CLI (also invoked by CI as a cached 2-point smoke):
 
   PYTHONPATH=src python -m benchmarks.scenario_sweep \
       --scenarios multi_tenant_50_50 flap_during_incast \
-      --seeds 2 --slots 120 --processes 2
+      --seeds 2 --slots 120 --processes 2 \
+      --cache-dir /tmp/expcache --json-out sweep_resultset.json
 """
 from __future__ import annotations
 
@@ -13,7 +15,9 @@ import argparse
 import sys
 from typing import List, Optional
 
-from repro.scenarios import SweepGrid, list_scenarios, sweep_many
+from repro.experiments import (Axis, Experiment, ResultSet, RunCache,
+                               product, run_experiment)
+from repro.scenarios import list_scenarios
 
 from .common import emit, timeit
 
@@ -21,22 +25,48 @@ DEFAULT_SCENARIOS = ("multi_tenant_50_50", "flap_during_incast",
                      "cascading_spine_loss", "straggler_failure_compound")
 
 
+def stack_experiment(scenarios, nic: str, routing: str, n_seeds: int,
+                     slots: Optional[int]) -> Experiment:
+    """One stack's grid: scenario × seed, with the stack and horizon as
+    single-value axes so they land in the ResultSet coordinates."""
+    axes = [Axis("scenario", tuple(scenarios)),
+            Axis("seed", tuple(range(n_seeds))),
+            Axis("sim.nic", (nic,)),
+            Axis("sim.routing", (routing,))]
+    if slots:
+        axes.append(Axis("sim.slots", (slots,)))
+    return Experiment(name=f"scenario_sweep.{nic}.{routing}",
+                      axes=product(*axes))
+
+
 def run(scenarios=DEFAULT_SCENARIOS, n_seeds: int = 2,
         slots: Optional[int] = 200, processes: Optional[int] = None,
         stacks=(("spx", "ar"), ("dcqcn", "ecmp")),
-        backend: str = "numpy") -> None:
+        backend: str = "numpy",
+        cache_dir: Optional[str] = None,
+        json_out: Optional[str] = None) -> ResultSet:
     # the paper pairs stacks (SPX NIC + AR, DCQCN + ECMP); sweep each
     # pairing over seeds × scenarios rather than a nic × routing product
-    rows: List = []
+    cache = RunCache(cache_dir) if cache_dir else None
+    merged: Optional[ResultSet] = None
+    hits = misses = 0
 
     def _all() -> None:
+        nonlocal merged, hits, misses
         for nic, routing in stacks:
-            grid = SweepGrid(seeds=tuple(range(n_seeds)), nics=(nic,),
-                             routings=(routing,), slots=slots)
-            rows.extend(sweep_many(scenarios, grid, processes=processes,
-                                   backend=backend))
+            exp = stack_experiment(scenarios, nic, routing, n_seeds,
+                                   slots)
+            rs = run_experiment(exp, processes=processes,
+                                backend=backend, cache=cache)
+            hits += rs.cache_hits
+            misses += rs.cache_misses
+            if merged is None:
+                merged = rs
+            else:
+                merged.extend(rs)
 
     us = timeit(_all, iters=1, warmup=0)
+    rows = merged.to_metrics() if merged is not None else []
     n = max(len(rows), 1)
     for m in rows:
         emit(f"sweep.{m.scenario}.s{m.seed}.{m.nic}.{m.routing}", us / n,
@@ -45,6 +75,22 @@ def run(scenarios=DEFAULT_SCENARIOS, n_seeds: int = 2,
              f"recovery_slots={m.worst_recovery()},"
              f"sym_cv={m.symmetry_cv:.3f},"
              f"outliers={len(m.symmetry_outliers)}")
+    if cache is not None:
+        print(f"# cache: hits={hits} misses={misses}", flush=True)
+    if json_out and merged is not None:
+        with open(json_out, "w", encoding="utf-8") as f:
+            f.write(merged.to_json())
+        print(f"# resultset: {json_out} ({len(merged)} rows)",
+              flush=True)
+    return merged if merged is not None else ResultSet()
+
+
+def _parse_stack(s: str):
+    nic, sep, routing = s.partition(":")
+    if not sep or not nic or not routing:
+        raise argparse.ArgumentTypeError(
+            f"stack {s!r} must be nic:routing (e.g. spx:ar)")
+    return nic, routing
 
 
 def main(argv=None) -> None:
@@ -56,10 +102,22 @@ def main(argv=None) -> None:
     p.add_argument("--processes", type=int, default=None)
     p.add_argument("--backend", default="numpy", choices=["numpy", "jax"],
                    help="numpy: process-pool; jax: batched vmap sweeps")
+    p.add_argument("--stacks", nargs="+", type=_parse_stack,
+                   default=[("spx", "ar"), ("dcqcn", "ecmp")],
+                   metavar="NIC:ROUTING",
+                   help="paired stacks to sweep (default spx:ar "
+                        "dcqcn:ecmp)")
+    p.add_argument("--cache-dir", default=None,
+                   help="run-cache directory; re-runs serve completed "
+                        "points from cache and resume interrupted grids")
+    p.add_argument("--json-out", default=None,
+                   help="write the merged ResultSet JSON here")
     args = p.parse_args(argv)
     print("name,us_per_call,derived")
     run(tuple(args.scenarios), n_seeds=args.seeds, slots=args.slots,
-        processes=args.processes, backend=args.backend)
+        processes=args.processes, stacks=tuple(args.stacks),
+        backend=args.backend, cache_dir=args.cache_dir,
+        json_out=args.json_out)
 
 
 if __name__ == "__main__":

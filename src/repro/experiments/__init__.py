@@ -1,0 +1,12 @@
+"""Unified experiment API: arbitrary-axis sweeps over `ScenarioSpec`
+override paths, columnar `ResultSet` results, and a content-hashed run
+cache with resume (see README "Experiments")."""
+from .axes import Axis, Chain, Product, Zip, chain, product, zip_axes
+from .cache import RunCache, canonicalize, spec_key
+from .execute import execute_points
+from .experiment import (EXPERIMENTS, Experiment, ExperimentPoint,
+                         get_experiment, list_experiments,
+                         register_experiment, run_experiment)
+from .overrides import OverridePathError, apply_override, get_path
+from .resultset import ResultSet, axis_column
+from . import library  # noqa: F401  (populates the experiment registry)

@@ -1,0 +1,155 @@
+"""Grid-point executor shared by `Experiment.run` and the deprecated
+`sweep`/`sweep_many` shims.
+
+'numpy' fans points out over a process pool; 'jax' groups points that
+share structure (same spec modulo seeds) and runs each group's seed axis
+as one vmapped batch.  Either way completed rows stream back through
+`on_result(index, metrics)` as they finish — per future on the pool
+path, per finalized batch on the JAX path — which is what lets
+`run_experiment` write the cache and fill the `ResultSet` incrementally
+instead of all-or-nothing at the end.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import os
+import sys
+from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
+from dataclasses import replace
+from functools import partial
+from typing import Callable, Dict, List, Optional
+
+from repro.scenarios.compile import compile_scenario
+from repro.scenarios.runner import ScenarioMetrics, distill_metrics, run_point
+from repro.scenarios.spec import ScenarioSpec
+
+OnResult = Callable[[int, ScenarioMetrics], None]
+
+
+def execute_points(points: List[ScenarioSpec],
+                   processes: Optional[int] = None,
+                   backend: Optional[str] = None,
+                   derive: Optional[Callable] = None,
+                   on_result: Optional[OnResult] = None
+                   ) -> List[ScenarioMetrics]:
+    """Run every point; returns metrics in point order.  `backend=None`
+    inherits the specs' `sim.backend` (which must agree — mixed grids
+    are partitioned by the caller).  `on_result` fires once per point as
+    it completes, *before* the call returns."""
+    emit = on_result or (lambda i, m: None)
+    if backend is None:
+        inherited = {p.sim.backend for p in points}
+        if len(inherited) > 1:
+            raise ValueError(
+                f"sweep mixes spec backends {sorted(inherited)}; pass "
+                "backend= explicitly")
+        backend = inherited.pop() if inherited else "numpy"
+    if backend == "jax":
+        return _execute_jax(points, derive, emit)
+    if backend != "numpy":
+        raise ValueError(
+            f"unknown backend {backend!r}; expected 'numpy' or 'jax'")
+    # make the override symmetric: run_point honors each spec's own
+    # sim.backend, so pin it to numpy or a backend="numpy" sweep of
+    # jax-backend specs would silently still run on JAX
+    points = [replace(p, sim=replace(p.sim, backend="numpy"))
+              if p.sim.backend != "numpy" else p for p in points]
+    if processes is None:
+        processes = min(len(points), os.cpu_count() or 1)
+    runner = partial(run_point, derive=derive) if derive else run_point
+    if processes <= 1 or len(points) <= 1:
+        results: List[Optional[ScenarioMetrics]] = []
+        for i, p in enumerate(points):
+            m = runner(p)
+            emit(i, m)
+            results.append(m)
+        return results
+    # forking a parent whose XLA backend is live (multithreaded) can
+    # deadlock the workers, so after a backend="jax" sweep ran in this
+    # process switch to the spawn family.  Merely having jax *imported*
+    # is fine — repro.core pulls it in transitively, and penalizing
+    # every NumPy sweep with spawn start-up costs would be wrong.
+    # Spawn/forkserver re-import __main__, which is impossible for
+    # stdin/heredoc programs — fall back to serial there rather than
+    # crash or risk the fork.
+    if _xla_backend_live():
+        main_file = getattr(sys.modules.get("__main__"), "__file__", None)
+        if main_file is not None and not os.path.exists(main_file):
+            results = []
+            for i, p in enumerate(points):
+                m = runner(p)
+                emit(i, m)
+                results.append(m)
+            return results
+        methods = multiprocessing.get_all_start_methods()
+        ctx = multiprocessing.get_context(
+            "forkserver" if "forkserver" in methods else "spawn")
+    else:
+        ctx = multiprocessing.get_context()
+    out: List[Optional[ScenarioMetrics]] = [None] * len(points)
+    with ProcessPoolExecutor(max_workers=processes, mp_context=ctx) as ex:
+        futures = {ex.submit(runner, p): i for i, p in enumerate(points)}
+        pending = set(futures)
+        while pending:
+            done, pending = wait(pending, return_when=FIRST_COMPLETED)
+            for fut in done:
+                i = futures[fut]
+                m = fut.result()      # re-raises worker exceptions
+                out[i] = m
+                emit(i, m)
+    return out
+
+
+def _xla_backend_live() -> bool:
+    """True iff an XLA backend (and its thread pools) was plausibly
+    created in this process — not merely `import jax`.  First line: our
+    own jax engine's dispatch flag (set on actual use, not import).
+    Second line: jax's backend cache (private, so probed defensively —
+    if jax renames it we degrade to the first check)."""
+    if getattr(sys.modules.get("repro.netsim.jx.engine"),
+               "_BACKEND_USED", False):
+        return True
+    xb = sys.modules.get("jax._src.xla_bridge")
+    return bool(getattr(xb, "_backends", None))
+
+
+def _execute_jax(points: List[ScenarioSpec], derive: Optional[Callable],
+                 emit: OnResult) -> List[ScenarioMetrics]:
+    """Batched single-process sweep: group grid points that share
+    structure (same scenario modulo the seeds), run each group as one
+    `vmap` batch, and distill in the original point order.
+
+    All groups are dispatched before any is awaited (JAX CPU execution
+    is async, so host-side prep of group N+1 overlaps group N's
+    compute), and with
+    `XLA_FLAGS=--xla_force_host_platform_device_count=N` each group's
+    batch axis is pmap-sharded over the N host devices (the
+    single-process analogue of the NumPy backend's process pool).
+    Completed rows stream out per finalized group."""
+    from repro.netsim.jx.engine import (dispatch_compiled_batch,
+                                        finalize_batch)
+
+    order: List = []
+    groups: Dict = {}
+    for i, p in enumerate(points):
+        key = replace(p, sim=replace(p.sim, seed=0, backend="numpy"),
+                      workload_seed=0)
+        if key not in groups:
+            groups[key] = []
+            order.append(key)
+        groups[key].append(i)
+    dispatched = []
+    for key in order:
+        idxs = groups[key]
+        compiled = [compile_scenario(points[i]) for i in idxs]
+        dispatched.append((idxs, compiled,
+                           dispatch_compiled_batch(compiled)))
+    results: List[Optional[ScenarioMetrics]] = [None] * len(points)
+    for idxs, compiled, handle in dispatched:
+        for i, c, r in zip(idxs, compiled, finalize_batch(handle)):
+            m = distill_metrics(points[i], c, r)
+            if derive is not None:
+                m.extra.update(derive(points[i], c, r))
+            results[i] = m
+            emit(i, m)
+    return results

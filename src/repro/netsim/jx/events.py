@@ -123,10 +123,20 @@ def _apply_fault(t: int, i: int, f: FaultSpec, up: np.ndarray,
             # faults' existence and firing order
             rng = np.random.default_rng((workload_seed, 7919, i))
             L, S = up.shape[1], up.shape[2]
-            for p in range(P):
-                mask = rng.random((L, S)) < f.frac
-                up[p] = np.maximum(up[p] - mask * unit_rel, 0.0)
-                down[p] = np.maximum(down[p] - mask.T * unit_rel, 0.0)
+            if f.count:
+                # exact-k mode mirrors fail_uplink's multiplicative
+                # degradation, draw for draw
+                for p in fault_planes(f, P):
+                    for _ in range(f.count):
+                        leaf = int(rng.integers(L))
+                        spine = int(rng.integers(S))
+                        up[p, leaf, spine] *= (1.0 - f.frac)
+                        down[p, spine, leaf] *= (1.0 - f.frac)
+            else:
+                for p in range(P):
+                    mask = rng.random((L, S)) < f.frac
+                    up[p] = np.maximum(up[p] - mask * unit_rel, 0.0)
+                    down[p] = np.maximum(down[p] - mask.T * unit_rel, 0.0)
     else:                                            # pragma: no cover
         raise ValueError(f"unknown fault kind {f.kind!r}")
 

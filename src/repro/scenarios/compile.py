@@ -17,7 +17,8 @@ import numpy as np
 from repro.netsim.fabric import Flow
 from repro.netsim.sim import SimConfig, SimResult, run_sim
 from repro.netsim.topology import LeafSpine
-from repro.netsim.workloads import all2all, bisection_pairs, ring_neighbors
+from repro.netsim.workloads import (all2all, bisection_pairs, one_to_many,
+                                    ring_neighbors)
 
 from .spec import (FaultSpec, ScenarioSpec, TenantSpec, WorkloadSpec,
                    fault_planes, fault_transition_slots, flap_phase)
@@ -141,6 +142,17 @@ def _build_workload(w: WorkloadSpec, topo: LeafSpine, hosts: List[int],
             flows += [Flow(int(h), int(d), w.demand, w.bytes_total,
                            group=group) for d in dsts]
         return flows
+    if w.kind == "one2many":
+        srcs, dsts = hosts[:w.srcs], hosts[w.srcs:]
+        if not dsts:
+            raise ValueError(
+                f"one2many workload for tenant {w.tenant!r}: srcs="
+                f"{w.srcs} leaves no destination hosts")
+        flows = one_to_many(topo, srcs, dsts, group=group,
+                            bytes_per_flow=w.bytes_total)
+        for f in flows:
+            f.demand *= w.demand
+        return flows
     if w.kind == "pairs":
         foreign = sorted({h for p in w.pairs for h in p} - set(hosts))
         if foreign:
@@ -246,8 +258,18 @@ def make_events(spec: ScenarioSpec
                         topo.trim_leaf_uplinks(p, f.leaf, f.frac)
             elif f.kind == "random_fail":
                 if t == f.start_slot:
-                    topo.random_link_failures(
-                        np.random.default_rng(fail_seeds[i]), f.frac)
+                    rng = np.random.default_rng(fail_seeds[i])
+                    if f.count:
+                        # exact-k mode: `count` uplink draws per plane
+                        # (repeats compound, like the Fig 14a proxy)
+                        for p in _planes(f, topo):
+                            for _ in range(f.count):
+                                topo.fail_uplink(
+                                    p, int(rng.integers(topo.n_leaves)),
+                                    int(rng.integers(topo.n_spines)),
+                                    f.frac)
+                    else:
+                        topo.random_link_failures(rng, f.frac)
 
     slots = sorted(
         {sl for f in faults

@@ -1,7 +1,6 @@
-"""Batched scenario execution: (seed × routing × nic) grids, parallelized
-across processes, each run distilled into one `ScenarioMetrics` record.
+"""Scenario execution and metric distillation.
 
-Metrics (per run):
+One grid point -> one `ScenarioMetrics` record:
   * per-tenant goodput mean / p01 / p99 across the tenant's flows
     (post-warmup, normalized to line rate; p01 is the straggler tail
     that gates collectives, p99 the best-flow upper tail);
@@ -14,15 +13,16 @@ Metrics (per run):
   * §5.1 symmetry check on final uplink utilization via
     `core.telemetry.symmetry_check` — non-uniform planes and outlier
     spines are flagged automatically.
+
+Batched execution lives in `repro.experiments`: the `Experiment` API
+sweeps arbitrary spec axes into a columnar `ResultSet` with an on-disk
+run cache.  The (seed × routing × nic) `sweep`/`sweep_many` entry points
+kept here are thin shims over that executor for backward compatibility.
 """
 from __future__ import annotations
 
-import multiprocessing
-import os
-import sys
-from concurrent.futures import ProcessPoolExecutor
-from dataclasses import dataclass, field, replace
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -76,6 +76,66 @@ class SweepGrid:
         return out
 
 
+# ---------------------------------------------------------------------------
+# metric field table — the single source of truth for every serialization
+# of a ScenarioMetrics record.  `kind` drives typed (de)serialization in
+# `repro.experiments.resultset`; `value` extracts the column value.
+# Names double as the legacy CSV header and the ResultSet column names.
+# ---------------------------------------------------------------------------
+
+METRIC_FIELDS: Tuple[Tuple[str, str, Callable], ...] = (
+    ("scenario",             "str",   lambda m: m.scenario),
+    ("seed",                 "int",   lambda m: m.seed),
+    ("routing",              "str",   lambda m: m.routing),
+    ("nic",                  "str",   lambda m: m.nic),
+    ("mean_goodput",         "float", lambda m: m.mean_goodput),
+    ("isolation_index",      "float", lambda m: m.isolation_index),
+    ("completion_tail",      "float", lambda m: m.completion_tail),
+    ("symmetry_cv",          "float", lambda m: m.symmetry_cv),
+    ("worst_recovery_slots", "int",   lambda m: m.worst_recovery()),
+    ("symmetry_uniform",     "bool",  lambda m: m.symmetry_uniform),
+    ("tenant_mean",          "json",  lambda m: m.tenant_mean),
+    ("tenant_p01",           "json",  lambda m: m.tenant_p01),
+    ("tenant_p99",           "json",  lambda m: m.tenant_p99),
+    ("recovery_slots",       "json",  lambda m: m.recovery_slots),
+    ("symmetry_outliers",    "json",  lambda m: m.symmetry_outliers),
+    ("extra",                "json",  lambda m: m.extra),
+)
+
+METRIC_KINDS: Dict[str, str] = {n: k for n, k, _ in METRIC_FIELDS}
+_METRIC_VALUE: Dict[str, Callable] = {n: v for n, _, v in METRIC_FIELDS}
+
+
+def metric_value(m: "ScenarioMetrics", name: str):
+    """Column value of one metric field (see `METRIC_FIELDS`)."""
+    return _METRIC_VALUE[name](m)
+
+
+def _fmt_tenants(m: "ScenarioMetrics") -> str:
+    return ";".join(f"{k}={v:.3f}" for k, v in sorted(m.tenant_mean.items()))
+
+
+def _fmt_tail(m: "ScenarioMetrics") -> str:
+    return ("nan" if np.isnan(m.completion_tail)
+            else f"{m.completion_tail:.2f}")
+
+
+# legacy flat-CSV view (`metrics_csv`): column -> cell formatter.  Header
+# and rows both derive from this one table.
+_CSV_COLUMNS: Tuple[Tuple[str, Callable[["ScenarioMetrics"], str]], ...] = (
+    ("scenario",             lambda m: m.scenario),
+    ("seed",                 lambda m: str(m.seed)),
+    ("routing",              lambda m: m.routing),
+    ("nic",                  lambda m: m.nic),
+    ("mean_goodput",         lambda m: f"{m.mean_goodput:.4f}"),
+    ("isolation_index",      lambda m: f"{m.isolation_index:.4f}"),
+    ("completion_tail",      _fmt_tail),
+    ("symmetry_cv",          lambda m: f"{m.symmetry_cv:.4f}"),
+    ("worst_recovery_slots", lambda m: str(m.worst_recovery())),
+    ("tenants",              _fmt_tenants),
+)
+
+
 @dataclass
 class ScenarioMetrics:
     scenario: str
@@ -94,9 +154,7 @@ class ScenarioMetrics:
     symmetry_outliers: Tuple[Tuple[int, int], ...]    # (plane, spine)
     extra: Dict[str, float] = field(default_factory=dict)
 
-    CSV_FIELDS = ("scenario", "seed", "routing", "nic", "mean_goodput",
-                  "isolation_index", "completion_tail", "symmetry_cv",
-                  "worst_recovery_slots", "tenants")
+    CSV_FIELDS = tuple(name for name, _ in _CSV_COLUMNS)
 
     @staticmethod
     def csv_header() -> str:
@@ -107,14 +165,47 @@ class ScenarioMetrics:
         return max(recs) if recs else 0
 
     def to_row(self) -> str:
-        tenants = ";".join(f"{k}={v:.3f}"
-                           for k, v in sorted(self.tenant_mean.items()))
-        ct = "nan" if np.isnan(self.completion_tail) \
-            else f"{self.completion_tail:.2f}"
-        return (f"{self.scenario},{self.seed},{self.routing},{self.nic},"
-                f"{self.mean_goodput:.4f},{self.isolation_index:.4f},"
-                f"{ct},{self.symmetry_cv:.4f},"
-                f"{self.worst_recovery()},{tenants}")
+        return ",".join(fmt(self) for _, fmt in _CSV_COLUMNS)
+
+    # ---- lossless dict round-trip (run cache / ResultSet JSON) ----------
+    def to_dict(self) -> Dict:
+        return {
+            "scenario": self.scenario, "seed": int(self.seed),
+            "routing": self.routing, "nic": self.nic,
+            "mean_goodput": float(self.mean_goodput),
+            "tenant_mean": dict(self.tenant_mean),
+            "tenant_p01": dict(self.tenant_p01),
+            "tenant_p99": dict(self.tenant_p99),
+            "isolation_index": float(self.isolation_index),
+            "recovery_slots": [list(r) for r in self.recovery_slots],
+            "completion_tail": float(self.completion_tail),
+            "symmetry_cv": float(self.symmetry_cv),
+            "symmetry_uniform": bool(self.symmetry_uniform),
+            "symmetry_outliers": [list(o) for o in self.symmetry_outliers],
+            "extra": dict(self.extra),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ScenarioMetrics":
+        return cls(
+            scenario=str(d["scenario"]), seed=int(d["seed"]),
+            routing=str(d["routing"]), nic=str(d["nic"]),
+            mean_goodput=float(d["mean_goodput"]),
+            tenant_mean={str(k): float(v)
+                         for k, v in d["tenant_mean"].items()},
+            tenant_p01={str(k): float(v)
+                        for k, v in d["tenant_p01"].items()},
+            tenant_p99={str(k): float(v)
+                        for k, v in d["tenant_p99"].items()},
+            isolation_index=float(d["isolation_index"]),
+            recovery_slots=tuple((int(s), str(l), int(r))
+                                 for s, l, r in d["recovery_slots"]),
+            completion_tail=float(d["completion_tail"]),
+            symmetry_cv=float(d["symmetry_cv"]),
+            symmetry_uniform=bool(d["symmetry_uniform"]),
+            symmetry_outliers=tuple((int(p), int(s))
+                                    for p, s in d["symmetry_outliers"]),
+            extra={str(k): v for k, v in d.get("extra", {}).items()})
 
 
 # ---------------------------------------------------------------------------
@@ -150,11 +241,18 @@ def _recovery(total: np.ndarray, fault_slots, record_every: int,
     return tuple(out)
 
 
-def run_point(spec: ScenarioSpec) -> ScenarioMetrics:
+def run_point(spec: ScenarioSpec,
+              derive: Optional[Callable] = None) -> ScenarioMetrics:
     """Compile + simulate one grid point (on `spec.sim.backend`) and
-    distill metrics."""
+    distill metrics.  `derive(spec, compiled, result) -> dict` computes
+    per-run `extra` metrics from the raw simulation result (it must be a
+    picklable module-level function so process-pool sweeps can ship it)."""
     c = compile_scenario(spec)
-    return distill_metrics(spec, c, c.run())
+    res = c.run()
+    m = distill_metrics(spec, c, res)
+    if derive is not None:
+        m.extra.update(derive(spec, c, res))
+    return m
 
 
 def distill_metrics(spec: ScenarioSpec, c: CompiledScenario,
@@ -210,7 +308,7 @@ def distill_metrics(spec: ScenarioSpec, c: CompiledScenario,
 
 
 # ---------------------------------------------------------------------------
-# sweeps
+# sweeps — deprecated shims over repro.experiments.execute
 # ---------------------------------------------------------------------------
 
 def _resolve(spec_or_name) -> ScenarioSpec:
@@ -222,124 +320,36 @@ def _resolve(spec_or_name) -> ScenarioSpec:
 def sweep(spec_or_name, grid: Optional[SweepGrid] = None,
           processes: Optional[int] = None,
           backend: Optional[str] = None) -> List[ScenarioMetrics]:
-    """Run one scenario over the grid.  `backend=None` inherits the
-    spec's `sim.backend`.  'numpy' fans grid points out over a process
-    pool (`processes=0/1` forces serial; None sizes the pool to
-    min(n_points, cpus)); 'jax' runs each (routing, nic) group's seed
-    axis as one vmapped computation in this process — `processes` is
-    ignored."""
+    """Run one scenario over a (seed × routing × nic) grid.
+
+    Deprecated shim: lowers onto `repro.experiments.execute_points` (the
+    `Experiment` API's executor) — same process-pool / grouped-vmap
+    dispatch, same row order.  Prefer `repro.experiments.Experiment`,
+    which also sweeps arbitrary spec axes, caches, and resumes."""
+    from repro.experiments.execute import execute_points
     spec = _resolve(spec_or_name)
     points = (grid or SweepGrid()).points(spec)
-    return _execute(points, processes, backend)
+    return execute_points(points, processes=processes, backend=backend)
 
 
 def sweep_many(names: Sequence, grid: Optional[SweepGrid] = None,
                processes: Optional[int] = None,
                backend: Optional[str] = None) -> List[ScenarioMetrics]:
-    """Run several scenarios over one shared grid, batched through a
-    single process pool (numpy) or per-group vmapped batches (jax).
-    `backend=None` inherits from the specs (which must agree)."""
+    """Run several scenarios over one shared grid.
+
+    Deprecated shim over `repro.experiments.execute_points` (use an
+    `Experiment` with a `scenario` axis instead); kept because the grid
+    batches through a single process pool / vmap dispatch either way."""
+    from repro.experiments.execute import execute_points
     points: List[ScenarioSpec] = []
     g = grid or SweepGrid()
     for n in names:
         points += g.points(_resolve(n))
-    return _execute(points, processes, backend)
-
-
-def _execute(points: List[ScenarioSpec], processes: Optional[int],
-             backend: Optional[str] = None) -> List[ScenarioMetrics]:
-    if backend is None:
-        inherited = {p.sim.backend for p in points}
-        if len(inherited) > 1:
-            raise ValueError(
-                f"sweep mixes spec backends {sorted(inherited)}; pass "
-                "backend= explicitly")
-        backend = inherited.pop() if inherited else "numpy"
-    if backend == "jax":
-        return _execute_jax(points)
-    if backend != "numpy":
-        raise ValueError(
-            f"unknown backend {backend!r}; expected 'numpy' or 'jax'")
-    # make the override symmetric: run_point honors each spec's own
-    # sim.backend, so pin it to numpy or a backend="numpy" sweep of
-    # jax-backend specs would silently still run on JAX
-    points = [replace(p, sim=replace(p.sim, backend="numpy"))
-              if p.sim.backend != "numpy" else p for p in points]
-    if processes is None:
-        processes = min(len(points), os.cpu_count() or 1)
-    if processes <= 1 or len(points) <= 1:
-        return [run_point(p) for p in points]
-    # forking a parent whose XLA backend is live (multithreaded) can
-    # deadlock the workers, so after a backend="jax" sweep ran in this
-    # process switch to the spawn family.  Merely having jax *imported*
-    # is fine — repro.core pulls it in transitively, and penalizing
-    # every NumPy sweep with spawn start-up costs would be wrong.
-    # Spawn/forkserver re-import __main__, which is impossible for
-    # stdin/heredoc programs — fall back to serial there rather than
-    # crash or risk the fork.
-    if _xla_backend_live():
-        main_file = getattr(sys.modules.get("__main__"), "__file__", None)
-        if main_file is not None and not os.path.exists(main_file):
-            return [run_point(p) for p in points]
-        methods = multiprocessing.get_all_start_methods()
-        ctx = multiprocessing.get_context(
-            "forkserver" if "forkserver" in methods else "spawn")
-    else:
-        ctx = multiprocessing.get_context()
-    with ProcessPoolExecutor(max_workers=processes, mp_context=ctx) as ex:
-        return list(ex.map(run_point, points))
-
-
-def _xla_backend_live() -> bool:
-    """True iff an XLA backend (and its thread pools) was plausibly
-    created in this process — not merely `import jax`.  First line: our
-    own jax engine's dispatch flag (set on actual use, not import).
-    Second line: jax's backend cache (private, so probed defensively —
-    if jax renames it we degrade to the first check)."""
-    if getattr(sys.modules.get("repro.netsim.jx.engine"),
-               "_BACKEND_USED", False):
-        return True
-    xb = sys.modules.get("jax._src.xla_bridge")
-    return bool(getattr(xb, "_backends", None))
-
-
-def _execute_jax(points: List[ScenarioSpec]) -> List[ScenarioMetrics]:
-    """Batched single-process sweep: group grid points that share
-    structure (same scenario / routing / nic / slots — i.e. everything
-    except the seeds), run each group as one `vmap` batch, and distill
-    in the original point order.
-
-    All groups are dispatched before any is awaited (JAX CPU execution
-    is async, so host-side prep of group N+1 overlaps group N's
-    compute), and with
-    `XLA_FLAGS=--xla_force_host_platform_device_count=N` each group's
-    batch axis is pmap-sharded over the N host devices (the
-    single-process analogue of the NumPy backend's process pool)."""
-    from repro.netsim.jx.engine import (dispatch_compiled_batch,
-                                        finalize_batch)
-
-    order: List = []
-    groups: Dict = {}
-    for i, p in enumerate(points):
-        key = replace(p, sim=replace(p.sim, seed=0, backend="numpy"),
-                      workload_seed=0)
-        if key not in groups:
-            groups[key] = []
-            order.append(key)
-        groups[key].append(i)
-    dispatched = []
-    for key in order:
-        idxs = groups[key]
-        compiled = [compile_scenario(points[i]) for i in idxs]
-        dispatched.append((idxs, compiled,
-                           dispatch_compiled_batch(compiled)))
-    results: List[Optional[ScenarioMetrics]] = [None] * len(points)
-    for idxs, compiled, handle in dispatched:
-        for i, c, r in zip(idxs, compiled, finalize_batch(handle)):
-            results[i] = distill_metrics(points[i], c, r)
-    return results
+    return execute_points(points, processes=processes, backend=backend)
 
 
 def metrics_csv(rows: Iterable[ScenarioMetrics]) -> str:
+    """Legacy flat CSV (see `_CSV_COLUMNS`).  `ResultSet.to_csv` is the
+    lossless replacement."""
     return "\n".join([ScenarioMetrics.csv_header()] +
                      [m.to_row() for m in rows])

@@ -14,7 +14,7 @@ from dataclasses import dataclass, field, replace
 from typing import Optional, Tuple
 
 WORKLOAD_KINDS = ("bisection", "all2all", "allreduce", "incast",
-                  "permutation", "storage", "pairs")
+                  "permutation", "storage", "pairs", "one2many")
 FAULT_KINDS = ("link_kill", "link_flap", "access_kill", "access_flap",
                "cascade", "straggler", "leaf_trim", "random_fail")
 PLACEMENTS = ("block", "interleave", "random", "remainder", "explicit")
@@ -78,6 +78,9 @@ class WorkloadSpec:
       'storage'     — low-rate background: each host to `fanout` random
                       peers (checkpoint/dataset traffic proxy).
       'pairs'       — explicit (src, dst) list.
+      'one2many'    — the tenant's first `srcs` hosts each stream to
+                      every remaining host, per-flow demand
+                      `demand / n_dsts` (Fig 15's burst pattern).
 
     `demand` scales the builder's native per-flow rate ('incast',
     'permutation', 'storage', 'pairs' use it directly as the per-flow
@@ -92,6 +95,7 @@ class WorkloadSpec:
     start_slot: int = 0
     sinks: int = 1                       # incast
     fanout: int = 2                      # storage
+    srcs: int = 1                        # one2many
     pairs: Tuple[Tuple[int, int], ...] = ()
     group: Optional[str] = None          # metric group; default = tenant
 
@@ -115,8 +119,13 @@ class FaultSpec:
                       `start_slot` and `stop_slot` (slow-rank injection).
       'leaf_trim'   — leaf uplink capacity scaled to `frac` at
                       `start_slot` (Fig 16 consolidation).
-      'random_fail' — uniform random fabric link failures of fraction
-                      `frac` at `start_slot` (Fig 1c / §6.4).
+      'random_fail' — random fabric link failures at `start_slot`:
+                      `count` = 0 fails each link independently with
+                      probability `frac` (Fig 1c / §6.4); `count` > 0
+                      draws exactly `count` (leaf, spine) uplinks per
+                      selected plane and multiplies each by `1 - frac`
+                      — `frac=1` kills the link outright (Fig 14a's
+                      k-concurrent-failure sweeps).
 
     `plane` = -1 applies to every plane.
     """
@@ -131,6 +140,7 @@ class FaultSpec:
     spines: Tuple[int, ...] = ()
     host: int = 0
     frac: float = 1.0
+    count: int = 0                       # random_fail: exact-k mode
 
 
 @dataclass(frozen=True)
@@ -186,6 +196,10 @@ class ScenarioSpec:
                 raise ValueError(
                     f"{self.name}: workload targets unknown tenant "
                     f"{w.tenant!r}")
+            if w.kind == "one2many" and w.srcs < 1:
+                raise ValueError(
+                    f"{self.name}: one2many requires srcs >= 1, got "
+                    f"{w.srcs}")
             if w.kind == "pairs":
                 bad = [p for p in w.pairs
                        for h in p if not 0 <= h < self.topo.n_hosts]
@@ -202,6 +216,14 @@ class ScenarioSpec:
                     f"{self.name}: {f.kind} requires period > 0")
             if f.kind == "cascade" and not f.spines:
                 raise ValueError(f"{self.name}: cascade requires spines")
+            if f.count < 0:
+                raise ValueError(
+                    f"{self.name}: fault count must be >= 0, got "
+                    f"{f.count}")
+            if f.count and f.kind != "random_fail":
+                raise ValueError(
+                    f"{self.name}: count applies only to random_fail, "
+                    f"not {f.kind!r}")
         if self.sim.routing not in ROUTINGS:
             raise ValueError(
                 f"{self.name}: unknown routing {self.sim.routing!r}")

@@ -1,0 +1,418 @@
+"""Unified experiment API: override paths, axis combinators, columnar
+ResultSet round-trips (NaN and tuple-valued columns included), the
+content-hashed run cache (hit / miss / corrupted entry / resume after an
+interrupt), sweep_many parity, and the fig11 benchmark migration."""
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.experiments import (Axis, Experiment, OverridePathError,
+                               ResultSet, RunCache, apply_override, chain,
+                               get_experiment, get_path, product,
+                               run_experiment, spec_key, zip_axes)
+from repro.experiments import execute as execute_mod
+from repro.scenarios import (FaultSpec, ScenarioMetrics, ScenarioSpec,
+                             SimSpec, SweepGrid, TenantSpec, TopologySpec,
+                             WorkloadSpec, get_scenario, sweep_many)
+from repro.scenarios.registry import fig11_partial_uplink
+
+
+def _tiny(name="tiny", slots=40, **sim) -> ScenarioSpec:
+    return ScenarioSpec(
+        name=name,
+        topo=TopologySpec(n_leaves=2, n_spines=2, hosts_per_leaf=2),
+        tenants=(TenantSpec("main"),),
+        workloads=(WorkloadSpec("all2all"),),
+        faults=(FaultSpec("link_kill", start_slot=10, plane=0, leaf=0,
+                          spine=0, frac=0.5),),
+        sim=SimSpec(slots=slots, **sim))
+
+
+def _metric(**kw) -> ScenarioMetrics:
+    base = dict(scenario="s", seed=0, routing="ar", nic="spx",
+                mean_goodput=0.5, tenant_mean={"main": 0.5},
+                tenant_p01={"main": 0.4}, tenant_p99={"main": 0.6},
+                isolation_index=1.0,
+                recovery_slots=((10, "link_kill", 3),),
+                completion_tail=float("nan"), symmetry_cv=0.1,
+                symmetry_uniform=True, symmetry_outliers=((0, 1),),
+                extra={"x": 1.5})
+    base.update(kw)
+    return ScenarioMetrics(**base)
+
+
+# ---------------------------------------------------------------------------
+# override paths
+# ---------------------------------------------------------------------------
+
+def test_apply_override_nested_paths():
+    spec = _tiny()
+    s2 = apply_override(spec, "sim.routing", "ecmp")
+    assert s2.sim.routing == "ecmp" and spec.sim.routing == "ar"
+    s3 = apply_override(spec, "faults[0].frac", 0.25)
+    assert s3.faults[0].frac == 0.25
+    s4 = apply_override(spec, "topo.n_planes", 4)
+    assert s4.topo.n_planes == 4
+    # int -> float promotion at a float leaf
+    s5 = apply_override(spec, "faults[0].frac", 1)
+    assert s5.faults[0].frac == 1.0 and isinstance(s5.faults[0].frac,
+                                                   float)
+    # whole-tuple override
+    s6 = apply_override(spec, "faults", ())
+    assert s6.faults == ()
+    assert get_path(spec, "faults[0].frac") == 0.5
+
+
+def test_override_unknown_field_lists_known():
+    with pytest.raises(OverridePathError, match="no field 'routinggg'"):
+        apply_override(_tiny(), "sim.routinggg", "ar")
+    with pytest.raises(OverridePathError, match="known fields"):
+        apply_override(_tiny(), "nonsense", 1)
+
+
+def test_override_index_errors():
+    with pytest.raises(OverridePathError, match="out of range"):
+        apply_override(_tiny(), "faults[2].frac", 0.1)
+    with pytest.raises(OverridePathError, match="not a sequence"):
+        apply_override(_tiny(), "sim[0]", 1)
+
+
+def test_override_type_mismatch():
+    with pytest.raises(OverridePathError, match="expected int"):
+        apply_override(_tiny(), "topo.n_planes", 2.5)
+    with pytest.raises(OverridePathError, match="expected str"):
+        apply_override(_tiny(), "sim.routing", 3)
+    with pytest.raises(OverridePathError, match="expected float"):
+        apply_override(_tiny(), "faults[0].frac", "half")
+    # bool is not an acceptable int (it's a subclass, but means a flag)
+    with pytest.raises(OverridePathError, match="expected int, got bool"):
+        apply_override(_tiny(), "sim.slots", True)
+
+
+def test_override_malformed_paths():
+    for bad in ("", "sim..routing", "faults[x].frac", "sim.routing[", "1ab"):
+        with pytest.raises(OverridePathError):
+            apply_override(_tiny(), bad, 1)
+
+
+# ---------------------------------------------------------------------------
+# axes
+# ---------------------------------------------------------------------------
+
+def test_product_order_last_axis_fastest():
+    g = product(Axis("a", (1, 2)), Axis("b", ("x", "y")))
+    labels = [tuple(l for _, _, l in pt) for pt in g.points()]
+    assert labels == [(1, "x"), (1, "y"), (2, "x"), (2, "y")]
+
+
+def test_zip_and_chain():
+    z = zip_axes(Axis("a", (1, 2)), Axis("b", ("x", "y")))
+    assert [tuple(l for _, _, l in pt) for pt in z.points()] \
+        == [(1, "x"), (2, "y")]
+    with pytest.raises(ValueError, match="equal-length"):
+        zip_axes(Axis("a", (1, 2)), Axis("b", ("x",))).points()
+    c = chain(Axis("a", (1,)), Axis("b", (2, 3)))
+    assert len(c.points()) == 3
+    assert c.paths() == ("a", "b")
+
+
+def test_duplicate_path_in_product_raises():
+    with pytest.raises(ValueError, match="more than once"):
+        product(Axis("a", (1,)), Axis("a", (2,))).points()
+
+
+def test_axis_label_validation():
+    with pytest.raises(ValueError, match="labels"):
+        Axis("a", (1, 2), labels=(1,))
+    with pytest.raises(ValueError, match="no values"):
+        Axis("a", ())
+
+
+# ---------------------------------------------------------------------------
+# ResultSet round-trips and queries
+# ---------------------------------------------------------------------------
+
+def _toy_resultset() -> ResultSet:
+    rs = ResultSet(coord_names=["faults[0].frac", "topo.n_planes"])
+    for i, (frac, planes) in enumerate(
+            [(0.1, 1), (0.1, 2), (0.2, 1), (0.2, 2)]):
+        rs.append(_metric(seed=i, mean_goodput=0.5 + 0.1 * i,
+                          completion_tail=(float("nan") if i % 2
+                                           else 1.5)),
+                  coords={"faults[0].frac": frac,
+                          "topo.n_planes": planes})
+    return rs
+
+
+def test_resultset_json_roundtrip_nan_and_tuples():
+    rs = _toy_resultset()
+    rs2 = ResultSet.from_json(rs.to_json())
+    assert len(rs2) == 4
+    assert rs2.coord_names == rs.coord_names
+    assert rs2.column("axis.faults[0].frac") == [0.1, 0.1, 0.2, 0.2]
+    a, b = rs.to_metrics(), rs2.to_metrics()
+    for ma, mb in zip(a, b):
+        assert ma.to_row() == mb.to_row()
+        assert mb.recovery_slots == ((10, "link_kill", 3),)
+        assert mb.symmetry_outliers == ((0, 1),)
+        assert mb.extra == {"x": 1.5}
+    assert math.isnan(b[1].completion_tail)
+    assert b[0].completion_tail == 1.5
+
+
+def test_resultset_csv_roundtrip_lossless():
+    rs = _toy_resultset()
+    rs2 = ResultSet.from_csv(rs.to_csv())
+    assert rs2.coord_names == rs.coord_names
+    assert rs2.column("axis.topo.n_planes") == [1, 2, 1, 2]
+    for ma, mb in zip(rs.to_metrics(), rs2.to_metrics()):
+        # exact float round-trip, tuple columns reconstructed
+        assert ma.mean_goodput == mb.mean_goodput
+        assert ma.recovery_slots == mb.recovery_slots
+        assert (math.isnan(mb.completion_tail)
+                if math.isnan(ma.completion_tail)
+                else ma.completion_tail == mb.completion_tail)
+
+
+def test_resultset_schema_version_checked():
+    rs = _toy_resultset()
+    d = json.loads(rs.to_json())
+    d["schema_version"] = 999
+    with pytest.raises(ValueError, match="schema version"):
+        ResultSet.from_json(json.dumps(d))
+
+
+def test_resultset_queries():
+    rs = _toy_resultset()
+    assert len(rs.filter(**{"axis.faults[0].frac": 0.1})) == 2
+    assert len(rs.filter(lambda r: r["mean_goodput"] > 0.65)) == 2
+    groups = rs.group_by("axis.topo.n_planes")
+    assert set(groups) == {(1,), (2,)}
+    piv = rs.pivot("axis.faults[0].frac", "axis.topo.n_planes",
+                   "mean_goodput")
+    assert piv[0.1][1] == pytest.approx(0.5)
+    assert piv[0.2][2] == pytest.approx(0.8)
+    s = rs.summary(values=("mean_goodput",))[()]
+    assert s["mean_goodput"]["count"] == 4
+    assert s["mean_goodput"]["mean"] == pytest.approx(0.65)
+    with pytest.raises(KeyError, match="unknown column"):
+        rs.filter(nonexistent=1)
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+def test_spec_key_content_sensitivity():
+    a = spec_key(_tiny())
+    assert a == spec_key(_tiny())
+    assert a != spec_key(apply_override(_tiny(), "faults[0].frac", 0.9))
+    assert a != spec_key(_tiny(), salt="derive.tag")
+
+
+def test_cache_hit_miss_and_corruption(tmp_path):
+    cache = RunCache(str(tmp_path))
+    key = spec_key(_tiny())
+    assert cache.get(key) is None
+    cache.put(key, _tiny(), _metric())
+    m = cache.get(key)
+    assert m is not None and m.to_row() == _metric().to_row()
+    # corrupted entry -> miss, not a crash
+    with open(cache.path_for(key), "w") as f:
+        f.write("{not json")
+    assert cache.get(key) is None
+    # version-skewed entry -> miss
+    cache.put(key, _tiny(), _metric())
+    with open(cache.path_for(key)) as f:
+        entry = json.load(f)
+    entry["cache_version"] = 999
+    with open(cache.path_for(key), "w") as f:
+        json.dump(entry, f)
+    assert cache.get(key) is None
+    # key-mismatched (moved) entry -> miss
+    entry["cache_version"] = 1
+    entry["key"] = "0" * 64
+    with open(cache.path_for(key), "w") as f:
+        json.dump(entry, f)
+    assert cache.get(key) is None
+
+
+def test_experiment_cache_corrupted_entry_recomputed(tmp_path):
+    exp = Experiment(name="corrupt", base=_tiny(),
+                     axes=Axis("seed", (0, 1, 2)))
+    rs = run_experiment(exp, processes=0, cache=str(tmp_path))
+    assert (rs.cache_hits, rs.cache_misses) == (0, 3)
+    cache = RunCache(str(tmp_path))
+    key = spec_key(exp.points()[1].spec)
+    with open(cache.path_for(key), "w") as f:
+        f.write("garbage")
+    rs2 = run_experiment(exp, processes=0, cache=str(tmp_path))
+    assert (rs2.cache_hits, rs2.cache_misses) == (2, 1)
+    assert [m.to_row() for m in rs.to_metrics()] \
+        == [m.to_row() for m in rs2.to_metrics()]
+
+
+def test_resume_after_interrupt(tmp_path, monkeypatch):
+    """An interrupt mid-grid loses only in-flight points: completed rows
+    are already in the cache, and the re-run serves them as hits."""
+    exp = Experiment(name="resume", base=_tiny(),
+                     axes=Axis("seed", (0, 1, 2, 3)))
+    real = execute_mod.run_point
+    calls = {"n": 0}
+
+    def dying_run_point(spec, derive=None):
+        if calls["n"] == 2:
+            raise KeyboardInterrupt("simulated interrupt")
+        calls["n"] += 1
+        return real(spec, derive)
+
+    monkeypatch.setattr(execute_mod, "run_point", dying_run_point)
+    with pytest.raises(KeyboardInterrupt):
+        run_experiment(exp, processes=0, cache=str(tmp_path))
+    monkeypatch.setattr(execute_mod, "run_point", real)
+    rs = run_experiment(exp, processes=0, cache=str(tmp_path))
+    assert (rs.cache_hits, rs.cache_misses) == (2, 2)
+    assert len(rs) == 4
+    # rows land in grid order regardless of the cache/live split
+    assert rs.column("seed") == [s.sim.seed + off for s, off in
+                                 [(_tiny(), o) for o in (0, 1, 2, 3)]]
+
+
+# ---------------------------------------------------------------------------
+# parity with the deprecated sweep API
+# ---------------------------------------------------------------------------
+
+def test_scenario_axis_after_overrides_rejected():
+    # a late 'scenario' axis would discard the nic override while its
+    # coordinate still labels the row — must refuse, not mislabel
+    exp = Experiment(
+        name="bad_order", base="fig9_victim_noise",
+        axes=product(Axis("sim.nic", ("dcqcn",)),
+                     Axis("scenario", ("fig8_bisection",))))
+    with pytest.raises(ValueError, match="must come before"):
+        exp.points()
+    # without a base, the first override already has nothing to act on
+    with pytest.raises(ValueError, match="no base scenario"):
+        Experiment(
+            name="no_base",
+            axes=product(Axis("sim.nic", ("dcqcn",)),
+                         Axis("scenario", ("fig8_bisection",)))).points()
+
+
+def test_run_experiment_rejects_unknown_backend():
+    exp = Experiment(name="b", base=_tiny(), axes=Axis("seed", (0,)))
+    with pytest.raises(ValueError, match="unknown backend"):
+        run_experiment(exp, backend="npy")
+
+
+def test_experiment_reproduces_sweep_many_rows_exactly():
+    names = ("multi_tenant_50_50", "permutation_stress")
+    grid = SweepGrid(seeds=(0, 1), routings=("ar", "ecmp"),
+                     nics=("spx", "dcqcn"), slots=40)
+    legacy = sweep_many(names, grid, processes=0)
+    exp = Experiment(
+        name="parity",
+        axes=product(Axis("scenario", names), Axis("seed", (0, 1)),
+                     Axis("sim.routing", ("ar", "ecmp")),
+                     Axis("sim.nic", ("spx", "dcqcn")),
+                     Axis("sim.slots", (40,))))
+    rs = run_experiment(exp, processes=0)
+    assert len(rs) == len(legacy) == 16
+    assert [m.to_row() for m in rs.to_metrics()] \
+        == [m.to_row() for m in legacy]
+
+
+# ---------------------------------------------------------------------------
+# non-(routing, nic) axes end-to-end on both backends
+# ---------------------------------------------------------------------------
+
+def test_nonrouting_axis_runs_on_both_backends():
+    exp = Experiment(
+        name="frac_x_backend", base=_tiny(),
+        axes=product(Axis("faults[0].frac", (0.5, 1.0)),
+                     Axis("sim.backend", ("numpy", "jax"))))
+    rs = run_experiment(exp, processes=0)
+    assert len(rs) == 4
+    assert rs.column("axis.sim.backend") == ["numpy", "jax"] * 2
+    by_backend = rs.group_by("axis.sim.backend")
+    for (frac,), grp in rs.group_by("axis.faults[0].frac").items():
+        vals = grp.column("mean_goodput")
+        assert np.isfinite(vals).all()
+        # numpy and jax agree on the same point (f32 tolerance)
+        assert vals[0] == pytest.approx(vals[1], abs=5e-3)
+    # the axis had an effect
+    piv = rs.pivot("axis.faults[0].frac", "axis.sim.backend",
+                   "symmetry_cv")
+    assert piv[0.5]["numpy"] != piv[1.0]["numpy"]
+    assert set(by_backend) == {("numpy",), ("jax",)}
+
+
+# ---------------------------------------------------------------------------
+# fig11 benchmark migration: row-identical numbers
+# ---------------------------------------------------------------------------
+
+def test_fig11_experiment_matches_legacy_loop():
+    from repro.experiments.library import fig11_metrics
+    keep = 0.5
+    legacy = {}
+    base = fig11_partial_uplink(keep)
+    for nic, routing in (("dcqcn", "ecmp"), ("spx", "war")):
+        from repro.scenarios import run_scenario
+        r = run_scenario(base.with_sim(nic=nic, routing=routing))
+        per_rank = r.mean_goodput.reshape(48, -1).sum(1)
+        legacy[nic] = (float(per_rank.mean()),
+                       float(r.mean_goodput.min() * 47))
+    exp = get_experiment("fig11_static_resiliency")
+    rows = run_experiment(exp).filter(**{"axis.faults": 50}).rows()
+    assert len(rows) == 2
+    for row in rows:
+        want = legacy[row["nic"]]
+        assert (row["extra"]["bw_frac"],
+                row["extra"]["cct_gated_bw"]) == want
+
+
+# ---------------------------------------------------------------------------
+# DSL additions backing the fig14/fig15 migrations
+# ---------------------------------------------------------------------------
+
+def test_one2many_workload_compiles():
+    from repro.scenarios.compile import compile_scenario
+    spec = ScenarioSpec(
+        name="o2m",
+        topo=TopologySpec(n_leaves=2, n_spines=2, hosts_per_leaf=4),
+        tenants=(TenantSpec("main"),),
+        workloads=(WorkloadSpec("one2many", srcs=2, demand=0.5),),
+        sim=SimSpec(slots=20))
+    c = compile_scenario(spec)
+    assert len(c.flows) == 2 * 6            # 2 srcs x 6 dsts
+    assert c.flows[0].demand == pytest.approx(0.5 / 6)
+    with pytest.raises(ValueError, match="srcs >= 1"):
+        ScenarioSpec(
+            name="bad", topo=spec.topo, tenants=spec.tenants,
+            workloads=(WorkloadSpec("one2many", srcs=0),),
+            sim=spec.sim).validate()
+
+
+def test_random_fail_count_mode_kills_exactly_k():
+    from repro.scenarios.compile import compile_scenario
+    spec = ScenarioSpec(
+        name="countk",
+        topo=TopologySpec(n_leaves=4, n_spines=4, hosts_per_leaf=2),
+        tenants=(TenantSpec("main"),),
+        workloads=(WorkloadSpec("all2all"),),
+        faults=(FaultSpec("random_fail", start_slot=0, count=3,
+                          frac=1.0),),
+        sim=SimSpec(slots=4))
+    c = compile_scenario(spec)
+    c.events(0, c.topo)
+    dead = int((c.topo.up[0] == 0).sum())
+    assert 1 <= dead <= 3                   # draws may repeat
+    with pytest.raises(ValueError, match="count applies only"):
+        ScenarioSpec(
+            name="bad", topo=spec.topo, tenants=spec.tenants,
+            workloads=spec.workloads,
+            faults=(FaultSpec("link_kill", count=2),),
+            sim=spec.sim).validate()

@@ -136,6 +136,10 @@ def _fault_strategy(topo: TopologySpec, slots: int):
                   plane=planes, leaf=leaf, frac=frac),
         st.builds(FaultSpec, kind=st.just("random_fail"),
                   start_slot=start, frac=st.sampled_from([0.1, 0.5])),
+        st.builds(FaultSpec, kind=st.just("random_fail"),
+                  start_slot=start, plane=planes,
+                  frac=st.sampled_from([0.5, 1.0]),
+                  count=st.integers(1, 3)),
     )
 
 
