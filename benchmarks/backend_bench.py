@@ -1,15 +1,25 @@
-"""Backend benchmark: NumPy process-pool vs JAX batched scenario sweeps.
+"""Backend dispatch benchmark: megabatch vs per-group vs NumPy pool.
 
-Runs the same (seeds x routings) grid of one registry scenario through
-both backends and reports wall-clock, simulated slots/sec, and the
-speedup.  The default grid is the paper's Fig 9 isolation scenario
-(`fig9_victim_noise`, the registry port of `benchmarks/fig9_isolation`)
-over 16 seeds x (ar, ecmp) — the acceptance workload for the JAX port.
+Runs the paper-style acceptance grid — routing × NIC stack × fault
+fraction × seed over one registry scenario — through the three dispatch
+paths and reports wall-clock, dispatch/compile counts, warm slots/sec,
+and peak RSS:
 
-The JAX backend is timed twice: cold (first call pays `jax.jit`
-compilation, once per (scenario, routing, nic) structure) and warm
-(compilation cache hit — the steady state for any sweep that reuses a
-structure, i.e. every multi-seed study).
+  * **numpy_pool** — the reference engine over a `ProcessPoolExecutor`
+    (one process per point);
+  * **per_group**  — the PR 3 JAX path: one compiled program and one
+    launch per (scenario, routing, nic, fault) structure, seeds vmapped
+    (`jx_dispatch="group"`);
+  * **megabatch**  — the fused path: the whole grid stacks into ONE
+    `jit(vmap)`/pmap launch that compiles once, with per-element traced
+    routing/NIC branch selection (`jx_dispatch="megabatch"`).
+
+Each JAX path is timed cold (first call pays XLA compilation) and warm
+(executable cache hit — the steady state of any repeated sweep).  The
+machine-readable summary is written to `BENCH_backend.json` so CI can
+assert the single-launch property (`megabatch.dispatches == 1`,
+`megabatch.compiles == 1`) and track the perf trajectory as an
+artifact.
 
 CLI (CI runs the smoke variant):
 
@@ -19,93 +29,195 @@ CLI (CI runs the smoke variant):
 from __future__ import annotations
 
 import argparse
+import json
 import os
+import resource
 import sys
 import time
 from typing import Optional, Tuple
 
-# one XLA host device per core, so the jax backend's (routing, nic)
-# groups run concurrently like the NumPy pool's workers do; must be set
-# before JAX initializes (the runner imports it lazily, on first use)
+# one XLA host device per core, so the jax backend's batches shard
+# across cores like the NumPy pool's workers do; must be set before JAX
+# initializes (the runner imports it lazily, on first use)
 _flags = os.environ.get("XLA_FLAGS", "")
 if "xla_force_host_platform_device_count" not in _flags:
     os.environ["XLA_FLAGS"] = (
         f"{_flags} --xla_force_host_platform_device_count="
         f"{os.cpu_count() or 1}").strip()
 
-from repro.scenarios import SweepGrid, list_scenarios, sweep  # noqa: E402
+from repro.experiments import (Axis, Experiment, execute_points,  # noqa: E402
+                               product)
+from repro.scenarios import list_scenarios  # noqa: E402
 
 from .common import emit
 
-DEFAULT_SCENARIO = "fig9_victim_noise"
-DEFAULT_ROUTINGS = ("ar", "ecmp")
-DEFAULT_SEEDS = 16
+DEFAULT_SCENARIO = "flap_during_incast"
+DEFAULT_JSON = "BENCH_backend.json"
+SCHEMA = 1
 
 
-def run(scenario: str = DEFAULT_SCENARIO, n_seeds: int = DEFAULT_SEEDS,
-        routings: Tuple[str, ...] = DEFAULT_ROUTINGS,
-        slots: Optional[int] = None,
-        processes: Optional[int] = None) -> dict:
-    grid = SweepGrid(seeds=tuple(range(n_seeds)), routings=routings,
-                     slots=slots)
+def bench_grid(scenario: str, routings, nics, fracs, n_seeds: int,
+               slots: Optional[int]) -> Experiment:
+    """The acceptance grid: routing × nic × fault-frac × seed (the
+    fault-frac axis rescales the scenario's first fault in place;
+    fault-less scenarios drop that axis rather than crash)."""
+    from repro.scenarios import get_scenario
+
+    axes = [Axis("sim.routing", tuple(routings)),
+            Axis("sim.nic", tuple(nics))]
+    if fracs and get_scenario(scenario).faults:
+        axes.append(Axis("faults[0].frac", tuple(fracs)))
+    axes.append(Axis("seed", tuple(range(n_seeds))))
+    if slots:
+        axes.append(Axis("sim.slots", (slots,)))
+    return Experiment(name="backend_bench.grid", base=scenario,
+                      axes=product(*axes))
+
+
+def _time_best(fn, iters: int) -> float:
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(scenario: str = DEFAULT_SCENARIO,
+        routings: Tuple[str, ...] = ("ar", "war", "ecmp"),
+        nics: Tuple[str, ...] = ("spx", "dcqcn", "global", "esr", "swlb"),
+        fracs: Tuple[float, ...] = (0.2, 0.4, 0.6, 0.8),
+        n_seeds: int = 2, slots: Optional[int] = None,
+        processes: Optional[int] = None, with_numpy: bool = True,
+        json_out: Optional[str] = DEFAULT_JSON) -> dict:
+    from repro.netsim.jx import dispatch_stats, reset_dispatch_stats
+
+    exp = bench_grid(scenario, routings, nics, fracs, n_seeds, slots)
+    points = [p.spec for p in exp.points()]
+    n_points = len(points)
+    spec_slots = points[0].sim.slots
+    total_slots = n_points * spec_slots
+    swept_fracs = "faults[0].frac" in exp.coord_names()
+    grid_desc = {"scenario": scenario, "routings": list(routings),
+                 "nics": list(nics),
+                 "fault_fracs": list(fracs) if swept_fracs else [],
+                 "seeds": n_seeds, "slots": spec_slots,
+                 "points": n_points}
+
+    out = {"schema": SCHEMA, "grid": grid_desc,
+           "devices": int(os.cpu_count() or 1)}
+
     # numpy first: the process pool must fork before JAX spins up its
     # thread pools in this process
-    t0 = time.perf_counter()
-    rows_np = sweep(scenario, grid, processes=processes)
-    t_np = time.perf_counter() - t0
+    rows = {}
+    if with_numpy:
+        t0 = time.perf_counter()
+        rows["numpy"] = execute_points(points, processes=processes,
+                                       backend="numpy")
+        t_np = time.perf_counter() - t0
+        out["numpy_pool"] = {"warm_s": t_np,
+                             "slots_per_s": total_slots / max(t_np, 1e-9)}
+        emit(f"backend_bench.{scenario}.numpy_pool", t_np * 1e6,
+             f"wall_s={t_np:.3f},points={n_points}")
 
-    t0 = time.perf_counter()
-    rows_jx = sweep(scenario, grid, backend="jax")
-    t_cold = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    sweep(scenario, grid, backend="jax")
-    t_warm = time.perf_counter() - t0
+    for mode in ("group", "megabatch"):
+        reset_dispatch_stats()
+        t0 = time.perf_counter()
+        rows[mode] = execute_points(points, backend="jax",
+                                    jx_dispatch=mode)
+        cold = time.perf_counter() - t0
+        cold_stats = dispatch_stats()
+        reset_dispatch_stats()
+        warm = _time_best(
+            lambda m=mode: execute_points(points, backend="jax",
+                                          jx_dispatch=m), iters=3)
+        warm_stats = dispatch_stats()
+        key = "per_group" if mode == "group" else "megabatch"
+        out[key] = {
+            "cold_s": cold, "warm_s": warm,
+            "compile_s": max(0.0, cold - warm),
+            "dispatches": cold_stats["dispatches"],
+            "compiles": cold_stats["compiles"],
+            "warm_compiles": warm_stats["compiles"],
+            "warm_slots_per_s": total_slots / max(warm, 1e-9),
+        }
+        emit(f"backend_bench.{scenario}.{key}", warm * 1e6,
+             f"cold_s={cold:.3f},warm_s={warm:.3f},"
+             f"dispatches={cold_stats['dispatches']},"
+             f"compiles={cold_stats['compiles']},"
+             f"slots_per_s={total_slots / max(warm, 1e-9):.0f}")
 
-    n_points = len(rows_np)
-    total_slots = n_points * (slots or _spec_slots(scenario))
-    for name, wall in (("numpy_pool", t_np), ("jax_cold", t_cold),
-                       ("jax_warm", t_warm)):
-        emit(f"backend_bench.{scenario}.{name}", wall * 1e6,
-             f"wall_s={wall:.3f},points={n_points},"
-             f"slots_per_s={total_slots / max(wall, 1e-9):.0f}")
-    emit(f"backend_bench.{scenario}.speedup", 0.0,
-         f"cold={t_np / max(t_cold, 1e-9):.2f}x,"
-         f"warm={t_np / max(t_warm, 1e-9):.2f}x")
-    # both backends must agree on what they simulated (goodput to 4 dp)
+    # dispatch-path agreement (float32 jitter tolerated via the 4dp CSV
+    # rounding; exact 1e-5 x64 row-identity is tests/test_megabatch.py's
+    # job)
     mism = sum(a.to_row() != b.to_row()
-               for a, b in zip(rows_np, rows_jx))
-    emit(f"backend_bench.{scenario}.row_mismatches", float(mism),
-         "numpy-vs-jax CSV rows (float32 jitter tolerated via "
-         "4dp rounding; exact parity is the x64 test suite's job)")
-    return {"numpy": t_np, "jax_cold": t_cold, "jax_warm": t_warm}
+               for a, b in zip(rows["group"], rows["megabatch"]))
+    out["row_mismatches_group_vs_megabatch"] = int(mism)
+    out["speedup_warm_vs_per_group"] = (
+        out["per_group"]["warm_s"] / max(out["megabatch"]["warm_s"],
+                                         1e-9))
+    if with_numpy:
+        out["speedup_warm_vs_numpy"] = (
+            out["numpy_pool"]["warm_s"] / max(out["megabatch"]["warm_s"],
+                                              1e-9))
+    # ru_maxrss is KiB on Linux but bytes on macOS
+    rss_unit = 1 if sys.platform == "darwin" else 1024
+    out["peak_rss_bytes"] = (
+        resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * rss_unit)
+    emit(f"backend_bench.{scenario}.speedup", 0.0,
+         f"megabatch_vs_per_group={out['speedup_warm_vs_per_group']:.2f}x"
+         + (f",megabatch_vs_numpy={out['speedup_warm_vs_numpy']:.2f}x"
+            if with_numpy else "")
+         + f",row_mismatches={mism}")
 
-
-def _spec_slots(scenario: str) -> int:
-    from repro.scenarios import get_scenario
-    return get_scenario(scenario).sim.slots
+    if json_out:
+        with open(json_out, "w", encoding="utf-8") as f:
+            json.dump(out, f, indent=2)
+        print(f"# bench json: {json_out}", flush=True)
+    return out
 
 
 def main(argv=None) -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--scenario", default=DEFAULT_SCENARIO,
                    choices=list_scenarios())
-    p.add_argument("--seeds", type=int, default=DEFAULT_SEEDS)
-    p.add_argument("--routings", nargs="+", default=list(DEFAULT_ROUTINGS))
+    p.add_argument("--seeds", type=int, default=None,
+                   help="seed-axis length (default 2)")
+    p.add_argument("--routings", nargs="+", default=None,
+                   help="default: ar war ecmp")
+    p.add_argument("--nics", nargs="+", default=None,
+                   help="default: all five stacks (smoke: spx dcqcn)")
+    p.add_argument("--fracs", nargs="+", type=float, default=None,
+                   help="fault-frac axis values (default .2 .4 .6 .8; "
+                        "smoke: .3 .5 .8)")
     p.add_argument("--slots", type=int, default=None,
-                   help="override spec slots (default: spec's own)")
+                   help="override spec slots (default: spec's own; "
+                        "smoke: 120)")
     p.add_argument("--processes", type=int, default=None,
                    help="numpy pool size (default: min(points, cpus))")
+    p.add_argument("--no-numpy", action="store_true",
+                   help="skip the process-pool baseline")
+    p.add_argument("--json-out", default=DEFAULT_JSON)
     p.add_argument("--smoke", action="store_true",
-                   help="CI-sized: 2 seeds, 100 slots")
+                   help="CI-sized defaults: 2 nics x 3 fracs x 2 "
+                        "seeds, 120 slots (36 points); explicit flags "
+                        "still win")
     args = p.parse_args(argv)
     print("name,us_per_call,derived")
+    # smoke only changes the *defaults* — explicit flags always win
     if args.smoke:
-        run(args.scenario, n_seeds=2, routings=tuple(args.routings),
-            slots=100, processes=args.processes)
+        nics, fracs, slots = ("spx", "dcqcn"), (0.3, 0.5, 0.8), 120
     else:
-        run(args.scenario, n_seeds=args.seeds,
-            routings=tuple(args.routings), slots=args.slots,
-            processes=args.processes)
+        nics = ("spx", "dcqcn", "global", "esr", "swlb")
+        fracs, slots = (0.2, 0.4, 0.6, 0.8), None
+    run(args.scenario,
+        routings=tuple(args.routings or ("ar", "war", "ecmp")),
+        nics=tuple(args.nics) if args.nics else nics,
+        fracs=tuple(args.fracs) if args.fracs is not None else fracs,
+        n_seeds=args.seeds if args.seeds is not None else 2,
+        slots=args.slots if args.slots is not None else slots,
+        processes=args.processes, with_numpy=not args.no_numpy,
+        json_out=args.json_out)
 
 
 if __name__ == "__main__":

@@ -16,7 +16,8 @@ import sys
 from typing import List, Optional
 
 from repro.experiments import (Axis, Experiment, ResultSet, RunCache,
-                               product, run_experiment)
+                               compile_cache_entries, product,
+                               run_experiment)
 from repro.scenarios import list_scenarios
 
 from .common import emit, timeit
@@ -44,12 +45,15 @@ def run(scenarios=DEFAULT_SCENARIOS, n_seeds: int = 2,
         stacks=(("spx", "ar"), ("dcqcn", "ecmp")),
         backend: str = "numpy",
         cache_dir: Optional[str] = None,
-        json_out: Optional[str] = None) -> ResultSet:
+        json_out: Optional[str] = None,
+        compile_cache_dir: Optional[str] = None) -> ResultSet:
     # the paper pairs stacks (SPX NIC + AR, DCQCN + ECMP); sweep each
     # pairing over seeds × scenarios rather than a nic × routing product
     cache = RunCache(cache_dir) if cache_dir else None
     merged: Optional[ResultSet] = None
     hits = misses = 0
+    cc_before = (compile_cache_entries(compile_cache_dir)
+                 if compile_cache_dir else 0)
 
     def _all() -> None:
         nonlocal merged, hits, misses
@@ -57,7 +61,8 @@ def run(scenarios=DEFAULT_SCENARIOS, n_seeds: int = 2,
             exp = stack_experiment(scenarios, nic, routing, n_seeds,
                                    slots)
             rs = run_experiment(exp, processes=processes,
-                                backend=backend, cache=cache)
+                                backend=backend, cache=cache,
+                                compile_cache_dir=compile_cache_dir)
             hits += rs.cache_hits
             misses += rs.cache_misses
             if merged is None:
@@ -77,6 +82,10 @@ def run(scenarios=DEFAULT_SCENARIOS, n_seeds: int = 2,
              f"outliers={len(m.symmetry_outliers)}")
     if cache is not None:
         print(f"# cache: hits={hits} misses={misses}", flush=True)
+    if compile_cache_dir:
+        after = compile_cache_entries(compile_cache_dir)
+        print(f"# compile-cache: dir={compile_cache_dir} "
+              f"entries={after} new={after - cc_before}", flush=True)
     if json_out and merged is not None:
         with open(json_out, "w", encoding="utf-8") as f:
             f.write(merged.to_json())
@@ -110,6 +119,9 @@ def main(argv=None) -> None:
     p.add_argument("--cache-dir", default=None,
                    help="run-cache directory; re-runs serve completed "
                         "points from cache and resume interrupted grids")
+    p.add_argument("--compile-cache-dir", default=None,
+                   help="persistent XLA compilation cache (jax backend):"
+                        " fused sweep programs survive process restarts")
     p.add_argument("--json-out", default=None,
                    help="write the merged ResultSet JSON here")
     args = p.parse_args(argv)
@@ -117,7 +129,8 @@ def main(argv=None) -> None:
     run(tuple(args.scenarios), n_seeds=args.seeds, slots=args.slots,
         processes=args.processes, stacks=tuple(args.stacks),
         backend=args.backend, cache_dir=args.cache_dir,
-        json_out=args.json_out)
+        json_out=args.json_out,
+        compile_cache_dir=args.compile_cache_dir)
 
 
 if __name__ == "__main__":

@@ -3,7 +3,8 @@ override paths, columnar `ResultSet` results, and a content-hashed run
 cache with resume (see README "Experiments")."""
 from .axes import Axis, Chain, Product, Zip, chain, product, zip_axes
 from .cache import RunCache, canonicalize, spec_key
-from .execute import execute_points
+from .execute import (compile_cache_entries, enable_compile_cache,
+                      execute_points)
 from .experiment import (EXPERIMENTS, Experiment, ExperimentPoint,
                          get_experiment, list_experiments,
                          register_experiment, run_experiment)

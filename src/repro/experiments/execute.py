@@ -1,13 +1,22 @@
 """Grid-point executor shared by `Experiment.run` and the deprecated
 `sweep`/`sweep_many` shims.
 
-'numpy' fans points out over a process pool; 'jax' groups points that
-share structure (same spec modulo seeds) and runs each group's seed axis
-as one vmapped batch.  Either way completed rows stream back through
-`on_result(index, metrics)` as they finish — per future on the pool
-path, per finalized batch on the JAX path — which is what lets
-`run_experiment` write the cache and fill the `ResultSet` incrementally
-instead of all-or-nothing at the end.
+'numpy' fans points out over a process pool; 'jax' dispatches the whole
+grid through the megabatch path by default — every structurally
+compatible point (any mix of routing / nic / fault / seed axes) stacks
+into ONE fused `jit(vmap)`/pmap launch that compiles once
+(`repro.netsim.jx.megabatch`) — or, with `jx_dispatch="group"`, through
+the legacy per-(scenario, routing, nic) grouped-vmap path.  Either way
+completed rows stream back through `on_result(index, metrics)` as they
+finish — per future on the pool path, per finalized batch/group on the
+JAX paths — which is what lets `run_experiment` write the cache and
+fill the `ResultSet` incrementally instead of all-or-nothing at the
+end.
+
+`enable_compile_cache` points JAX's persistent compilation cache at a
+directory, so the megabatch program (one compile per grid *structure*)
+survives process restarts; `scenario_sweep --compile-cache-dir` wires
+it up and reports entry counts next to the run-cache stats.
 """
 from __future__ import annotations
 
@@ -25,17 +34,47 @@ from repro.scenarios.spec import ScenarioSpec
 
 OnResult = Callable[[int, ScenarioMetrics], None]
 
+JX_DISPATCH_MODES = ("megabatch", "group")
+
+
+def enable_compile_cache(cache_dir: str) -> None:
+    """Enable JAX's persistent compilation cache at `cache_dir` (created
+    if missing) with thresholds dropped to zero so every simulator
+    program is cached — a re-run of a sweep in a fresh process then pays
+    deserialization instead of XLA compilation."""
+    import jax
+
+    os.makedirs(cache_dir, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", str(cache_dir))
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+
+
+def compile_cache_entries(cache_dir: str) -> int:
+    """Number of compiled-program entries currently in a persistent
+    compilation cache directory."""
+    try:
+        return sum(1 for n in os.listdir(cache_dir)
+                   if n.endswith("-cache"))
+    except OSError:
+        return 0
+
 
 def execute_points(points: List[ScenarioSpec],
                    processes: Optional[int] = None,
                    backend: Optional[str] = None,
                    derive: Optional[Callable] = None,
-                   on_result: Optional[OnResult] = None
+                   on_result: Optional[OnResult] = None,
+                   jx_dispatch: Optional[str] = None,
+                   compile_cache_dir: Optional[str] = None
                    ) -> List[ScenarioMetrics]:
     """Run every point; returns metrics in point order.  `backend=None`
     inherits the specs' `sim.backend` (which must agree — mixed grids
     are partitioned by the caller).  `on_result` fires once per point as
-    it completes, *before* the call returns."""
+    it completes, *before* the call returns.  `jx_dispatch` picks the
+    JAX dispatch path ('megabatch' default, 'group' = the legacy
+    per-structure batching; `REPRO_JX_DISPATCH` overrides the default);
+    `compile_cache_dir` enables the persistent XLA compilation cache."""
     emit = on_result or (lambda i, m: None)
     if backend is None:
         inherited = {p.sim.backend for p in points}
@@ -45,7 +84,15 @@ def execute_points(points: List[ScenarioSpec],
                 "backend= explicitly")
         backend = inherited.pop() if inherited else "numpy"
     if backend == "jax":
-        return _execute_jax(points, derive, emit)
+        if compile_cache_dir:
+            enable_compile_cache(compile_cache_dir)
+        mode = (jx_dispatch or
+                os.environ.get("REPRO_JX_DISPATCH", "megabatch"))
+        if mode not in JX_DISPATCH_MODES:
+            raise ValueError(
+                f"unknown jx_dispatch {mode!r}; expected one of "
+                f"{JX_DISPATCH_MODES}")
+        return _execute_jax(points, derive, emit, mode)
     if backend != "numpy":
         raise ValueError(
             f"unknown backend {backend!r}; expected 'numpy' or 'jax'")
@@ -114,18 +161,46 @@ def _xla_backend_live() -> bool:
 
 
 def _execute_jax(points: List[ScenarioSpec], derive: Optional[Callable],
-                 emit: OnResult) -> List[ScenarioMetrics]:
-    """Batched single-process sweep: group grid points that share
-    structure (same scenario modulo the seeds), run each group as one
-    `vmap` batch, and distill in the original point order.
+                 emit: OnResult,
+                 mode: str = "megabatch") -> List[ScenarioMetrics]:
+    """Batched single-process sweep.
 
-    All groups are dispatched before any is awaited (JAX CPU execution
-    is async, so host-side prep of group N+1 overlaps group N's
-    compute), and with
-    `XLA_FLAGS=--xla_force_host_platform_device_count=N` each group's
-    batch axis is pmap-sharded over the N host devices (the
-    single-process analogue of the NumPy backend's process pool).
-    Completed rows stream out per finalized group."""
+    'megabatch' (default): every structurally compatible point — any
+    mix of routing, nic, fault, and seed axes — stacks into ONE fused
+    `jit(vmap)`/pmap launch that compiles once; heterogeneous flow
+    counts and fault timelines share programs via shape buckets
+    (`repro.netsim.jx.megabatch`).
+
+    'group' (the PR 3 path, kept for A/B benchmarking and parity
+    pinning): group grid points that share structure (same scenario
+    modulo the seeds) and run each group as its own `vmap` batch — one
+    compile and one launch per (scenario, routing, nic, fault)
+    structure.
+
+    Either way everything is dispatched before anything is awaited (JAX
+    CPU execution is async), with
+    `XLA_FLAGS=--xla_force_host_platform_device_count=N` sharding batch
+    axes over the N host devices, and completed rows stream out per
+    finalized batch."""
+    results: List[Optional[ScenarioMetrics]] = [None] * len(points)
+
+    def deliver(i, c, r):
+        m = distill_metrics(points[i], c, r)
+        if derive is not None:
+            m.extra.update(derive(points[i], c, r))
+        results[i] = m
+        emit(i, m)
+
+    if mode == "megabatch":
+        from repro.netsim.jx.megabatch import (dispatch_megabatch,
+                                               finalize_group)
+
+        compiled = [compile_scenario(p) for p in points]
+        for idxs, handle in dispatch_megabatch(compiled):
+            for i, r in zip(idxs, finalize_group(handle)):
+                deliver(i, compiled[i], r)
+        return results
+
     from repro.netsim.jx.engine import (dispatch_compiled_batch,
                                         finalize_batch)
 
@@ -144,12 +219,7 @@ def _execute_jax(points: List[ScenarioSpec], derive: Optional[Callable],
         compiled = [compile_scenario(points[i]) for i in idxs]
         dispatched.append((idxs, compiled,
                            dispatch_compiled_batch(compiled)))
-    results: List[Optional[ScenarioMetrics]] = [None] * len(points)
     for idxs, compiled, handle in dispatched:
         for i, c, r in zip(idxs, compiled, finalize_batch(handle)):
-            m = distill_metrics(points[i], c, r)
-            if derive is not None:
-                m.extra.update(derive(points[i], c, r))
-            results[i] = m
-            emit(i, m)
+            deliver(i, c, r)
     return results

@@ -128,7 +128,9 @@ class Experiment:
 def run_experiment(exp: Experiment,
                    processes: Optional[int] = None,
                    backend: Optional[str] = None,
-                   cache: Union[RunCache, str, None] = None
+                   cache: Union[RunCache, str, None] = None,
+                   jx_dispatch: Optional[str] = None,
+                   compile_cache_dir: Optional[str] = None
                    ) -> ResultSet:
     """Execute the experiment grid into a `ResultSet`.
 
@@ -138,7 +140,11 @@ def run_experiment(exp: Experiment,
     in-flight points, and the next call resumes from the survivors).
     `backend` pins every point ('numpy' | 'jax'); None runs each point
     on its spec's own `sim.backend`, so a `sim.backend` axis sweeps
-    both.  Rows come back in grid order; `rs.cache_hits` /
+    both.  On the JAX backend `jx_dispatch` selects 'megabatch' (whole
+    grid fused into one launch per structure — the default) or 'group'
+    (legacy per-structure batching), and `compile_cache_dir` turns on
+    JAX's persistent compilation cache so the fused program survives
+    process restarts.  Rows come back in grid order; `rs.cache_hits` /
     `rs.cache_misses` report how the run was served."""
     if isinstance(cache, str):
         cache = RunCache(cache)
@@ -175,7 +181,8 @@ def run_experiment(exp: Experiment,
         if group:
             execute_points(
                 [p.spec for p in group], processes=processes, backend=bk,
-                derive=exp.derive,
+                derive=exp.derive, jx_dispatch=jx_dispatch,
+                compile_cache_dir=compile_cache_dir,
                 on_result=lambda j, m, g=group: on_result(g, j, m))
     rs.sort_to_grid_order()
     return rs

@@ -1,0 +1,25 @@
+"""Pallas dispatch gate shared by the simulator-facing kernels.
+
+The netsim hot-path kernels (`plb_select.plane_split`,
+`jsq_route.pair_fractions`) have two implementations: a Pallas kernel
+(TPU) and a pure-jnp fallback (`ref.py` — also the test oracle).  On
+CPU/GPU the fallback is both faster and bit-identical to the engine's
+historical math, so Pallas is enabled only when the default JAX backend
+is TPU, unless `REPRO_NETSIM_PALLAS` forces it (1/0).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+
+def pallas_enabled(override: Optional[bool] = None) -> bool:
+    """Whether simulator kernels should lower through Pallas."""
+    if override is not None:
+        return override
+    env = os.environ.get("REPRO_NETSIM_PALLAS")
+    if env is not None:
+        return env.lower() in ("1", "true", "t", "yes", "y", "on")
+    return jax.default_backend() == "tpu"

@@ -38,6 +38,74 @@ def _jsq_kernel(q_ref, up_ref, w_ref, hash_ref, port_ref,
                                keepdims=True).astype(jnp.int32)
 
 
+def _pair_score_kernel(q_ref, cap_ref, w_ref, out_ref, *, nbins: int,
+                       temperature: float, qmax: float):
+    """One block of (src-leaf, dst-leaf) rows: quantized-JSQ scoring +
+    softmax over the spine axis (`ref.pair_score_softmax_ref`)."""
+    q = q_ref[...].astype(jnp.float32)                   # (br, S)
+    cap = cap_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    up = cap > 1e-9
+    qbin = jnp.floor(jnp.clip(q / qmax, 0.0, 1.0 - 1e-9) * nbins) + 1.0
+    score = qbin / jnp.maximum(w, 1e-9)
+    logit = jnp.where(up, -score / temperature, -BIG)
+    logit -= jnp.max(logit, axis=-1, keepdims=True)
+    e = jnp.exp(logit)
+    sums = jnp.sum(e, axis=-1, keepdims=True)
+    out_ref[...] = jnp.where(sums > 0, e / jnp.maximum(sums, 1e-30), 0.0)
+
+
+def pair_fractions(q: jax.Array, cap: jax.Array, w: jax.Array, *,
+                   nbins: int = 16, temperature: float = 1.0,
+                   qmax: float = 8.0, br: int = 128,
+                   use_pallas: bool = False,
+                   interpret: bool = False) -> jax.Array:
+    """Spine-selection fractions for every (plane, src-leaf, dst-leaf)
+    path — the per-slot AR/WAR hot path of the simulator.  `q`/`cap`/`w`
+    are (..., S): summed up+down queue depth, min(up, down) path
+    capacity, and the capacity-(×remote)-weight; returns (..., S)
+    fractions summing to 1 over alive spines.
+
+    With `use_pallas=False` this is exactly `ref.pair_score_softmax_ref`
+    (bit-identical to the engine's historical jnp math).  The Pallas
+    path flattens the leading axes into rows of `br` and scores each on
+    the VPU in float32."""
+    from . import ref
+
+    if not use_pallas:
+        return ref.pair_score_softmax_ref(q, cap, w, nbins=nbins,
+                                          temperature=temperature,
+                                          qmax=qmax)
+    lead = q.shape[:-1]
+    S = q.shape[-1]
+    R = 1
+    for d in lead:
+        R *= d
+    q2, cap2, w2 = (a.reshape(R, S) for a in (q, cap, w))
+    br = min(br, R)
+    pad = (-R) % br
+    if pad:
+        q2 = jnp.pad(q2, ((0, pad), (0, 0)))
+        cap2 = jnp.pad(cap2, ((0, pad), (0, 0)))
+        w2 = jnp.pad(w2, ((0, pad), (0, 0)))
+    n_blk = q2.shape[0] // br
+    kernel = functools.partial(_pair_score_kernel, nbins=nbins,
+                               temperature=temperature, qmax=qmax)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_blk,),
+        in_specs=[
+            pl.BlockSpec((br, S), lambda i: (i, 0)),
+            pl.BlockSpec((br, S), lambda i: (i, 0)),
+            pl.BlockSpec((br, S), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, S), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q2.shape[0], S), jnp.float32),
+        interpret=interpret,
+    )(q2, cap2, w2)
+    return out[:R].reshape(*lead, S).astype(q.dtype)
+
+
 def jsq_route(queues: jax.Array, up_mask: jax.Array, weights: jax.Array,
               pkt_hash: jax.Array, *, nbins: int = 16, qmax: float = 1.0,
               bp: int = 256, interpret: bool = False) -> jax.Array:

@@ -67,6 +67,29 @@ def plb_select(rate_allow, eligible, local_queue, tx_rate, pkt_hash,
                           pkt_hash, bp=bp, interpret=_interpret())
 
 
+@functools.partial(jax.jit, static_argnames=("mode", "min_rate", "bp"))
+def plane_split(rate, eligible, demand, *, mode: str,
+                min_rate: float = 0.0, bp: int = 256):
+    """Batched (F, P) fluid plane split (Pallas path; the simulator
+    itself dispatches via `plb_select.plane_split` so non-TPU backends
+    keep the bit-exact jnp fallback)."""
+    return _ps.plane_split(rate, eligible, demand, mode=mode,
+                           min_rate=min_rate, bp=bp, use_pallas=True,
+                           interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("nbins", "temperature",
+                                             "qmax", "br"))
+def pair_fractions(q, cap, w, *, nbins: int = 16,
+                   temperature: float = 1.0, qmax: float = 8.0,
+                   br: int = 128):
+    """(…, S) quantized-JSQ spine fractions (Pallas path; see
+    `jsq_route.pair_fractions` for the dispatching entry point)."""
+    return _jr.pair_fractions(q, cap, w, nbins=nbins,
+                              temperature=temperature, qmax=qmax, br=br,
+                              use_pallas=True, interpret=_interpret())
+
+
 @functools.partial(jax.jit, static_argnames=("br",))
 def int8_encode(x, noise, *, br: int = 256):
     return _ic.int8_encode(x, noise, br=br, interpret=_interpret())

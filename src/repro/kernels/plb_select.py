@@ -43,6 +43,77 @@ def _plb_kernel(rate_ref, elig_ref, queue_ref, tx_ref, hash_ref, out_ref,
                               keepdims=True).astype(jnp.int32)
 
 
+def _plane_split_kernel(rate_ref, elig_ref, demand_ref, out_ref,
+                        *, mode: str, n_planes: int, min_rate: float):
+    """One block of flows: fluid plane split for a static NIC `mode`
+    (see `ref.plane_split_ref`).  Pure VPU work on (bp, P) tiles."""
+    rate = rate_ref[...].astype(jnp.float32)             # (bp, P)
+    elig = elig_ref[...] > 0
+    demand = demand_ref[...].astype(jnp.float32)         # (bp, 1)
+    if mode == "dcqcn":
+        out = jnp.minimum(demand * (1.0 / n_planes), rate)
+    elif mode == "swlb":
+        n_up = jnp.maximum(jnp.sum(elig, axis=1, keepdims=True), 1)
+        out = jnp.where(elig, demand / n_up, 0.0)
+    elif mode == "agg":
+        n_up = jnp.maximum(jnp.sum(elig, axis=1, keepdims=True), 1)
+        shared = jnp.min(rate, axis=1, keepdims=True)
+        out = jnp.where(elig, demand * shared / n_up, 0.0)
+    else:  # spx: rate filter (E2E precedence) then allowance weighting
+        ok = elig & (rate > min_rate + 1e-9)
+        any_ok = jnp.any(ok, axis=1, keepdims=True)
+        ok = jnp.where(any_ok, ok, elig)
+        w = jnp.where(ok, rate, 0.0)
+        s = jnp.sum(w, axis=1, keepdims=True)
+        w = jnp.where(s > 0, w / jnp.maximum(s, 1e-12), 1.0 / n_planes)
+        out = jnp.minimum(demand * w, jnp.where(ok, rate, 0.0))
+    out_ref[...] = out
+
+
+def plane_split(rate: jax.Array, eligible: jax.Array, demand: jax.Array,
+                *, mode: str, min_rate: float = 0.0, bp: int = 256,
+                use_pallas: bool = False,
+                interpret: bool = False) -> jax.Array:
+    """Batched fluid plane split — the per-slot NIC hot path of the
+    simulator.  `rate`/`eligible`: (F, P); `demand`: (F,).  Returns the
+    (F, P) offered matrix.
+
+    With `use_pallas=False` (the default on non-TPU backends, see
+    `kernels.backend.pallas_enabled`) this is exactly
+    `ref.plane_split_ref` — bit-identical to the engine's historical
+    jnp math, which the x64 parity suite pins.  The Pallas path runs
+    float32 blocks of `bp` flows on the VPU."""
+    from . import ref
+
+    if not use_pallas:
+        return ref.plane_split_ref(rate, eligible, demand, mode=mode,
+                                   min_rate=min_rate)
+    F, P = rate.shape
+    bp = min(bp, F)
+    pad = (-F) % bp
+    if pad:
+        rate = jnp.pad(rate, ((0, pad), (0, 0)))
+        eligible = jnp.pad(eligible, ((0, pad), (0, 0)))
+        demand = jnp.pad(demand, (0, pad))
+    n_blk = rate.shape[0] // bp
+    kernel = functools.partial(_plane_split_kernel, mode=mode,
+                               n_planes=P, min_rate=min_rate)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_blk,),
+        in_specs=[
+            pl.BlockSpec((bp, P), lambda i: (i, 0)),
+            pl.BlockSpec((bp, P), lambda i: (i, 0)),
+            pl.BlockSpec((bp, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bp, P), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rate.shape[0], P), jnp.float32),
+        interpret=interpret,
+    )(rate.astype(jnp.float32), eligible.astype(jnp.float32),
+      demand[:, None].astype(jnp.float32))
+    return out[:F].astype(rate.dtype)
+
+
 def plb_select(rate_allow: jax.Array, eligible: jax.Array,
                local_queue: jax.Array, tx_rate: jax.Array,
                pkt_hash: jax.Array, *, bp: int = 256,

@@ -71,6 +71,62 @@ def plb_select_ref(rate_allow, eligible, local_queue, tx_rate,
     return jnp.argmin(score, axis=1).astype(jnp.int32)
 
 
+def plane_split_ref(rate, eligible, demand, *, mode: str,
+                    min_rate: float = 0.0) -> jax.Array:
+    """Fluid NIC plane split — the batched (F, P) twin of `plb_select`
+    that the simulator's slot step runs every slot (and the jnp fallback
+    on non-TPU backends).  `rate`/`eligible`: (F, P) per-plane CC
+    allowance and PLB eligibility; `demand`: (F,) offered rate.
+
+    mode:
+      'spx'   — rate-filter planes (allowance > min_rate), then weight
+                by allowance: the paper's two-stage PLB hierarchy in
+                fluid form.
+      'dcqcn' — plane-oblivious equal split, capped by allowance.
+      'agg'   — one aggregate context ('global'/'esr' NICs): min
+                allowance shared equally across eligible planes.
+      'swlb'  — software LB: equal split over eligible planes only.
+    """
+    P = rate.shape[-1]
+    if mode == "dcqcn":
+        w = jnp.ones_like(rate) / P
+        return jnp.minimum(demand[:, None] * w, rate)
+    if mode == "swlb":
+        elig = eligible
+        n_up = jnp.maximum(elig.sum(1, keepdims=True), 1)
+        return jnp.where(elig, demand[:, None] / n_up, 0.0)
+    if mode == "agg":
+        elig = eligible
+        n_up = jnp.maximum(elig.sum(1, keepdims=True), 1)
+        shared = rate.min(1, keepdims=True)
+        return jnp.where(elig, demand[:, None] * shared / n_up, 0.0)
+    if mode != "spx":
+        raise ValueError(f"unknown plane-split mode {mode!r}")
+    elig = eligible & (rate > min_rate + 1e-9)
+    any_ok = elig.any(1, keepdims=True)
+    elig = jnp.where(any_ok, elig, eligible)
+    w = jnp.where(elig, rate, 0.0)
+    s = w.sum(1, keepdims=True)
+    w = jnp.where(s > 0, w / jnp.maximum(s, 1e-12), 1.0 / P)
+    return jnp.minimum(demand[:, None] * w, jnp.where(elig, rate, 0.0))
+
+
+def pair_score_softmax_ref(q, cap, w, *, nbins: int, temperature: float,
+                           qmax: float = 8.0) -> jax.Array:
+    """Quantized-JSQ spine scoring + softmax over the trailing spine
+    axis — the select/aggregate core of the switch AR path (`jsq_route`'s
+    fluid twin).  `q`/`cap`/`w`: (..., S) summed pair queue, path
+    capacity, and path weight; returns (..., S) spine fractions."""
+    up_mask = cap > 1e-9
+    qbin = jnp.floor(jnp.clip(q / qmax, 0, 1 - 1e-9) * nbins) + 1.0
+    score = qbin / jnp.maximum(w, 1e-9)
+    logit = jnp.where(up_mask, -score / temperature, -1e30)
+    logit -= logit.max(-1, keepdims=True)
+    e = jnp.exp(logit)
+    sums = e.sum(-1, keepdims=True)
+    return jnp.where(sums > 0, e / jnp.maximum(sums, 1e-30), 0.0)
+
+
 def int8_encode_ref(x, noise):
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=1, keepdims=True)
     scale = jnp.maximum(amax, 1e-12) / 127.0

@@ -18,6 +18,23 @@ arrive as step-function segments precomputed by
 `events.ecmp_assign_segments` (the dead-path re-hash depends only on the
 static timeline, so its RNG stream is replayed exactly on the host).
 
+Routing and NIC control exist in two dispatch forms sharing one set of
+branch functions:
+
+  * **static** — `cfg.routing`/`cfg.nic` are concrete strings and the
+    branch is chosen at trace time (the historical per-group path: one
+    compiled program per (scenario, routing, nic) structure);
+  * **traced** — `cfg.routing == cfg.nic == "*"` and a per-batch-element
+    `StackIdx` selects the branch via `lax.switch` inside the traced
+    program, so a whole routing × nic × fault × seed grid runs as ONE
+    compiled program (`megabatch.py` builds those batches).
+
+The per-slot select/aggregate hot paths (NIC plane split, quantized-JSQ
+spine scoring) dispatch through `repro.kernels.plb_select.plane_split`
+and `repro.kernels.jsq_route.pair_fractions`: a Pallas kernel on TPU, and
+on other backends a jnp fallback (`kernels/ref.py`) that is bit-identical
+to the historical engine math.
+
 With x64 enabled the trajectory matches the NumPy backend within 1e-5
 (registry-wide parity is enforced by `tests/test_jx_parity.py`); without
 x64 it runs float32 — faster, looser tolerance.
@@ -25,13 +42,16 @@ x64 it runs float32 — faster, looser tolerance.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import lru_cache, partial
-from typing import List, NamedTuple, Optional, Tuple
+from functools import partial
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.backend import pallas_enabled
+from repro.kernels.jsq_route import pair_fractions as _k_pair_fractions
+from repro.kernels.plb_select import plane_split as _k_plane_split
 from repro.netsim.cc import (DCQCN_AI, DCQCN_ALPHA_G, MIN_RATE,
                              PROBE_TIMEOUT, SPX_AI, SPX_MD, SPX_RTT_GAIN,
                              TARGET_RTT_US)
@@ -54,7 +74,9 @@ _BACKEND_USED = False
 class JxConfig:
     """Static (hashable) simulation parameters: everything `lax.scan`
     needs resolved at trace time — sim knobs, topology shape, and the
-    `FluidFabric` constants."""
+    `FluidFabric` constants.  `routing`/`nic` of `"*"` mean "traced":
+    the slot step expects a per-element `StackIdx` and selects the
+    branch with `lax.switch` (megabatch mode)."""
     slots: int
     slot_us: float
     routing: str
@@ -75,6 +97,7 @@ class JxConfig:
     ar_temperature: float = AR_TEMPERATURE
     jsq_bins: int = JSQ_BINS
     q_cap: float = Q_CAP
+    use_pallas: bool = False
 
     @classmethod
     def from_sim(cls, cfg: SimConfig, topo) -> "JxConfig":
@@ -88,7 +111,8 @@ class JxConfig:
             n_planes=topo.n_planes, n_leaves=topo.n_leaves,
             n_spines=topo.n_spines, n_hosts=topo.n_hosts,
             uplink_cap=topo.link_cap * topo.parallel_links,
-            access_cap=topo.access_cap)
+            access_cap=topo.access_cap,
+            use_pallas=pallas_enabled())
 
 
 @dataclass
@@ -111,94 +135,208 @@ class JxSimResult:
 
 
 # ---------------------------------------------------------------------------
+# traced branch selection (megabatch mode)
+# ---------------------------------------------------------------------------
+
+ROUTE_PAIR, ROUTE_ECMP = 0, 1
+_SPLIT_MODE = {"spx": "spx", "dcqcn": "dcqcn", "global": "agg",
+               "esr": "agg", "swlb": "swlb"}
+_BRANCH_ORDER = ("spx", "dcqcn", "agg", "swlb")
+_BRANCH_IDX = {m: i for i, m in enumerate(_BRANCH_ORDER)}
+
+
+class StackIdx(NamedTuple):
+    """Per-batch-element (routing, nic) branch selectors for the traced
+    dispatch form — scalars under `vmap`, arrays `(B,)` host-side.  The
+    one `nic` index selects both the plane-split and the control-update
+    branch (their branch lists share `_BRANCH_ORDER`)."""
+    route: jnp.ndarray    # 0 = pair (ar/war), 1 = ecmp
+    is_war: jnp.ndarray   # bool: fold remote weights into pair scores
+    nic: jnp.ndarray      # _BRANCH_ORDER index (split + update)
+    is_esr: jnp.ndarray   # bool: ESR's extra multiplicative cut
+
+
+def stack_idx_for(routing: str, nic: str) -> Tuple[int, bool, int, bool]:
+    """Host-side `StackIdx` row for one grid point."""
+    return (ROUTE_ECMP if routing == "ecmp" else ROUTE_PAIR,
+            routing == "war", _BRANCH_IDX[_SPLIT_MODE[nic]],
+            nic == "esr")
+
+
+# ---------------------------------------------------------------------------
+# dispatch bookkeeping: launches + (program-level) compiles
+# ---------------------------------------------------------------------------
+
+_STATS = {"dispatches": 0, "compiles": 0}
+_SEEN_PROGRAMS: set = set()
+_JIT_CACHE: Dict[Tuple, Callable] = {}
+
+
+def _device_fingerprint() -> Tuple:
+    """Identity of the visible device set — part of every jit-cache and
+    program key, so a `pmap` built for N host devices is never reused
+    after the device set changes."""
+    return tuple((d.platform, d.id) for d in jax.devices())
+
+
+def _record_launch(tag: str, key, args) -> None:
+    _STATS["dispatches"] += 1
+    shapes = tuple(
+        (np.shape(leaf), str(getattr(leaf, "dtype", type(leaf))))
+        for leaf in jax.tree_util.tree_leaves(args))
+    fp = (tag, key, shapes, bool(jax.config.jax_enable_x64),
+          _device_fingerprint())
+    if fp not in _SEEN_PROGRAMS:
+        _SEEN_PROGRAMS.add(fp)
+        _STATS["compiles"] += 1
+
+
+def dispatch_stats() -> Dict[str, int]:
+    """Counters since the last reset: `dispatches` = device-program
+    launches, `compiles` = launches whose (program, shapes, devices)
+    fingerprint had not been seen before in this process."""
+    return dict(_STATS)
+
+
+def reset_dispatch_stats() -> None:
+    """Zero the counters.  The seen-program set is *not* cleared — it
+    mirrors the lifetime of jax's own executable caches, so a warm
+    re-run correctly reports 0 compiles."""
+    _STATS["dispatches"] = 0
+    _STATS["compiles"] = 0
+
+
+# ---------------------------------------------------------------------------
 # NIC: plane split + control update (port of netsim.cc.NicState)
 # ---------------------------------------------------------------------------
 
-def _plane_split(cfg: JxConfig, nic: NicCarry,
-                 demand: jnp.ndarray) -> jnp.ndarray:
-    P = cfg.n_planes
-    if cfg.nic == "dcqcn":
-        w = jnp.ones_like(nic.rate) / P
-        return jnp.minimum(demand[:, None] * w, nic.rate)
-    if cfg.nic == "swlb":
-        elig = nic.eligible
-        n_up = jnp.maximum(elig.sum(1, keepdims=True), 1)
-        return jnp.where(elig, demand[:, None] / n_up, 0.0)
-    if cfg.nic in ("global", "esr"):
-        elig = nic.eligible
-        n_up = jnp.maximum(elig.sum(1, keepdims=True), 1)
-        shared = nic.rate.min(1, keepdims=True)
-        return jnp.where(elig, demand[:, None] * shared / n_up, 0.0)
-    # spx: rate-filter then weight by allowance
-    elig = nic.eligible & (nic.rate > MIN_RATE + 1e-9)
-    any_ok = elig.any(1, keepdims=True)
-    elig = jnp.where(any_ok, elig, nic.eligible)
-    w = jnp.where(elig, nic.rate, 0.0)
-    s = w.sum(1, keepdims=True)
-    w = jnp.where(s > 0, w / jnp.maximum(s, 1e-12), 1.0 / P)
-    return jnp.minimum(demand[:, None] * w,
-                       jnp.where(elig, nic.rate, 0.0))
+def _split_mode(cfg: JxConfig, mode: str, nic: NicCarry,
+                demand: jnp.ndarray) -> jnp.ndarray:
+    """One plane-split branch — the select stage of the paper's NIC PLB
+    (Fig. 4), dispatched through the kernels layer."""
+    return _k_plane_split(nic.rate, nic.eligible, demand, mode=mode,
+                          min_rate=MIN_RATE, use_pallas=cfg.use_pallas)
 
 
-def _probe(cfg: JxConfig, nic: NicCarry, rate: jnp.ndarray,
-           probe_ok: jnp.ndarray, slot: jnp.ndarray) -> NicCarry:
+def _plane_split(cfg: JxConfig, nic: NicCarry, demand: jnp.ndarray,
+                 stack: Optional[StackIdx] = None) -> jnp.ndarray:
+    if stack is None:
+        return _split_mode(cfg, _SPLIT_MODE[cfg.nic], nic, demand)
+    return jax.lax.switch(
+        stack.nic,
+        [partial(_split_mode, cfg, m, nic, demand)
+         for m in _BRANCH_ORDER])
+
+
+def _probe_common(cfg: JxConfig, nic: NicCarry, probe_ok: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     miss = ~probe_ok
     probe_miss = jnp.where(miss, nic.probe_miss + 1, 0)
     dead = probe_miss >= cfg.probe_timeout
+    return probe_miss, dead
+
+
+def _probe_basic(cfg: JxConfig, nic: NicCarry, rate: jnp.ndarray,
+                 probe_ok: jnp.ndarray, slot: jnp.ndarray) -> NicCarry:
+    probe_miss, dead = _probe_common(cfg, nic, probe_ok)
+    was = nic.eligible
+    eligible = ~dead
+    just_back = eligible & ~was
+    rate = jnp.where(just_back, 0.5, rate)
+    rate = jnp.where(~eligible, MIN_RATE, rate)
+    return NicCarry(rate=rate, alpha=nic.alpha, probe_miss=probe_miss,
+                    eligible=eligible, pending_fail=nic.pending_fail)
+
+
+def _probe_swlb(cfg: JxConfig, nic: NicCarry, rate: jnp.ndarray,
+                probe_ok: jnp.ndarray, slot: jnp.ndarray) -> NicCarry:
+    if cfg.sw_lb_delay_slots <= 0:
+        return _probe_basic(cfg, nic, rate, probe_ok, slot)
+    probe_miss, dead = _probe_common(cfg, nic, probe_ok)
     eligible, pending = nic.eligible, nic.pending_fail
-    if cfg.nic == "swlb" and cfg.sw_lb_delay_slots > 0:
-        newly = dead & eligible & (pending == 0)
-        pending = jnp.where(newly, slot + cfg.sw_lb_delay_slots, pending)
-        fire = (pending > 0) & (slot >= pending)
-        eligible = jnp.where(fire & dead, False, eligible)
-        healed = ~dead & ~eligible
-        eligible = jnp.where(healed, True, eligible)
-        pending = jnp.where(~dead, 0, pending)
-    else:
-        was = eligible
-        eligible = ~dead
-        just_back = eligible & ~was
-        rate = jnp.where(just_back, 0.5, rate)
+    newly = dead & eligible & (pending == 0)
+    pending = jnp.where(newly, slot + cfg.sw_lb_delay_slots, pending)
+    fire = (pending > 0) & (slot >= pending)
+    eligible = jnp.where(fire & dead, False, eligible)
+    healed = ~dead & ~eligible
+    eligible = jnp.where(healed, True, eligible)
+    pending = jnp.where(~dead, 0, pending)
     rate = jnp.where(~eligible, MIN_RATE, rate)
     return NicCarry(rate=rate, alpha=nic.alpha, probe_miss=probe_miss,
                     eligible=eligible, pending_fail=pending)
 
 
-def _nic_update(cfg: JxConfig, nic: NicCarry, rtt: jnp.ndarray,
-                ecn: jnp.ndarray, probe_ok: jnp.ndarray,
-                slot: jnp.ndarray) -> NicCarry:
-    if cfg.nic == "dcqcn":
-        ecn_any = ecn.max(1, keepdims=True)
-        alpha = ((1 - DCQCN_ALPHA_G) * nic.alpha +
-                 DCQCN_ALPHA_G * (ecn_any > 0))
-        cut = nic.rate * (1 - alpha / 2)
-        grow = jnp.minimum(nic.rate + DCQCN_AI, 1.0)
-        rate = jnp.clip(jnp.where(ecn_any > 0, cut, grow), MIN_RATE, 1.0)
-        return nic._replace(rate=rate, alpha=alpha)
+def _upd_dcqcn(cfg: JxConfig, nic: NicCarry, rtt, ecn, probe_ok,
+               slot) -> NicCarry:
+    ecn_any = ecn.max(1, keepdims=True)
+    alpha = ((1 - DCQCN_ALPHA_G) * nic.alpha +
+             DCQCN_ALPHA_G * (ecn_any > 0))
+    cut = nic.rate * (1 - alpha / 2)
+    grow = jnp.minimum(nic.rate + DCQCN_AI, 1.0)
+    rate = jnp.clip(jnp.where(ecn_any > 0, cut, grow), MIN_RATE, 1.0)
+    return nic._replace(rate=rate, alpha=alpha)
 
-    if cfg.nic in ("global", "esr"):
-        agg_ecn = ecn.max(1, keepdims=True)
-        agg_rtt = rtt.max(1, keepdims=True)
-        cut = nic.rate * SPX_MD
-        rtt_err = (agg_rtt - cfg.target_rtt_us) / cfg.target_rtt_us
-        trim = nic.rate * (1 - SPX_RTT_GAIN * jnp.clip(rtt_err, 0, 2))
-        grow = jnp.minimum(nic.rate + SPX_AI, 1.0)
-        new = jnp.where(agg_ecn > 0, cut,
-                        jnp.where(rtt_err > 0.25, trim, grow))
-        if cfg.nic == "esr":
-            new = jnp.where(agg_ecn > 0, new * 0.85, new)
-        rate = jnp.clip(new, MIN_RATE, 1.0)
-        return _probe(cfg, nic, rate, probe_ok, slot)
 
-    # spx / swlb: per-plane contexts
+def _upd_agg(cfg: JxConfig, nic: NicCarry, rtt, ecn, probe_ok, slot,
+             is_esr) -> NicCarry:
+    """'global'/'esr': one aggregate CC context across planes.  `is_esr`
+    is a Python bool on the static path, a traced bool under switch —
+    the ×1.0 non-ESR multiply is exact either way."""
+    agg_ecn = ecn.max(1, keepdims=True)
+    agg_rtt = rtt.max(1, keepdims=True)
+    cut = nic.rate * SPX_MD
+    rtt_err = (agg_rtt - cfg.target_rtt_us) / cfg.target_rtt_us
+    trim = nic.rate * (1 - SPX_RTT_GAIN * jnp.clip(rtt_err, 0, 2))
+    grow = jnp.minimum(nic.rate + SPX_AI, 1.0)
+    new = jnp.where(agg_ecn > 0, cut,
+                    jnp.where(rtt_err > 0.25, trim, grow))
+    new = new * jnp.where(jnp.logical_and(is_esr, agg_ecn > 0), 0.85, 1.0)
+    rate = jnp.clip(new, MIN_RATE, 1.0)
+    return _probe_basic(cfg, nic, rate, probe_ok, slot)
+
+
+def _upd_perplane_rate(cfg: JxConfig, nic: NicCarry, rtt,
+                       ecn) -> jnp.ndarray:
+    """spx/swlb shared per-plane AIMD rate math."""
     rtt_err = (rtt - cfg.target_rtt_us) / cfg.target_rtt_us
     cut = nic.rate * (SPX_MD + (1 - SPX_MD) * jnp.clip(1 - ecn, 0, 1))
     trim = nic.rate * (1 - SPX_RTT_GAIN * jnp.clip(rtt_err, 0, 2))
     grow = jnp.minimum(nic.rate + SPX_AI, 1.0)
-    rate = jnp.clip(
+    return jnp.clip(
         jnp.where(ecn > 0, cut, jnp.where(rtt_err > 0.25, trim, grow)),
         MIN_RATE, 1.0)
-    return _probe(cfg, nic, rate, probe_ok, slot)
+
+
+def _upd_spx(cfg, nic, rtt, ecn, probe_ok, slot) -> NicCarry:
+    return _probe_basic(cfg, nic, _upd_perplane_rate(cfg, nic, rtt, ecn),
+                        probe_ok, slot)
+
+
+def _upd_swlb(cfg, nic, rtt, ecn, probe_ok, slot) -> NicCarry:
+    return _probe_swlb(cfg, nic, _upd_perplane_rate(cfg, nic, rtt, ecn),
+                       probe_ok, slot)
+
+
+def _nic_update(cfg: JxConfig, nic: NicCarry, rtt: jnp.ndarray,
+                ecn: jnp.ndarray, probe_ok: jnp.ndarray,
+                slot: jnp.ndarray,
+                stack: Optional[StackIdx] = None) -> NicCarry:
+    if stack is None:
+        if cfg.nic == "dcqcn":
+            return _upd_dcqcn(cfg, nic, rtt, ecn, probe_ok, slot)
+        if cfg.nic in ("global", "esr"):
+            return _upd_agg(cfg, nic, rtt, ecn, probe_ok, slot,
+                            is_esr=cfg.nic == "esr")
+        if cfg.nic == "swlb":
+            return _upd_swlb(cfg, nic, rtt, ecn, probe_ok, slot)
+        return _upd_spx(cfg, nic, rtt, ecn, probe_ok, slot)
+    return jax.lax.switch(stack.nic, [
+        partial(_upd_spx, cfg, nic, rtt, ecn, probe_ok, slot),
+        partial(_upd_dcqcn, cfg, nic, rtt, ecn, probe_ok, slot),
+        partial(_upd_agg, cfg, nic, rtt, ecn, probe_ok, slot,
+                stack.is_esr),
+        partial(_upd_swlb, cfg, nic, rtt, ecn, probe_ok, slot),
+    ])
 
 
 # ---------------------------------------------------------------------------
@@ -208,22 +346,24 @@ def _nic_update(cfg: JxConfig, nic: NicCarry, rtt: jnp.ndarray,
 def _pair_fractions(cfg: JxConfig, q_up: jnp.ndarray, q_down: jnp.ndarray,
                     up: jnp.ndarray, down: jnp.ndarray,
                     remote_weights: Optional[jnp.ndarray]) -> jnp.ndarray:
-    """(P, L_src, L_dst, S) spine split; 'war' folds in remote weights."""
+    """(P, L_src, L_dst, S) spine split; 'war' folds in remote weights.
+    Scoring + softmax run through `kernels.jsq_route.pair_fractions`."""
     cap = jnp.minimum(up[:, :, None, :],
                       jnp.swapaxes(down, 1, 2)[:, None, :, :])
-    up_mask = cap > 1e-9
     q = (q_up[:, :, None, :] +
          jnp.swapaxes(q_down, 1, 2)[:, None, :, :])
-    qbin = jnp.floor(jnp.clip(q / 8.0, 0, 1 - 1e-9) * cfg.jsq_bins) + 1.0
     w = cap
     if remote_weights is not None:
         w = w * jnp.swapaxes(remote_weights, 1, 2)[:, None, :, :]
-    score = qbin / jnp.maximum(w, 1e-9)
-    logit = jnp.where(up_mask, -score / cfg.ar_temperature, -1e30)
-    logit -= logit.max(-1, keepdims=True)
-    e = jnp.exp(logit)
-    sums = e.sum(-1, keepdims=True)
-    return jnp.where(sums > 0, e / jnp.maximum(sums, 1e-30), 0.0)
+    return _k_pair_fractions(q, cap, w, nbins=cfg.jsq_bins,
+                             temperature=cfg.ar_temperature, qmax=8.0,
+                             use_pallas=cfg.use_pallas)
+
+
+def _bottleneck(cfg: JxConfig, up, down, load_up, load_down):
+    f_up = jnp.minimum(1.0, up / jnp.maximum(load_up, _EPS))
+    f_down = jnp.minimum(1.0, down / jnp.maximum(load_down, _EPS))
+    return f_up, f_down
 
 
 # ---------------------------------------------------------------------------
@@ -234,7 +374,7 @@ class _AggPerms(NamedTuple):
     """Flow -> bucket aggregation plans.  XLA CPU scatters (and one-hot
     matmuls) are an order of magnitude slower than gathers, so every
     per-slot "sum flows into buckets" becomes: gather flows into a
-    `(n_buckets, width)` layout (rows padded with index F, which reads a
+    `(n_buckets, width)` layout (rows padded with an index that reads a
     zero row) and sum the width axis.  The permutations are static per
     run — ECMP's spine assignment is piecewise-constant, so it gets one
     plan per capacity segment.
@@ -276,84 +416,134 @@ def _seg_sum(vals: jnp.ndarray, perm: jnp.ndarray) -> jnp.ndarray:
     return pad[perm].sum(1)
 
 
+def _route_pair(cfg: JxConfig, carry: SimCarry, fabric_rate: jnp.ndarray,
+                up: jnp.ndarray, down: jnp.ndarray, aggs: _AggPerms,
+                pair_idx: jnp.ndarray, use_war):
+    """AR / weighted-AR: leaf-pair spine fractions.  `use_war` is a
+    Python bool on the static path or a traced bool under switch — the
+    traced form multiplies weights by exactly 1.0 for plain AR, which is
+    bit-identical to not multiplying."""
+    P, L = cfg.n_planes, cfg.n_leaves
+    rw_arr = down / jnp.maximum(down.max(axis=1, keepdims=True), 1e-9)
+    if isinstance(use_war, bool):
+        rw = rw_arr if use_war else None
+    else:
+        rw = jnp.where(use_war, rw_arr, jnp.ones_like(down))
+    pair = _pair_fractions(cfg, carry.q_up, carry.q_down, up, down, rw)
+    rate_pair = _seg_sum(fabric_rate, aggs.pair).T.reshape(P, L, L)
+    load_up = jnp.einsum("plm,plms->pls", rate_pair, pair)
+    load_down = jnp.einsum("plm,plms->psm", rate_pair, pair)
+    f_up, f_down = _bottleneck(cfg, up, down, load_up, load_down)
+    scale_pair = jnp.minimum(
+        f_up[:, :, None, :],
+        f_down.transpose(0, 2, 1)[:, None, :, :])         # (P, L, L, S)
+    path_scale = (pair * scale_pair).sum(-1).reshape(P, L * L)
+    through = fabric_rate * path_scale[:, pair_idx].T
+    q_pair = (carry.q_up[:, :, None, :] +
+              carry.q_down.transpose(0, 2, 1)[:, None, :, :])
+    qmean = (pair * q_pair).sum(-1).reshape(P, L * L)[:, pair_idx].T
+    return load_up, load_down, through, qmean
+
+
+def _route_ecmp(cfg: JxConfig, carry: SimCarry, fabric_rate: jnp.ndarray,
+                up: jnp.ndarray, down: jnp.ndarray, fb: FlowBatch,
+                assign_segments: jnp.ndarray, load_fn: Callable,
+                seg: jnp.ndarray):
+    """ECMP: one-hot spine choice from the precomputed assignment
+    segment, loads via padded bucket sums.  `load_fn(seg)` yields the
+    (P, LS+SL, C) permutation plan for the current capacity segment —
+    a slice of this element's `_AggPerms.ecmp_load` on the per-group
+    path, a row of the batch-deduplicated plan table on the megabatch
+    path."""
+    P, L, S = cfg.n_planes, cfg.n_leaves, cfg.n_spines
+    assign = assign_segments[seg]                         # (F, P)
+    p_iota = jnp.arange(P)[None, :].repeat(fabric_rate.shape[0], 0)
+    padT = jnp.concatenate(
+        [fabric_rate, jnp.zeros((1, P), fabric_rate.dtype)], 0).T
+    pidx = jnp.arange(P)[:, None, None]
+    g = padT[pidx, load_fn(seg)]                          # (P, LS+SL, C)
+    if g.dtype == jnp.float64:
+        # parity mode: accumulate in flow order — see _AggPerms.
+        # fori_loop (not a Python unroll) keeps the traced graph
+        # O(1) in the bucket width for huge flow populations.
+        loads = jax.lax.fori_loop(
+            1, g.shape[2],
+            lambda c, acc: acc + jax.lax.dynamic_index_in_dim(
+                g, c, 2, keepdims=False),
+            g[:, :, 0])
+    else:
+        # float32 production mode diverges from NumPy at ulp level
+        # regardless, so take the fast tree reduction
+        loads = g.sum(-1)
+    load_up = loads[:, :L * S].reshape(P, L, S)
+    load_down = loads[:, L * S:].reshape(P, S, L)
+    f_up, f_down = _bottleneck(cfg, up, down, load_up, load_down)
+    scale_f = jnp.minimum(
+        f_up[p_iota, fb.src_leaf[:, None], assign],
+        f_down[p_iota, assign, fb.dst_leaf[:, None]])
+    through = fabric_rate * scale_f
+    qmean = (carry.q_up[p_iota, fb.src_leaf[:, None], assign] +
+             carry.q_down[p_iota, assign, fb.dst_leaf[:, None]])
+    return load_up, load_down, through, qmean
+
+
 def _slot_step(cfg: JxConfig, fb: FlowBatch, pair_idx: jnp.ndarray,
                aggs: _AggPerms, assign_segments: jnp.ndarray,
                seg_up: jnp.ndarray, seg_down: jnp.ndarray,
-               seg_acc: jnp.ndarray, carry: SimCarry, xs):
+               seg_acc: jnp.ndarray, stack: Optional[StackIdx],
+               load_fn: Callable, carry: SimCarry, xs):
     # timelines are piecewise-constant, so the scan carries only the
     # (n_seg, ...) boundary snapshots and gathers the current segment
     t, seg = xs
-    P, L, S = cfg.n_planes, cfg.n_leaves, cfg.n_spines
     up = seg_up[seg] * cfg.uplink_cap                     # (P, L, S)
     down = seg_down[seg] * cfg.uplink_cap                 # (P, S, L)
     acc = (seg_acc[seg] * cfg.access_cap).T               # (H, P)
 
     demand = jnp.where(carry.done | (t < fb.start_slot), 0.0, fb.demand)
-    offered = _plane_split(cfg, carry.nic, demand)        # (F, P)
+    offered = _plane_split(cfg, carry.nic, demand, stack)  # (F, P)
     fabric_rate = jnp.where(fb.same_leaf[:, None], 0.0, offered)
 
-    # ---- link loads + per-flow path scale/queue, without any (F, P, S)
-    # intermediate: AR/WAR fractions are leaf-pair quantities, so flows
-    # aggregate to (P, L, L) before touching the spine axis; ECMP's
-    # one-hot spine choice reduces to (F, P) gathers + padded bucket sums.
-    if cfg.routing == "ecmp":
-        assign = assign_segments[seg]                     # (F, P)
-        p_iota = jnp.arange(P)[None, :].repeat(fabric_rate.shape[0], 0)
-        padT = jnp.concatenate(
-            [fabric_rate, jnp.zeros((1, P), fabric_rate.dtype)], 0).T
-        pidx = jnp.arange(P)[:, None, None]
-        g = padT[pidx, aggs.ecmp_load[seg]]               # (P, LS+SL, C)
-        if g.dtype == jnp.float64:
-            # parity mode: accumulate in flow order — see _AggPerms.
-            # fori_loop (not a Python unroll) keeps the traced graph
-            # O(1) in the bucket width for huge flow populations.
-            loads = jax.lax.fori_loop(
-                1, g.shape[2],
-                lambda c, acc: acc + jax.lax.dynamic_index_in_dim(
-                    g, c, 2, keepdims=False),
-                g[:, :, 0])
+    # ---- link loads + per-flow fabric throughput/queue, without any
+    # (F, P, S) intermediate: AR/WAR fractions are leaf-pair quantities,
+    # so flows aggregate to (P, L, L) before touching the spine axis;
+    # ECMP's one-hot spine choice reduces to (F, P) gathers + padded
+    # bucket sums.  Each branch returns (load_up, load_down, through,
+    # qmean); under traced dispatch `lax.switch` evaluates both branches
+    # for the whole batch and selects per element.
+    if stack is None:
+        if cfg.routing == "ecmp":
+            load_up, load_down, through, qmean = _route_ecmp(
+                cfg, carry, fabric_rate, up, down, fb, assign_segments,
+                load_fn, seg)
         else:
-            # float32 production mode diverges from NumPy at ulp level
-            # regardless, so take the fast tree reduction
-            loads = g.sum(-1)
-        load_up = loads[:, :L * S].reshape(P, L, S)
-        load_down = loads[:, L * S:].reshape(P, S, L)
+            load_up, load_down, through, qmean = _route_pair(
+                cfg, carry, fabric_rate, up, down, aggs, pair_idx,
+                use_war=cfg.routing == "war")
     else:
-        rw = None
-        if cfg.routing == "war":
-            rw = down / jnp.maximum(down.max(axis=1, keepdims=True), 1e-9)
-        pair = _pair_fractions(cfg, carry.q_up, carry.q_down, up, down, rw)
-        rate_pair = _seg_sum(fabric_rate, aggs.pair).T.reshape(P, L, L)
-        load_up = jnp.einsum("plm,plms->pls", rate_pair, pair)
-        load_down = jnp.einsum("plm,plms->psm", rate_pair, pair)
+        branches = [
+            partial(_route_pair, cfg, carry, fabric_rate, up, down,
+                    aggs, pair_idx, stack.is_war),
+            partial(_route_ecmp, cfg, carry, fabric_rate, up, down,
+                    fb, assign_segments, load_fn, seg)]
+        if isinstance(stack.route, int):
+            # lane-sorted megabatch: the dispatcher grouped elements by
+            # route, so the per-element index is concrete within the
+            # lane and only that branch is traced (no switch tax)
+            load_up, load_down, through, qmean = branches[stack.route]()
+        else:
+            load_up, load_down, through, qmean = jax.lax.switch(
+                stack.route, branches)
+
     load_acc_tx = _seg_sum(offered, aggs.src)             # (H, P)
     load_acc_rx = _seg_sum(offered, aggs.dst)
 
-    # ---- bottleneck scaling ----
-    f_up = jnp.minimum(1.0, up / jnp.maximum(load_up, _EPS))
-    f_down = jnp.minimum(1.0, down / jnp.maximum(load_down, _EPS))
+    # ---- bottleneck scaling (access; fabric scaling lives in the
+    # routing branches) ----
     f_acc_tx = jnp.minimum(1.0, acc / jnp.maximum(load_acc_tx, _EPS))
     f_acc_rx = jnp.minimum(1.0, acc / jnp.maximum(load_acc_rx, _EPS))
     up_alive_tx = acc[fb.src] > _EPS                      # (F, P)
     up_alive_rx = acc[fb.dst] > _EPS
 
-    # ---- achieved + queue delay per (flow, plane) ----
-    if cfg.routing == "ecmp":
-        scale_f = jnp.minimum(
-            f_up[p_iota, fb.src_leaf[:, None], assign],
-            f_down[p_iota, assign, fb.dst_leaf[:, None]])
-        through = fabric_rate * scale_f
-        qmean = (carry.q_up[p_iota, fb.src_leaf[:, None], assign] +
-                 carry.q_down[p_iota, assign, fb.dst_leaf[:, None]])
-    else:
-        scale_pair = jnp.minimum(
-            f_up[:, :, None, :],
-            f_down.transpose(0, 2, 1)[:, None, :, :])     # (P, L, L, S)
-        path_scale = (pair * scale_pair).sum(-1).reshape(P, L * L)
-        through = fabric_rate * path_scale[:, pair_idx].T
-        q_pair = (carry.q_up[:, :, None, :] +
-                  carry.q_down.transpose(0, 2, 1)[:, None, :, :])
-        qmean = (pair * q_pair).sum(-1).reshape(P, L * L)[:, pair_idx].T
     local = jnp.where(fb.same_leaf[:, None], offered, 0.0)
     acc_scale = jnp.minimum(f_acc_tx[fb.src], f_acc_rx[fb.dst])
     achieved_pp = (through + local) * acc_scale
@@ -375,7 +565,7 @@ def _slot_step(cfg: JxConfig, fb: FlowBatch, pair_idx: jnp.ndarray,
 
     # ---- NIC control update (pre-stall rates, as in run_sim) ----
     probe_ok = (acc[fb.src] > _EPS) & (acc[fb.dst] > _EPS)
-    nic = _nic_update(cfg, carry.nic, rtt, ecn, probe_ok, t)
+    nic = _nic_update(cfg, carry.nic, rtt, ecn, probe_ok, t, stack)
 
     # ---- packet-loss stall + completion ----
     stalled = ((offered > 1e-9) & (achieved_pp <= 1e-9)).any(1)
@@ -410,13 +600,22 @@ def _slot_step(cfg: JxConfig, fb: FlowBatch, pair_idx: jnp.ndarray,
 
 
 def _simulate(cfg: JxConfig, fb: FlowBatch, seg_up, seg_down, seg_acc,
-              assign_segments, aggs, seg_id):
-    carry0 = init_carry(fb, cfg.n_planes, cfg.n_leaves, cfg.n_spines)
+              assign_segments, aggs, seg_id, stack=None, carry0=None,
+              ecmp_table=None, uid=None):
+    if carry0 is None:
+        carry0 = init_carry(fb, cfg.n_planes, cfg.n_leaves, cfg.n_spines)
+    if ecmp_table is None:
+        def load_fn(seg):
+            return aggs.ecmp_load[seg]
+    else:
+        # batch-deduplicated plan table: `uid` picks this element's row
+        def load_fn(seg):
+            return ecmp_table[uid, seg]
     pair_idx = fb.src_leaf * cfg.n_leaves + fb.dst_leaf
     xs = (jnp.arange(cfg.slots), seg_id)
     step = partial(_slot_step, cfg, fb, pair_idx, aggs, assign_segments,
                    jnp.asarray(seg_up), jnp.asarray(seg_down),
-                   jnp.asarray(seg_acc))
+                   jnp.asarray(seg_acc), stack, load_fn)
     carry, totals = jax.lax.scan(step, carry0, xs)
     r = cfg.record_every
     n_rec = (cfg.slots + r - 1) // r
@@ -426,39 +625,117 @@ def _simulate(cfg: JxConfig, fb: FlowBatch, seg_up, seg_down, seg_acc,
             carry.util_up)
 
 
-@lru_cache(maxsize=None)
+def _simulate_mb(cfg: JxConfig, stack: StackIdx, carry0: SimCarry,
+                 fb: FlowBatch, seg_up, seg_down, seg_acc,
+                 assign_segments, aggs, uid, seg_id, ecmp_table):
+    """Megabatch element: traced branch dispatch + donated carry.  Every
+    argument between `stack` and `seg_id` (inclusive) is vmapped;
+    `ecmp_table` is batch-constant (the deduplicated ECMP plan table)."""
+    return _simulate(cfg, fb, seg_up, seg_down, seg_acc, assign_segments,
+                     aggs, seg_id, stack=stack, carry0=carry0,
+                     ecmp_table=ecmp_table, uid=uid)
+
+
 def _jitted(cfg: JxConfig, batched: bool, n_shards: int = 1):
+    """Compiled per-group entry point, memoized on (cfg, batch form,
+    shard count, *and the visible device set*) — a `pmap` callable built
+    for N devices must not be silently reused if the device set changes
+    mid-process (regression-tested)."""
+    key = ("group", cfg, batched, n_shards, _device_fingerprint())
+    fn = _JIT_CACHE.get(key)
+    if fn is not None:
+        return fn
     fn = partial(_simulate, cfg)
     if not batched:
-        return jax.jit(fn)
-    fn = jax.vmap(fn, in_axes=(0, 0, 0, 0, 0, 0, None))
+        fn = jax.jit(fn)
+    else:
+        fn = jax.vmap(fn, in_axes=(0, 0, 0, 0, 0, 0, None))
+        if n_shards == 1:
+            fn = jax.jit(fn)
+        else:
+            # shard the batch axis over host devices: XLA CPU serializes
+            # separate executions even across devices, but one pmap
+            # launch runs its per-device shards on parallel threads —
+            # the single-process equivalent of the NumPy backend's
+            # process pool
+            fn = jax.pmap(fn, in_axes=(0, 0, 0, 0, 0, 0, None))
+    _JIT_CACHE[key] = fn
+    return fn
+
+
+def _jitted_mb(cfg: JxConfig, n_shards: int = 1,
+               lanes: Optional[Tuple[Tuple[int, int], ...]] = None):
+    """Compiled megabatch entry point: one `jit(vmap)` (or pmap over
+    host devices) covering every (routing, nic) via traced `StackIdx`,
+    with the initial scan carry donated — the step rewrites it wholesale,
+    so XLA reuses its buffers instead of allocating a second batch.
+
+    `lanes` is the dispatcher's static per-device layout: a tuple of
+    `(route_index, n_elements)` runs.  Elements are lane-sorted by the
+    dispatcher, so within a run the route index is concrete and only
+    that routing branch is traced; `None` falls back to the fully
+    per-element `lax.switch` (every branch evaluated batch-wide,
+    selected per element) — semantically identical, slower."""
+    key = ("mega", cfg, n_shards, lanes, _device_fingerprint())
+    fn = _JIT_CACHE.get(key)
+    if fn is not None:
+        return fn
+    if lanes is None:
+        body = jax.vmap(partial(_simulate_mb, cfg),
+                        in_axes=(0,) * 10 + (None,))
+    else:
+        stack_axes = StackIdx(route=None, is_war=0, nic=0, is_esr=0)
+        v = jax.vmap(partial(_simulate_mb, cfg),
+                     in_axes=(stack_axes,) + (0,) * 9 + (None,))
+        tm = jax.tree_util.tree_map
+
+        def body(stack, carry0, fb, up, down, acc, assign, aggs, uid,
+                 seg_id, table):
+            outs, off = [], 0
+            for route, n in lanes:
+                def cut(x, off=off, n=n):
+                    return jax.lax.slice_in_dim(x, off, off + n, axis=0)
+                st = tm(cut, stack)._replace(route=route)
+                outs.append(v(st, tm(cut, carry0), tm(cut, fb), cut(up),
+                              cut(down), cut(acc), cut(assign),
+                              tm(cut, aggs), cut(uid), cut(seg_id),
+                              table))
+                off += n
+            return tuple(jnp.concatenate(parts, 0)
+                         for parts in zip(*outs))
+
     if n_shards == 1:
-        return jax.jit(fn)
-    # shard the batch axis over host devices: XLA CPU serializes separate
-    # executions even across devices, but one pmap launch runs its
-    # per-device shards on parallel threads — the single-process
-    # equivalent of the NumPy backend's process pool
-    return jax.pmap(fn, in_axes=(0, 0, 0, 0, 0, 0, None))
+        fn = jax.jit(body, donate_argnums=(1,))
+    else:
+        fn = jax.pmap(body, in_axes=(0,) * 10 + (None,),
+                      donate_argnums=(1,))
+    _JIT_CACHE[key] = fn
+    return fn
 
 
 # ---------------------------------------------------------------------------
 # entry points
 # ---------------------------------------------------------------------------
 
-def _prepared(compiled) -> Tuple[JxConfig, FlowArrays, FaultTimeline]:
-    spec = compiled.spec
-    cfg = JxConfig.from_sim(compiled.cfg, spec.topo)
-    fa = FlowArrays.build(compiled.flows, compiled.topo)
+def _warn_f32_bytes(name: str, fa: FlowArrays, stacklevel: int = 3
+                    ) -> None:
     if not jax.config.jax_enable_x64:
         finite = fa.bytes_total[np.isfinite(fa.bytes_total)]
         if finite.size and finite.max() > 2 ** 24:
             import warnings
             warnings.warn(
-                f"{spec.name}: bytes_total up to {finite.max():.3g} "
+                f"{name}: bytes_total up to {finite.max():.3g} "
                 "exceeds float32 integer resolution (2^24); remaining-"
                 "bytes tracking will stall and transfers may never "
                 "complete — enable x64 (JAX_ENABLE_X64=1) or rescale "
-                "bytes_total", stacklevel=3)
+                "bytes_total", stacklevel=stacklevel)
+
+
+def _prepared(compiled) -> Tuple[JxConfig, FlowArrays, FaultTimeline]:
+    spec = compiled.spec
+    cfg = JxConfig.from_sim(compiled.cfg, spec.topo)
+    fa = FlowArrays.build(compiled.flows, compiled.topo)
+    _warn_f32_bytes(spec.name, fa, stacklevel=4)
     return cfg, fa, compile_fault_timeline(spec)
 
 
@@ -504,19 +781,32 @@ def _agg_widths(cfg: JxConfig, fa: FlowArrays,
             w(fa.src_leaf * L + fa.dst_leaf, L * L), wu)
 
 
+def _ecmp_load_plan(cfg: JxConfig, fa: FlowArrays, assign: np.ndarray,
+                    wu: int, pad: int) -> np.ndarray:
+    """(n_seg, P, L*S + S*L, wu) ECMP load-aggregation plan (see
+    `_AggPerms.ecmp_load`) — the single builder shared by the per-group
+    and megabatch paths, so their 1e-5 row-identity cannot drift."""
+    P, L, S = cfg.n_planes, cfg.n_leaves, cfg.n_spines
+    return np.stack([
+        np.stack([np.concatenate([
+            _perm_matrix(fa.src_leaf * S + assign[g][:, p],
+                         L * S, wu, pad),
+            _perm_matrix(assign[g][:, p] * L + fa.dst_leaf,
+                         S * L, wu, pad)]) for p in range(P)])
+        for g in range(assign.shape[0])])
+
+
 def _aggs_for(cfg: JxConfig, fa: FlowArrays, assign: np.ndarray,
-              widths: Tuple[int, ...]) -> _AggPerms:
+              widths: Tuple[int, ...],
+              pad: Optional[int] = None) -> _AggPerms:
+    """`pad` is the index that reads the appended zero row in
+    `_seg_sum` — the row count of the (possibly flow-padded) batch, not
+    necessarily `len(fa)`."""
     ws, wd, wp, wu = widths
-    H, L, S, P = cfg.n_hosts, cfg.n_leaves, cfg.n_spines, cfg.n_planes
-    F = len(fa)
+    H, L, P = cfg.n_hosts, cfg.n_leaves, cfg.n_planes
+    F = len(fa) if pad is None else pad
     if cfg.routing == "ecmp":
-        load = np.stack([
-            np.stack([np.concatenate([
-                _perm_matrix(fa.src_leaf * S + assign[g][:, p],
-                             L * S, wu, F),
-                _perm_matrix(assign[g][:, p] * L + fa.dst_leaf,
-                             S * L, wu, F)]) for p in range(P)])
-            for g in range(assign.shape[0])])
+        load = _ecmp_load_plan(cfg, fa, assign, wu, F)
     else:
         load = np.full((1, P, 1, 1), F, np.int32)
     return _AggPerms(
@@ -545,9 +835,10 @@ def run_compiled(compiled) -> JxSimResult:
     segs = _assign_for(cfg, fa, tl, compiled.cfg.seed, boundaries)
     aggs = _aggs_for(cfg, fa, segs, _agg_widths(cfg, fa, segs))
     up, down, acc = _seg_caps(tl, boundaries)
-    out = _jitted(cfg, False)(
-        FlowBatch.from_arrays(fa), up, down, acc, segs, aggs,
-        _seg_id(boundaries, cfg.slots))
+    args = (FlowBatch.from_arrays(fa), up, down, acc, segs, aggs,
+            _seg_id(boundaries, cfg.slots))
+    _record_launch("group", (cfg, False, 1), args)
+    out = _jitted(cfg, False)(*args)
     return _wrap(cfg, fa, out)
 
 
@@ -606,6 +897,7 @@ def dispatch_compiled_batch(points: List):
                 (shards, (B + padded) // shards) + np.shape(a)[1:])
 
         args = [jax.tree_util.tree_map(shape, a) for a in args]
+    _record_launch("group", (cfg, True, shards), args)
     out = _jitted(cfg, True, shards)(*args, seg_id)
     # keep only what finalize needs — dropping the dense per-point
     # timelines here frees O(B*T*fabric) host memory while the batch

@@ -1,0 +1,378 @@
+"""Megabatch dispatch: one XLA launch per experiment sweep.
+
+The per-group path (`engine.dispatch_compiled_batch`) batches only the
+seed axis: every distinct (scenario, routing, nic, fault) structure is
+its own compiled program and its own launch, so a routing × nic × fault
+grid pays tens of compiles and serialized dispatches.  This module
+instead stacks *every* point of a grid into one `jit(vmap)` / `pmap`
+launch:
+
+  * `routing` / `nic` become per-element `StackIdx` branch selectors,
+    resolved by `lax.switch` inside the traced program (the engine's
+    "traced" dispatch form, `JxConfig.routing == nic == "*"`);
+  * flow counts and fault-timeline segment counts are padded up to
+    power-of-two buckets so heterogeneous points share static shapes —
+    pad flows are inert (zero demand, infinite bytes, never started)
+    and pad segments replicate the final capacity snapshot, which the
+    per-slot segment-id gather never selects;
+  * host-side prep is content-memoized: fault timelines, flow arrays,
+    ECMP assignment replays, and aggregation plans are built once per
+    distinct (faults, slots, workload-seed, …) key instead of once per
+    grid point — a fault × seed grid shares almost everything;
+  * the big ECMP permutation plans are deduplicated into one
+    batch-constant table (`ecmp_table`) indexed by a per-element `uid`,
+    instead of being replicated across the batch (for a 120-point grid
+    this shrinks the transfer from O(B) plans to O(#distinct) plans);
+  * the initial scan carry is built host-side and donated, so XLA
+    reuses its buffers for the carry that the scan rewrites.
+
+Points that cannot share a program (different topology shape, slot
+count, record cadence, … or a different shape bucket) split into
+multiple launches — still one per *structure*, never one per point.
+Row-identity with the per-group path (1e-5, x64) is pinned by
+`tests/test_megabatch.py`.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.netsim.fabric import FlowArrays
+
+from . import engine
+from .engine import JxConfig, JxSimResult, StackIdx, stack_idx_for
+from .events import compile_fault_timeline
+
+
+def _bucket(n: int, lo: int = 1) -> int:
+    """Smallest power of two >= n (>= lo) — the static-shape buckets
+    that let heterogeneous grid points share one compiled program."""
+    return max(lo, 1 << max(0, int(n - 1).bit_length()))
+
+
+# flow-count buckets start here: tiny scenarios all land in one shape
+FLOW_BUCKET_MIN = 8
+
+
+@dataclass
+class _Point:
+    """Host-side prep for one grid point.  The `*_key` fields are the
+    content keys under which shared artifacts were memoized."""
+    index: int
+    cfg: JxConfig               # struct cfg (routing = nic = "*")
+    routing: str
+    nic: str
+    fa_key: Tuple
+    tl_key: Tuple
+    assign_key: Optional[Tuple]
+    fa: FlowArrays
+    boundaries: Tuple[int, ...]
+    caps: Tuple[np.ndarray, np.ndarray, np.ndarray]  # (n_seg, ...) each
+    assign: Optional[np.ndarray]  # (n_seg, F, P), ECMP points only
+    widths: Tuple[int, ...]
+
+
+def _struct_cfg(compiled) -> JxConfig:
+    """`JxConfig` with routing/nic lifted out of the static key.  The
+    swlb reaction delay is resolved unconditionally (SimConfig returns 0
+    for non-swlb NICs, but here swlb is one traced branch of every
+    program and only swlb elements ever read it)."""
+    sim = compiled.cfg
+    base = JxConfig.from_sim(sim, compiled.spec.topo)
+    delay = int(sim.sw_lb_delay_ms * 1000 / sim.slot_us)
+    return replace(base, routing="*", nic="*", sw_lb_delay_slots=delay)
+
+
+def _prepare(index: int, compiled, caches: Dict) -> _Point:
+    cfg = _struct_cfg(compiled)
+    spec = compiled.spec
+    fa_key = (spec.topo, spec.tenants, spec.workloads, spec.workload_seed)
+    fa = caches.get(("fa", fa_key))
+    if fa is None:
+        fa = FlowArrays.build(compiled.flows, compiled.topo)
+        engine._warn_f32_bytes(spec.name, fa, stacklevel=5)
+        caches[("fa", fa_key)] = fa
+    tl_key = (spec.faults, spec.sim.slots, spec.topo, spec.workload_seed)
+    cached = caches.get(("tl", tl_key))
+    if cached is None:
+        tl = compile_fault_timeline(spec)
+        boundaries = tuple(tl.change_slots())
+        cached = (tl, boundaries, engine._seg_caps(tl, boundaries))
+        caches[("tl", tl_key)] = cached
+    tl, boundaries, caps = cached
+    routing, nic = spec.sim.routing, spec.sim.nic
+    assign_key = assign = None
+    if routing == "ecmp":
+        assign_key = (fa_key, tl_key, compiled.cfg.seed)
+        assign = caches.get(("assign", assign_key))
+        if assign is None:
+            assign = engine._assign_for(
+                replace(cfg, routing="ecmp"), fa, tl, compiled.cfg.seed,
+                boundaries)
+            caches[("assign", assign_key)] = assign
+    wkey = ("widths", fa_key, assign_key)
+    widths = caches.get(wkey)
+    if widths is None:
+        widths = engine._agg_widths(
+            replace(cfg, routing=routing), fa,
+            assign if assign is not None
+            else np.zeros((1, len(fa), cfg.n_planes), np.int32))
+        caches[wkey] = widths
+    return _Point(index=index, cfg=cfg, routing=routing, nic=nic,
+                  fa_key=fa_key, tl_key=tl_key, assign_key=assign_key,
+                  fa=fa, boundaries=boundaries, caps=caps, assign=assign,
+                  widths=widths)
+
+
+def _pad_segs(a: np.ndarray, seg_b: int) -> np.ndarray:
+    """Pad the leading segment axis to `seg_b` by replicating the last
+    snapshot (never selected by `_seg_id`, which maps real slots only
+    onto real segments)."""
+    n = a.shape[0]
+    if n == seg_b:
+        return a
+    return np.concatenate([a, np.repeat(a[-1:], seg_b - n, 0)])
+
+
+def _padded_flow_cols(fa: FlowArrays, F_b: int, slots: int
+                      ) -> Dict[str, np.ndarray]:
+    """FlowBatch columns padded to the flow bucket.  Pad flows are
+    inert: zero demand, infinite remaining bytes, start beyond the
+    horizon, and `same_leaf` so they never touch the fabric."""
+    F = len(fa)
+    pad = F_b - F
+
+    def p(a, fill):
+        return np.concatenate([a, np.full(pad, fill, a.dtype)]) \
+            if pad else a
+
+    return {
+        "src": p(fa.src, 0), "dst": p(fa.dst, 0),
+        "src_leaf": p(fa.src_leaf, 0), "dst_leaf": p(fa.dst_leaf, 0),
+        "demand": p(fa.demand, 0.0),
+        "bytes_total": p(fa.bytes_total, np.inf),
+        "start_slot": p(fa.start_slot, slots),
+        "same_leaf": p(fa.src_leaf == fa.dst_leaf, True),
+    }
+
+
+def _ecmp_plan(cfg: JxConfig, fa: FlowArrays, assign: np.ndarray,
+               wu: int, F_b: int, seg_b: int) -> np.ndarray:
+    """(seg_b, P, L*S + S*L, wu) ECMP load-aggregation plan — one table
+    row, flow-padded to `F_b` (built by the same
+    `engine._ecmp_load_plan` the per-group path uses) and
+    segment-padded to the bucket."""
+    return _pad_segs(engine._ecmp_load_plan(cfg, fa, assign, wu, F_b),
+                     seg_b)
+
+
+def _carry0(B: int, F_b: int, cfg: JxConfig,
+            remaining: np.ndarray) -> engine.SimCarry:
+    """Batched initial scan carry (the donated argument), mirroring
+    `state.init_carry`'s dtypes under the active x64 setting."""
+    from .state import NicCarry, SimCarry
+    x64 = bool(jax.config.jax_enable_x64)
+    fdt = np.float64 if x64 else np.float32
+    idt = np.int64 if x64 else np.int32
+    P, L, S = cfg.n_planes, cfg.n_leaves, cfg.n_spines
+    nic = NicCarry(
+        rate=np.ones((B, F_b, P), fdt),
+        alpha=np.zeros((B, F_b, P), fdt),
+        probe_miss=np.zeros((B, F_b, P), idt),
+        eligible=np.ones((B, F_b, P), bool),
+        pending_fail=np.zeros((B, F_b, P), idt))
+    return SimCarry(
+        q_up=np.zeros((B, P, L, S), fdt),
+        q_down=np.zeros((B, P, S, L), fdt),
+        nic=nic,
+        remaining=remaining.astype(fdt),
+        done=np.zeros((B, F_b), bool),
+        completion=np.full((B, F_b), -1, idt),
+        goodput_sum=np.zeros((B, F_b), fdt),
+        util_up=np.zeros((B, P, L, S), fdt))
+
+
+def _dispatch_group(cfg: JxConfig, pts: List[_Point], caches: Dict):
+    """Assemble one structural group into a single launch.
+
+    Elements are **lane-sorted** by routing branch: within a lane the
+    `StackIdx.route` index is a concrete constant, so the engine traces
+    only that routing branch for the lane instead of evaluating every
+    branch batch-wide and selecting (`lax.switch`'s behavior under
+    `vmap`).  NIC branches — cheap elementwise math — stay per-element
+    traced switches, so a lane freely mixes all five NIC stacks (and
+    ar/war, which share the pair lane via the traced `is_war` flag).
+    Each lane is padded to a multiple of the device count with inert
+    replicas of its last element; `finalize_group` drops them."""
+    from .state import FlowBatch
+    F_b = _bucket(max(len(p.fa) for p in pts), FLOW_BUCKET_MIN)
+    seg_b = _bucket(max(len(p.boundaries) for p in pts))
+    widths = tuple(_bucket(m) for m in
+                   map(max, zip(*(p.widths for p in pts))))
+    wu = widths[3]
+    P, L, S = cfg.n_planes, cfg.n_leaves, cfg.n_spines
+
+    # deduplicated ECMP plan table; uid 0 = the inert all-pad plan that
+    # pair-routed elements point at (its gathers read the zero row)
+    rows: List[np.ndarray] = [
+        np.full((seg_b, P, L * S + S * L, wu), F_b, np.int32)]
+    row_uid: Dict[Tuple, int] = {}
+    zero_assign = np.zeros((seg_b, F_b, P), np.int32)
+
+    def elem(p: _Point) -> Dict:
+        ckey = ("cols", p.fa_key, F_b, cfg.slots)
+        cols = caches.get(ckey)
+        if cols is None:
+            cols = caches[ckey] = _padded_flow_cols(p.fa, F_b, cfg.slots)
+        pkey = ("perms", p.fa_key, widths[:3], F_b)
+        perms = caches.get(pkey)
+        if perms is None:
+            a = engine._aggs_for(replace(cfg, routing="ar"), p.fa,
+                                 zero_assign, widths, pad=F_b)
+            perms = caches[pkey] = (a.src, a.dst, a.pair)
+        uid = 0
+        assign = zero_assign
+        if p.routing == "ecmp":
+            tkey = (p.assign_key, seg_b, wu, F_b)
+            uid = row_uid.get(tkey)
+            if uid is None:
+                uid = row_uid[tkey] = len(rows)
+                rows.append(_ecmp_plan(cfg, p.fa, p.assign, wu, F_b,
+                                       seg_b))
+            assign = _pad_segs(p.assign, seg_b)
+            if len(p.fa) < F_b:
+                assign = np.concatenate(
+                    [assign, np.zeros((seg_b, F_b - len(p.fa), P),
+                                      assign.dtype)], axis=1)
+        skey = ("segcaps", p.tl_key, seg_b)
+        padded = caches.get(skey)
+        if padded is None:
+            u, d, ac = p.caps
+            padded = caches[skey] = (
+                _pad_segs(u, seg_b), _pad_segs(d, seg_b),
+                _pad_segs(ac, seg_b),
+                engine._seg_id(p.boundaries, cfg.slots))
+        return {"index": p.index, "fa": p.fa, "cols": cols,
+                "perms": perms, "uid": uid, "assign": assign,
+                "caps": padded, "stack": stack_idx_for(p.routing, p.nic)}
+
+    n_dev = len(jax.devices())
+    shards = min(len(pts), n_dev) if n_dev > 1 and len(pts) > 1 else 1
+
+    # lane-sort: per route, pad the lane to a multiple of the shard
+    # count, then deal each lane's chunks out device-major so every
+    # device sees the same static (route, count) layout
+    lane_elems: Dict[int, List[Dict]] = {}
+    for p in pts:
+        lane_elems.setdefault(stack_idx_for(p.routing, p.nic)[0],
+                              []).append(elem(p))
+    lanes = []
+    for route in sorted(lane_elems):
+        es = lane_elems[route]
+        pad = -len(es) % shards
+        es += [dict(es[-1], index=-1)] * pad      # inert replicas
+        lanes.append((route, len(es) // shards))
+    seq: List[Dict] = []
+    for d in range(shards):
+        for route, n in lanes:
+            seq += lane_elems[route][d * n:(d + 1) * n]
+    lanes_static = tuple(lanes)
+
+    B = len(seq)
+    fb = FlowBatch(**{k: np.stack([e["cols"][k] for e in seq])
+                      for k in seq[0]["cols"]})
+    aggs = engine._AggPerms(
+        src=np.stack([e["perms"][0] for e in seq]),
+        dst=np.stack([e["perms"][1] for e in seq]),
+        pair=np.stack([e["perms"][2] for e in seq]),
+        ecmp_load=np.zeros((B, 1, 1, 1, 1), np.int32))  # table instead
+    table = np.stack(rows)
+    stack = StackIdx(
+        route=np.array([e["stack"][0] for e in seq], np.int32),
+        is_war=np.array([e["stack"][1] for e in seq], bool),
+        nic=np.array([e["stack"][2] for e in seq], np.int32),
+        is_esr=np.array([e["stack"][3] for e in seq], bool))
+    carry0 = _carry0(B, F_b, cfg, fb.bytes_total)
+    mapped = (stack, carry0, fb,
+              np.stack([e["caps"][0] for e in seq]),
+              np.stack([e["caps"][1] for e in seq]),
+              np.stack([e["caps"][2] for e in seq]),
+              np.stack([e["assign"] for e in seq]), aggs,
+              np.array([e["uid"] for e in seq], np.int32),
+              np.stack([e["caps"][3] for e in seq]))
+    if shards > 1:
+        mapped = jax.tree_util.tree_map(
+            lambda a: np.asarray(a).reshape(
+                (shards, B // shards) + np.shape(a)[1:]), mapped)
+    engine._record_launch("mega", (cfg, shards, lanes_static),
+                          mapped + (table,))
+    with warnings.catch_warnings():
+        # the scan rewrites the whole donated carry, but only 4 of its
+        # leaves alias a program output — jax warns about the rest on
+        # every first compile, which is expected here, not actionable
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        out = engine._jitted_mb(cfg, shards, lanes_static)(*mapped,
+                                                           table)
+    metas = [(e["index"], e["fa"]) for e in seq]
+    return cfg, metas, [p.index for p in pts], shards, out
+
+
+def dispatch_megabatch(points: List) -> List:
+    """Group `CompiledScenario`s by structural key and launch each group
+    as ONE fused program (all groups dispatched before any is awaited —
+    JAX CPU execution is async).  Returns `[(point_indices, handle)]`
+    for `finalize_group`.  A homogeneous-topology grid — however many
+    routing/nic/fault/seed axes it sweeps — is a single group."""
+    engine._BACKEND_USED = True
+    caches: Dict = {}
+    prepared = [_prepare(i, c, caches) for i, c in enumerate(points)]
+    groups: Dict[Tuple, List[_Point]] = {}
+    order: List[Tuple] = []
+    for p in prepared:
+        key = (p.cfg, _bucket(len(p.fa), FLOW_BUCKET_MIN),
+               _bucket(len(p.boundaries)))
+        if key not in groups:
+            groups[key] = []
+            order.append(key)
+        groups[key].append(p)
+    out = []
+    for key in order:
+        pts = groups[key]
+        handle = _dispatch_group(key[0], pts, caches)
+        out.append(([p.index for p in pts], handle))
+    return out
+
+
+def finalize_group(handle) -> List[JxSimResult]:
+    """Block on one `_dispatch_group` handle and unpack per-point
+    results, dropping lane padding and flow-bucket padding and undoing
+    the lane sort (results come back in the group's point order)."""
+    cfg, metas, order, shards, out = handle
+    outs = [np.asarray(o) for o in out]
+    if shards > 1:
+        outs = [o.reshape((-1,) + o.shape[2:]) for o in outs]
+    by_index = {}
+    for b, (index, fa) in enumerate(metas):
+        if index < 0 or index in by_index:      # lane pad replica
+            continue
+        F = len(fa)
+        mean_goodput, completion, totals, util = (o[b] for o in outs)
+        by_index[index] = engine._wrap(
+            cfg, fa, [mean_goodput[:F], completion[:F], totals, util])
+    return [by_index[i] for i in order]
+
+
+def run_megabatch(points: List) -> List[JxSimResult]:
+    """Simulate arbitrary `CompiledScenario` grid points with the fewest
+    possible launches (one per structural group), returning results in
+    point order."""
+    results: List = [None] * len(points)
+    for idxs, handle in dispatch_megabatch(points):
+        for i, r in zip(idxs, finalize_group(handle)):
+            results[i] = r
+    return results

@@ -97,6 +97,51 @@ def test_plb_select_sweep(planes):
     assert not set(np.asarray(got)) & bad
 
 
+@pytest.mark.parametrize("mode", ["spx", "dcqcn", "agg", "swlb"])
+@pytest.mark.parametrize("F,P", [(64, 1), (300, 4), (1000, 8)])
+def test_plane_split_batched_vs_ref(mode, F, P):
+    """The simulator's per-slot NIC plane split: Pallas batched layout
+    vs the jnp oracle that the engine itself runs on non-TPU backends."""
+    key = jax.random.PRNGKey(6)
+    rate = jax.random.uniform(key, (F, P), minval=0.05)
+    elig = jax.random.uniform(jax.random.fold_in(key, 1), (F, P)) > 0.25
+    elig = elig.at[:, 0].set(True)          # each flow has a live plane
+    demand = jax.random.uniform(jax.random.fold_in(key, 2), (F,))
+    got = ops.plane_split(rate, elig, demand, mode=mode, min_rate=0.05)
+    want = ref.plane_split_ref(rate, elig, demand, mode=mode,
+                               min_rate=0.05)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    # conservation: a flow never sends more than its demand
+    assert (np.asarray(got).sum(1) <= np.asarray(demand) + 1e-5).all()
+
+
+@pytest.mark.parametrize("P,L,S", [(1, 8, 8), (4, 4, 8), (2, 16, 4)])
+@pytest.mark.parametrize("war", [False, True])
+def test_pair_fractions_batched_vs_ref(P, L, S, war):
+    """The switch AR/WAR spine scoring + softmax (quantized JSQ): Pallas
+    rowwise layout vs the jnp oracle, including dead paths and weighted
+    remote capacity."""
+    key = jax.random.PRNGKey(7)
+    q = jax.random.uniform(key, (P, L, L, S), maxval=8.0)
+    cap = jax.random.uniform(jax.random.fold_in(key, 1), (P, L, L, S))
+    cap = jnp.where(jax.random.uniform(jax.random.fold_in(key, 2),
+                                       cap.shape) < 0.15, 0.0, cap)
+    cap = cap.at[..., 0].set(jnp.maximum(cap[..., 0], 0.1))  # alive spine
+    w = cap
+    if war:
+        w = cap * jax.random.uniform(jax.random.fold_in(key, 3),
+                                     cap.shape, minval=0.25)
+    got = ops.pair_fractions(q, cap, w, nbins=16, temperature=1.0)
+    want = ref.pair_score_softmax_ref(q, cap, w, nbins=16,
+                                      temperature=1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    sums = np.asarray(got).sum(-1)
+    np.testing.assert_allclose(sums, 1.0, atol=1e-5)   # softmax rows
+    assert (np.asarray(got)[np.asarray(cap) <= 1e-9] == 0).all()
+
+
 @pytest.mark.parametrize("shape", [(256, 128), (512, 64), (1024, 512)])
 def test_int8_codec_sweep(shape):
     key = jax.random.PRNGKey(5)
