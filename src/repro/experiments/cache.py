@@ -35,11 +35,21 @@ CACHE_VERSION = 1
 
 
 def canonicalize(obj: Any) -> Any:
-    """Lower specs to a deterministic JSON-ready structure."""
+    """Lower specs to a deterministic JSON-ready structure.
+
+    Fields named in a dataclass's `HASH_ELIDE_DEFAULTS` class attribute
+    are omitted while they hold their declared default — the additive-
+    schema-evolution contract: extending a spec with new defaulted
+    fields (e.g. `TopologySpec.kind`) must not re-key every pre-existing
+    cache entry."""
     if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        elide = getattr(type(obj), "HASH_ELIDE_DEFAULTS", ())
         return {"__dataclass__": type(obj).__name__,
                 "fields": {f.name: canonicalize(getattr(obj, f.name))
-                           for f in dataclasses.fields(obj)}}
+                           for f in dataclasses.fields(obj)
+                           if not (f.name in elide
+                                   and f.default is not dataclasses.MISSING
+                                   and getattr(obj, f.name) == f.default)}}
     if isinstance(obj, (tuple, list)):
         return [canonicalize(v) for v in obj]
     if isinstance(obj, dict):

@@ -319,6 +319,35 @@ def fig15_esr_oscillation() -> Experiment:
                     "SPX stays stable.")
 
 
+def topo_kind_metrics(spec: ScenarioSpec, c, res) -> Dict[str, float]:
+    """Post-failure bisection throughput per endpoint (the §3.1
+    multiplane-vs-hierarchy comparison metric: the scenario's warmup
+    window ends after the fault, so `mean_goodput` is already the
+    post-failure steady state) plus the straggler tail that gates
+    collectives."""
+    gp = res.mean_goodput
+    return {"post_failure_bw": float(gp.mean()),
+            "post_failure_p01": float(np.quantile(gp, 0.01))}
+
+
+@register_experiment
+def topo_kind_resiliency() -> Experiment:
+    """The paper's headline architecture argument as ONE sweep: topology
+    kind x routing x failure fraction on the equal-bisection pair.  On
+    the JAX backend the whole grid rides the megabatch path (one fused
+    launch per topology-kind shape bucket)."""
+    return Experiment(
+        name="topo_kind_resiliency",
+        axes=(Axis("scenario", ("bisection_multiplane",
+                                "bisection_fat_tree")),
+              Axis("sim.routing", ("war", "ecmp")),
+              Axis("faults[0].frac", (0.05, 0.15, 0.25))),
+        derive=topo_kind_metrics,
+        description="§3.1/§6.4: flat multiplane vs 3-tier fat-tree "
+                    "post-failure bisection throughput, kind x routing "
+                    "x fault-frac.")
+
+
 @register_experiment
 def resiliency_fault_planes() -> Experiment:
     return Experiment(

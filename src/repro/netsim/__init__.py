@@ -1,4 +1,5 @@
-from .topology import LeafSpine, leaf_pair_maxflow, maxflow_matrix
+from .topology import (Fabric, FatTree, LeafSpine, leaf_pair_maxflow,
+                       maxflow_matrix)
 from .fabric import Flow, FluidFabric, FlowArrays
 from .cc import NicState
 from .sim import SimConfig, SimResult, run_sim

@@ -3,11 +3,15 @@
 Each slot (default 10 µs):
   1. NIC PLB splits each flow's offered rate across planes (per-packet in
      hardware -> fractional in the fluid model).
-  2. In-plane routing splits a flow's plane-rate across spines: ECMP = a
+  2. In-plane routing splits a flow's plane-rate across the fabric's
+     path axis (spines on leaf_spine, cores on fat_tree): ECMP = a
      fixed hash assignment; AR = quantized-JSQ fractions re-balanced every
      slot; weighted-AR folds in remote capacity weights (§4.4.2).
   3. Link loads -> bottleneck scaling (lossless: excess becomes queue/PFC
      backpressure, modeled as achieved-rate scaling + queue growth).
+     On fat_tree, loads and bottlenecks are computed per *stage*: path
+     contributions fold onto the serving leaf–agg link (stage A) and —
+     for cross-pod traffic only — the pod–core link (stage B).
   4. Queues update; ECN marks where queueing persists beyond what AR can
      re-balance; per-(flow, plane) RTT proxy = base + queue delays.
 
@@ -20,7 +24,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from .topology import LeafSpine
+from .topology import Fabric, FatTree, LeafSpine
 
 # fabric constants — the JAX backend (netsim/jx) imports these so the two
 # engines cannot drift when one is tuned
@@ -53,7 +57,8 @@ class FlowArrays:
     start_slot: np.ndarray = None
 
     @classmethod
-    def build(cls, flows: List[Flow], t: LeafSpine) -> "FlowArrays":
+    def build(cls, flows: List[Flow], t) -> "FlowArrays":
+        """`t` is any fabric/spec exposing `hosts_per_leaf`."""
         src = np.array([f.src for f in flows], np.int64)
         dst = np.array([f.dst for f in flows], np.int64)
         names = sorted({f.group for f in flows})
@@ -74,11 +79,19 @@ class FlowArrays:
 
 @dataclass
 class FabricState:
-    q_up: np.ndarray             # (P, L, S) in slot*cap units
-    q_down: np.ndarray           # (P, S, L)
+    """Per-link queues in slot*cap units.  Stage A (`q_up`/`q_down`) is
+    leaf↔spine on leaf_spine and leaf↔agg on fat_tree; stage B
+    (`q2_up`/`q2_down`, fat_tree only) is the pod↔core tier."""
+    q_up: np.ndarray             # (P, L, S|A)
+    q_down: np.ndarray           # (P, S|A, L)
+    q2_up: Optional[np.ndarray] = None    # (P, pods, C)
+    q2_down: Optional[np.ndarray] = None  # (P, pods, C)
 
     @classmethod
-    def zeros(cls, t: LeafSpine) -> "FabricState":
+    def zeros(cls, t: Fabric) -> "FabricState":
+        if t.kind == "fat_tree":
+            return cls(np.zeros_like(t.up), np.zeros_like(t.down),
+                       np.zeros_like(t.up2), np.zeros_like(t.down2))
         return cls(np.zeros_like(t.up), np.zeros_like(t.down))
 
 
@@ -92,7 +105,7 @@ class SlotResult:
 
 
 class FluidFabric:
-    def __init__(self, topo: LeafSpine, base_rtt_us: float = 4.0,
+    def __init__(self, topo: Fabric, base_rtt_us: float = 4.0,
                  slot_us: float = 10.0,
                  ecn_queue_thresh: float = ECN_QUEUE_THRESH,
                  ar_temperature: float = AR_TEMPERATURE,
@@ -107,35 +120,84 @@ class FluidFabric:
         self.q_cap = q_cap
 
     # ------------------------------------------------------------------
-    def pair_fractions(self, mode: str,
-                       remote_weights: Optional[np.ndarray] = None
-                       ) -> np.ndarray:
-        """(P, L, L, S) spine split per (plane, src leaf, dst leaf).
-        mode: 'ar' | 'war'.  (ECMP is per-flow — see ecmp_fractions.)"""
-        t = self.t
-        P, L, S = t.n_planes, t.n_leaves, t.n_spines
-        cap = np.minimum(t.up[:, :, None, :],                 # (P,L,1,S)
-                         np.swapaxes(t.down, 1, 2)[:, None, :, :])
-        up_mask = cap > 1e-9
-        q = (self.state.q_up[:, :, None, :] +
-             np.swapaxes(self.state.q_down, 1, 2)[:, None, :, :])
+    def _jsq_softmax(self, q: np.ndarray, cap: np.ndarray,
+                     w: np.ndarray) -> np.ndarray:
+        """Quantized-JSQ scoring + softmax over the path axis — the one
+        fraction formula both topology kinds share (and the jnp/Pallas
+        kernel `kernels.jsq_route.pair_fractions` mirrors)."""
         qbin = np.floor(np.clip(q / 8.0, 0, 1 - 1e-9) * self.jsq_bins) + 1.0
-        w = cap.copy()
-        if mode == "war" and remote_weights is not None:
-            # remote_weights: (P, S, L) healthy-capacity weight to dst leaf
-            w = w * np.swapaxes(remote_weights, 1, 2)[:, None, :, :]
         score = qbin / np.maximum(w, 1e-9)
-        logit = np.where(up_mask, -score / self.ar_temp, -1e30)
+        logit = np.where(cap > 1e-9, -score / self.ar_temp, -1e30)
         logit -= logit.max(-1, keepdims=True)
         e = np.exp(logit)
         sums = e.sum(-1, keepdims=True)
         return np.where(sums > 0, e / np.maximum(sums, 1e-30), 0.0)
 
+    def pair_fractions(self, mode: str,
+                       remote_weights: Optional[np.ndarray] = None
+                       ) -> np.ndarray:
+        """(P, L, L, J) path split per (plane, src leaf, dst leaf) —
+        J = spines (leaf_spine) or cores (fat_tree).  mode: 'ar' | 'war'.
+        (ECMP is per-flow — see ecmp_fractions.)  `remote_weights` is
+        (P, J, L): healthy-capacity weight of path j toward dst leaf."""
+        t = self.t
+        if t.kind == "fat_tree":
+            return self._pair_fractions_fat_tree(mode, remote_weights)
+        cap = np.minimum(t.up[:, :, None, :],                 # (P,L,1,S)
+                         np.swapaxes(t.down, 1, 2)[:, None, :, :])
+        q = (self.state.q_up[:, :, None, :] +
+             np.swapaxes(self.state.q_down, 1, 2)[:, None, :, :])
+        w = cap.copy()
+        if mode == "war" and remote_weights is not None:
+            w = w * remote_weights.transpose(0, 2, 1)[:, None, :, :]
+        return self._jsq_softmax(q, cap, w)
+
+    def _pair_fractions_fat_tree(self, mode: str,
+                                 remote_weights: Optional[np.ndarray]
+                                 ) -> np.ndarray:
+        """Fat-tree pair split: per-path capacity/queue compose stage A
+        (leaf↔agg, via the path→agg map) with stage B (pod↔core) for
+        cross-pod pairs; intra-pod pairs see stage A only."""
+        t, st = self.t, self.state
+        aj = t.agg_of_path                                   # (J,)
+        pol = t.pod_of_leaf                                  # (L,)
+        cross = (pol[:, None] != pol[None, :])[None, :, :, None]
+        upJ = t.up[:, :, aj]                                 # (P, L, J)
+        dnJ = t.down[:, aj, :]                               # (P, J, L)
+        capA = np.minimum(upJ[:, :, None, :],
+                          dnJ.transpose(0, 2, 1)[:, None, :, :])
+        capB = np.minimum(t.up2[:, pol, :][:, :, None, :],
+                          t.down2[:, pol, :][:, None, :, :])
+        cap = np.where(cross, np.minimum(capA, capB), capA)
+        qA = (st.q_up[:, :, aj][:, :, None, :] +
+              st.q_down[:, aj, :].transpose(0, 2, 1)[:, None, :, :])
+        qB = (st.q2_up[:, pol, :][:, :, None, :] +
+              st.q2_down[:, pol, :][:, None, :, :])
+        q = qA + np.where(cross, qB, 0.0)
+        w = cap.copy()
+        if mode == "war" and remote_weights is not None:
+            w = w * remote_weights.transpose(0, 2, 1)[:, None, :, :]
+        return self._jsq_softmax(q, cap, w)
+
+    def remote_weights(self) -> np.ndarray:
+        """(P, J, L) weighted-AR remote weight: healthy downstream
+        capacity of path j toward dst leaf, normalized per leaf.  On
+        fat_tree the weight composes the agg→leaf link with the
+        core→agg hop serving the leaf's pod."""
+        t = self.t
+        if t.kind == "fat_tree":
+            aj, pol = t.agg_of_path, t.pod_of_leaf
+            eff = np.minimum(t.down[:, aj, :],
+                             t.down2[:, pol, :].transpose(0, 2, 1))
+        else:
+            eff = t.down
+        return eff / np.maximum(eff.max(axis=1, keepdims=True), 1e-9)
+
     def ecmp_fractions(self, fa: FlowArrays,
                        assign: np.ndarray) -> np.ndarray:
-        """assign: (F, P) spine index per flow per plane -> (F, P, S)."""
-        F, P, S = len(fa), self.t.n_planes, self.t.n_spines
-        out = np.zeros((F, P, S))
+        """assign: (F, P) path index per flow per plane -> (F, P, J)."""
+        F, P, J = len(fa), self.t.n_planes, self.t.n_paths
+        out = np.zeros((F, P, J))
         fi = np.repeat(np.arange(F), P)
         pi = np.tile(np.arange(P), F)
         out[fi, pi, assign.reshape(-1)] = 1.0
@@ -143,7 +205,170 @@ class FluidFabric:
 
     # ------------------------------------------------------------------
     def step(self, fa: FlowArrays, plane_rates: np.ndarray,
-             frac: np.ndarray) -> SlotResult:
+             frac: np.ndarray,
+             pair: Optional[np.ndarray] = None) -> SlotResult:
+        """plane_rates: (F, P) offered; frac: (F, P, J) path fractions.
+        Vectorized; dispatches on the fabric's stage structure.
+
+        `pair` is the (P, L, L, J) fraction table `frac` was gathered
+        from (AR/WAR only).  On fat_tree the dense-fraction load math
+        then runs pair-aggregated — the exact op sequence the JAX engine
+        uses — so the two backends' queue trajectories stay bit-aligned
+        through the quantized-JSQ floor and the ECN threshold (AR's
+        symmetric fractions park queues exactly on those knife edges;
+        see `tests/test_jx_parity.py`'s fat-tree suite)."""
+        if self.t.kind == "fat_tree":
+            return self._step_fat_tree(fa, plane_rates, frac, pair)
+        return self._step_leaf_spine(fa, plane_rates, frac)
+
+    def _access_scale(self, fa: FlowArrays, plane_rates: np.ndarray,
+                      eps: float) -> Tuple[np.ndarray, np.ndarray]:
+        """Host-port bottleneck scaling + liveness, shared by both
+        topology kinds: (F, P) scale, (F, P) alive mask."""
+        t = self.t
+        P = t.n_planes
+        load_acc_tx = np.zeros((t.n_hosts, P))
+        np.add.at(load_acc_tx, fa.src, plane_rates)
+        load_acc_rx = np.zeros((t.n_hosts, P))
+        np.add.at(load_acc_rx, fa.dst, plane_rates)
+        acc = t.access.T                                      # (H, P)
+        f_acc_tx = np.minimum(1.0, acc / np.maximum(load_acc_tx, eps))
+        f_acc_rx = np.minimum(1.0, acc / np.maximum(load_acc_rx, eps))
+        scale = np.minimum(f_acc_tx[fa.src], f_acc_rx[fa.dst])
+        alive = (acc[fa.src] > eps) & (acc[fa.dst] > eps)
+        return scale, alive
+
+    def _step_fat_tree(self, fa: FlowArrays, plane_rates: np.ndarray,
+                       frac: np.ndarray,
+                       pair: Optional[np.ndarray] = None) -> SlotResult:
+        """Fat-tree slot step: path contributions fold onto stage-A
+        (leaf–agg) links via the path→agg map; cross-pod contributions
+        additionally load stage-B (pod–core) links.  Queue/ECN/RTT
+        formulas are byte-identical to the 2-tier step, applied per
+        stage.  With `pair` (AR/WAR) the loads/throughput run
+        pair-aggregated, mirroring `jx.engine._route_pair_ft`; without
+        it (ECMP's one-hot fractions) they run per-flow in flow order,
+        mirroring the jx plan gathers."""
+        t, st = self.t, self.state
+        F, P, J = len(fa), t.n_planes, t.n_paths
+        L, A, pods = t.n_leaves, t.n_aggs, t.n_pods
+        cpa, lpp = t.cores_per_agg, t.leaves_per_pod
+        aj, pol = t.agg_of_path, t.pod_of_leaf
+        eps = 1e-12
+        same_leaf = fa.src_leaf == fa.dst_leaf
+        fabric_rate = np.where(same_leaf[:, None], 0.0, plane_rates)
+        cross_f = pol[fa.src_leaf] != pol[fa.dst_leaf]        # (F,)
+
+        # ---- offered load per link, per stage ----
+        if pair is not None:
+            pair_idx = fa.src_leaf * L + fa.dst_leaf
+            rate_pair = np.zeros((L * L, P))
+            np.add.at(rate_pair, pair_idx, fabric_rate)       # flow order
+            rate_pair = rate_pair.T.reshape(P, L, L)
+            loadJ_up = np.einsum("plm,plmj->plj", rate_pair, pair)
+            loadJ_dn = np.einsum("plm,plmj->pmj", rate_pair, pair)
+            loadA_up = loadJ_up.reshape(P, L, A, cpa).sum(-1)
+            loadA_dn = loadJ_dn.reshape(P, L, A, cpa).sum(-1) \
+                .transpose(0, 2, 1)                           # (P, A, L)
+            xpod = pol[:, None] != pol[None, :]
+            ratex = rate_pair * xpod[None]
+            loadB_up = np.einsum("plm,plmj->plj", ratex, pair) \
+                .reshape(P, pods, lpp, J).sum(2)              # (P, pods, J)
+            loadB_dn = np.einsum("plm,plmj->pmj", ratex, pair) \
+                .reshape(P, pods, lpp, J).sum(2)
+        else:
+            contrib = fabric_rate[:, :, None] * frac          # (F, P, J)
+            contribB = contrib * cross_f[:, None, None]
+            contribA = contrib.reshape(F, P, A, cpa).sum(-1)  # (F, P, A)
+            loadA_up = np.zeros((L, P, A))
+            np.add.at(loadA_up, fa.src_leaf, contribA)
+            loadA_up = loadA_up.transpose(1, 0, 2)            # (P, L, A)
+            loadA_dn = np.zeros((L, P, A))
+            np.add.at(loadA_dn, fa.dst_leaf, contribA)
+            loadA_dn = loadA_dn.transpose(1, 2, 0)            # (P, A, L)
+            loadB_up = np.zeros((pods, P, J))
+            np.add.at(loadB_up, pol[fa.src_leaf], contribB)
+            loadB_up = loadB_up.transpose(1, 0, 2)            # (P, pods, J)
+            loadB_dn = np.zeros((pods, P, J))
+            np.add.at(loadB_dn, pol[fa.dst_leaf], contribB)
+            loadB_dn = loadB_dn.transpose(1, 0, 2)
+
+        # ---- bottleneck scaling per stage ----
+        fA_up = np.minimum(1.0, t.up / np.maximum(loadA_up, eps))
+        fA_dn = np.minimum(1.0, t.down / np.maximum(loadA_dn, eps))
+        fB_up = np.minimum(1.0, t.up2 / np.maximum(loadB_up, eps))
+        fB_dn = np.minimum(1.0, t.down2 / np.maximum(loadB_dn, eps))
+
+        # ---- achieved per (flow, plane): min stage scale per path ----
+        if pair is not None:
+            cross = (pol[:, None] != pol[None, :])[None, :, :, None]
+            sA = np.minimum(
+                fA_up[:, :, aj][:, :, None, :],
+                fA_dn[:, aj, :].transpose(0, 2, 1)[:, None, :, :])
+            sB = np.minimum(fB_up[:, pol, :][:, :, None, :],
+                            fB_dn[:, pol, :][:, None, :, :])
+            scale_pair = np.where(cross, np.minimum(sA, sB), sA)
+            path_scale = (pair * scale_pair).sum(-1).reshape(P, L * L)
+            through = fabric_rate * path_scale[:, pair_idx].T
+        else:
+            gA_up = fA_up[:, fa.src_leaf, :][:, :, aj] \
+                .transpose(1, 0, 2)                           # (F, P, J)
+            gA_dn = fA_dn[:, aj, :][:, :, fa.dst_leaf] \
+                .transpose(2, 0, 1)                           # (F, P, J)
+            gB_up = fB_up[:, pol[fa.src_leaf], :].transpose(1, 0, 2)
+            gB_dn = fB_dn[:, pol[fa.dst_leaf], :].transpose(1, 0, 2)
+            scale = np.minimum(gA_up, gA_dn)
+            scaleB = np.minimum(gB_up, gB_dn)
+            scale = np.where(cross_f[:, None, None],
+                             np.minimum(scale, scaleB), scale)
+            through = (contrib * scale).sum(-1)               # (F, P)
+        local = np.where(same_leaf[:, None], plane_rates, 0.0)
+        acc_scale, acc_alive = self._access_scale(fa, plane_rates, eps)
+        achieved_pp = (through + local) * acc_scale
+        achieved_pp = np.where(acc_alive, achieved_pp, 0.0)
+
+        # ---- rtt / ecn per (flow, plane): queues along the path ----
+        if pair is not None:
+            qA_p = (st.q_up[:, :, aj][:, :, None, :] +
+                    st.q_down[:, aj, :].transpose(0, 2, 1)[:, None, :, :])
+            qB_p = (st.q2_up[:, pol, :][:, :, None, :] +
+                    st.q2_down[:, pol, :][:, None, :, :])
+            q_pair = qA_p + np.where(cross, qB_p, 0.0)
+            qmean = (pair * q_pair).sum(-1) \
+                .reshape(P, L * L)[:, pair_idx].T             # (F, P)
+        else:
+            qA = (st.q_up[:, fa.src_leaf, :][:, :, aj]
+                  .transpose(1, 0, 2) +
+                  st.q_down[:, aj, :][:, :, fa.dst_leaf]
+                  .transpose(2, 0, 1))
+            qB = (st.q2_up[:, pol[fa.src_leaf], :].transpose(1, 0, 2) +
+                  st.q2_down[:, pol[fa.dst_leaf], :].transpose(1, 0, 2))
+            q_path = qA + np.where(cross_f[:, None, None], qB, 0.0)
+            qmean = (frac * q_path).sum(-1)                   # (F, P)
+        qmean = np.where(same_leaf[:, None], 0.0, qmean)
+        rtt = self.base_rtt + qmean * self.slot_us * 0.5
+        ecn = np.where(qmean > self.ecn_thresh,
+                       np.minimum(1.0, qmean / (4 * self.ecn_thresh)), 0.0)
+
+        # ---- queue evolution, both stages ----
+        def integrate(q, load, cap):
+            q = np.clip(q + (load - cap) / np.maximum(cap, eps),
+                        0.0, self.q_cap)
+            q[cap <= eps] = 0.0
+            return q
+
+        st.q_up = integrate(st.q_up, loadA_up, t.up)
+        st.q_down = integrate(st.q_down, loadA_dn, t.down)
+        st.q2_up = integrate(st.q2_up, loadB_up, t.up2)
+        st.q2_down = integrate(st.q2_down, loadB_dn, t.down2)
+
+        util = loadA_up / np.maximum(t.up, eps)
+        return SlotResult(achieved=achieved_pp.sum(1),
+                          plane_rates=achieved_pp, rtt=rtt, ecn=ecn,
+                          util_up=util)
+
+    def _step_leaf_spine(self, fa: FlowArrays, plane_rates: np.ndarray,
+                         frac: np.ndarray) -> SlotResult:
         """plane_rates: (F, P) offered; frac: (F, P, S). Vectorized."""
         t = self.t
         F, P, S, L = len(fa), t.n_planes, t.n_spines, t.n_leaves
@@ -159,19 +384,10 @@ class FluidFabric:
         load_down = np.zeros((L, P, S))
         np.add.at(load_down, fa.dst_leaf, contrib)
         load_down = load_down.transpose(1, 2, 0)              # (P, S, L)
-        load_acc_tx = np.zeros((t.n_hosts, P))
-        np.add.at(load_acc_tx, fa.src, plane_rates)
-        load_acc_rx = np.zeros((t.n_hosts, P))
-        np.add.at(load_acc_rx, fa.dst, plane_rates)
 
         # ---- bottleneck scaling ----
         f_up = np.minimum(1.0, t.up / np.maximum(load_up, eps))
         f_down = np.minimum(1.0, t.down / np.maximum(load_down, eps))
-        acc = t.access.T                                      # (H, P)
-        f_acc_tx = np.minimum(1.0, acc / np.maximum(load_acc_tx, eps))
-        f_acc_rx = np.minimum(1.0, acc / np.maximum(load_acc_rx, eps))
-        up_alive_tx = acc[fa.src] > eps                       # (F, P)
-        up_alive_rx = acc[fa.dst] > eps
 
         # ---- achieved per (flow, plane) ----
         fup_g = f_up[:, fa.src_leaf, :].transpose(1, 0, 2)    # (F, P, S)
@@ -180,9 +396,9 @@ class FluidFabric:
         scale = np.minimum(fup_g, fdn_g)
         through = (contrib * scale).sum(-1)                   # (F, P)
         local = np.where(same_leaf[:, None], plane_rates, 0.0)
-        acc_scale = np.minimum(f_acc_tx[fa.src], f_acc_rx[fa.dst])
+        acc_scale, acc_alive = self._access_scale(fa, plane_rates, eps)
         achieved_pp = (through + local) * acc_scale
-        achieved_pp = np.where(up_alive_tx & up_alive_rx, achieved_pp, 0.0)
+        achieved_pp = np.where(acc_alive, achieved_pp, 0.0)
 
         # ---- rtt / ecn per (flow, plane) ----
         q_path = (self.state.q_up[:, fa.src_leaf, :].transpose(1, 0, 2) +

@@ -91,6 +91,11 @@ class JxConfig:
     n_hosts: int
     uplink_cap: float
     access_cap: float
+    kind: str = "leaf_spine"
+    n_pods: int = 1
+    n_aggs: int = 1
+    n_cores: int = 1
+    core_cap: float = 1.0
     target_rtt_us: float = TARGET_RTT_US
     probe_timeout: int = PROBE_TIMEOUT
     ecn_queue_thresh: float = ECN_QUEUE_THRESH
@@ -99,10 +104,31 @@ class JxConfig:
     q_cap: float = Q_CAP
     use_pallas: bool = False
 
+    @property
+    def n_paths(self) -> int:
+        """Per-(leaf pair, plane) routing-choice axis: spines on
+        leaf_spine, cores on fat_tree."""
+        return self.n_spines if self.kind == "leaf_spine" else self.n_cores
+
+    @property
+    def n_up(self) -> int:
+        """Stage-A link axis per leaf: spines or pod-local aggs."""
+        return self.n_spines if self.kind == "leaf_spine" else self.n_aggs
+
+    @property
+    def cores_per_agg(self) -> int:
+        return self.n_cores // self.n_aggs
+
+    @property
+    def leaves_per_pod(self) -> int:
+        return self.n_leaves // self.n_pods
+
     @classmethod
     def from_sim(cls, cfg: SimConfig, topo) -> "JxConfig":
         """`topo` is a `TopologySpec` (or anything with the same shape
         attributes and a uniform base capacity)."""
+        kind = getattr(topo, "kind", "leaf_spine")
+        fat = kind == "fat_tree"
         return cls(
             slots=cfg.slots, slot_us=cfg.slot_us, routing=cfg.routing,
             nic=cfg.nic, base_rtt_us=cfg.base_rtt_us,
@@ -112,6 +138,11 @@ class JxConfig:
             n_spines=topo.n_spines, n_hosts=topo.n_hosts,
             uplink_cap=topo.link_cap * topo.parallel_links,
             access_cap=topo.access_cap,
+            kind=kind,
+            n_pods=topo.n_pods if fat else 1,
+            n_aggs=topo.n_aggs if fat else 1,
+            n_cores=topo.n_cores if fat else 1,
+            core_cap=topo.core_cap if fat else 1.0,
             use_pallas=pallas_enabled())
 
 
@@ -380,7 +411,9 @@ class _AggPerms(NamedTuple):
     plan per capacity segment.
 
     The ECMP plan (`ecmp_load`) stacks uplink and downlink buckets into
-    one `(n_seg, P, L*S + S*L, C)` matrix.  In float64 (parity mode) its
+    one `(n_seg, P, _plan_rows(cfg), C)` matrix — stage-A up/down
+    buckets, plus the two stage-B (pod–core) bucket families on
+    fat_tree.  In float64 (parity mode) its
     width axis is summed strictly left-to-right (flow order): those sums
     feed the queue integrators, where a last-ulp tree-reduction
     difference vs NumPy's sequential `np.add.at` can walk a queue across
@@ -462,19 +495,7 @@ def _route_ecmp(cfg: JxConfig, carry: SimCarry, fabric_rate: jnp.ndarray,
         [fabric_rate, jnp.zeros((1, P), fabric_rate.dtype)], 0).T
     pidx = jnp.arange(P)[:, None, None]
     g = padT[pidx, load_fn(seg)]                          # (P, LS+SL, C)
-    if g.dtype == jnp.float64:
-        # parity mode: accumulate in flow order — see _AggPerms.
-        # fori_loop (not a Python unroll) keeps the traced graph
-        # O(1) in the bucket width for huge flow populations.
-        loads = jax.lax.fori_loop(
-            1, g.shape[2],
-            lambda c, acc: acc + jax.lax.dynamic_index_in_dim(
-                g, c, 2, keepdims=False),
-            g[:, :, 0])
-    else:
-        # float32 production mode diverges from NumPy at ulp level
-        # regardless, so take the fast tree reduction
-        loads = g.sum(-1)
+    loads = _ordered_bucket_sum(g)
     load_up = loads[:, :L * S].reshape(P, L, S)
     load_down = loads[:, L * S:].reshape(P, S, L)
     f_up, f_down = _bottleneck(cfg, up, down, load_up, load_down)
@@ -487,52 +508,190 @@ def _route_ecmp(cfg: JxConfig, carry: SimCarry, fabric_rate: jnp.ndarray,
     return load_up, load_down, through, qmean
 
 
+def _ft_maps(cfg: JxConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Static fat-tree index maps: path→serving-agg and leaf→pod."""
+    aj = jnp.arange(cfg.n_paths) // cfg.cores_per_agg
+    pol = jnp.arange(cfg.n_leaves) // cfg.leaves_per_pod
+    return aj, pol
+
+
+def _route_pair_ft(cfg: JxConfig, carry: SimCarry,
+                   fabric_rate: jnp.ndarray, up: jnp.ndarray,
+                   down: jnp.ndarray, up2: jnp.ndarray,
+                   down2: jnp.ndarray, aggs: _AggPerms,
+                   pair_idx: jnp.ndarray, use_war):
+    """Fat-tree AR / weighted-AR: the pair split runs over the path
+    (= core) axis; capacity/queue per path compose stage A (leaf↔agg,
+    via the path→agg map) with stage B (pod↔core) for cross-pod pairs.
+    Mirrors `FluidFabric._pair_fractions_fat_tree` + `_step_fat_tree`
+    operation for operation."""
+    P, L, A = cfg.n_planes, cfg.n_leaves, cfg.n_aggs
+    J, cpa = cfg.n_paths, cfg.cores_per_agg
+    pods, lpp = cfg.n_pods, cfg.leaves_per_pod
+    aj, pol = _ft_maps(cfg)
+    cross = (pol[:, None] != pol[None, :])[None, :, :, None]
+    upJ = up[:, :, aj]                                    # (P, L, J)
+    dnJ = down[:, aj, :]                                  # (P, J, L)
+    capA = jnp.minimum(upJ[:, :, None, :],
+                       dnJ.transpose(0, 2, 1)[:, None, :, :])
+    up2L = up2[:, pol, :]                                 # (P, L, J)
+    dn2L = down2[:, pol, :]
+    capB = jnp.minimum(up2L[:, :, None, :], dn2L[:, None, :, :])
+    cap = jnp.where(cross, jnp.minimum(capA, capB), capA)
+    qA = (carry.q_up[:, :, aj][:, :, None, :] +
+          carry.q_down[:, aj, :].transpose(0, 2, 1)[:, None, :, :])
+    qB = (carry.q2_up[:, pol, :][:, :, None, :] +
+          carry.q2_down[:, pol, :][:, None, :, :])
+    q = qA + jnp.where(cross, qB, 0.0)
+    eff = jnp.minimum(dnJ, dn2L.transpose(0, 2, 1))       # (P, J, L)
+    rw_arr = eff / jnp.maximum(eff.max(axis=1, keepdims=True), 1e-9)
+    if isinstance(use_war, bool):
+        rw = rw_arr if use_war else None
+    else:
+        rw = jnp.where(use_war, rw_arr, jnp.ones_like(rw_arr))
+    w = cap if rw is None \
+        else cap * rw.transpose(0, 2, 1)[:, None, :, :]
+    pair = _k_pair_fractions(q, cap, w, nbins=cfg.jsq_bins,
+                             temperature=cfg.ar_temperature, qmax=8.0,
+                             use_pallas=cfg.use_pallas)
+    rate_pair = _seg_sum(fabric_rate, aggs.pair).T.reshape(P, L, L)
+    loadJ_up = jnp.einsum("plm,plmj->plj", rate_pair, pair)
+    loadJ_dn = jnp.einsum("plm,plmj->pmj", rate_pair, pair)
+    loadA_up = loadJ_up.reshape(P, L, A, cpa).sum(-1)     # (P, L, A)
+    loadA_dn = loadJ_dn.reshape(P, L, A, cpa).sum(-1) \
+        .transpose(0, 2, 1)                               # (P, A, L)
+    ratex = rate_pair * (pol[:, None] != pol[None, :])[None]
+    loadB_up = jnp.einsum("plm,plmj->plj", ratex, pair) \
+        .reshape(P, pods, lpp, J).sum(2)                  # (P, pods, J)
+    loadB_dn = jnp.einsum("plm,plmj->pmj", ratex, pair) \
+        .reshape(P, pods, lpp, J).sum(2)
+    fA_up, fA_dn = _bottleneck(cfg, up, down, loadA_up, loadA_dn)
+    fB_up, fB_dn = _bottleneck(cfg, up2, down2, loadB_up, loadB_dn)
+    sA = jnp.minimum(fA_up[:, :, aj][:, :, None, :],
+                     fA_dn[:, aj, :].transpose(0, 2, 1)[:, None, :, :])
+    sB = jnp.minimum(fB_up[:, pol, :][:, :, None, :],
+                     fB_dn[:, pol, :][:, None, :, :])
+    scale_pair = jnp.where(cross, jnp.minimum(sA, sB), sA)
+    path_scale = (pair * scale_pair).sum(-1).reshape(P, L * L)
+    through = fabric_rate * path_scale[:, pair_idx].T
+    qmean = (pair * q).sum(-1).reshape(P, L * L)[:, pair_idx].T
+    return loadA_up, loadA_dn, loadB_up, loadB_dn, through, qmean
+
+
+def _route_ecmp_ft(cfg: JxConfig, carry: SimCarry,
+                   fabric_rate: jnp.ndarray, up: jnp.ndarray,
+                   down: jnp.ndarray, up2: jnp.ndarray,
+                   down2: jnp.ndarray, fb: FlowBatch,
+                   assign_segments: jnp.ndarray, load_fn: Callable,
+                   seg: jnp.ndarray):
+    """Fat-tree ECMP: the hash picks a path (= core) index; the serving
+    agg follows from the canonical wiring.  Load plans stack stage-A
+    up/down buckets and stage-B up/down buckets (cross-pod flows only)
+    into one permutation matrix — see `_ecmp_load_plan`."""
+    P, L, A = cfg.n_planes, cfg.n_leaves, cfg.n_aggs
+    J, cpa = cfg.n_paths, cfg.cores_per_agg
+    pods, lpp = cfg.n_pods, cfg.leaves_per_pod
+    assign = assign_segments[seg]                         # (F, P)
+    a_of = assign // cpa
+    pod_s = fb.src_leaf // lpp
+    pod_d = fb.dst_leaf // lpp
+    cross = (pod_s != pod_d)[:, None]                     # (F, 1)
+    p_iota = jnp.arange(P)[None, :].repeat(fabric_rate.shape[0], 0)
+    padT = jnp.concatenate(
+        [fabric_rate, jnp.zeros((1, P), fabric_rate.dtype)], 0).T
+    pidx = jnp.arange(P)[:, None, None]
+    g = padT[pidx, load_fn(seg)]            # (P, LA+AL+2*pods*J, C)
+    loads = _ordered_bucket_sum(g)
+    o1, o2 = L * A, L * A + A * L
+    o3 = o2 + pods * J
+    loadA_up = loads[:, :o1].reshape(P, L, A)
+    loadA_dn = loads[:, o1:o2].reshape(P, A, L)
+    loadB_up = loads[:, o2:o3].reshape(P, pods, J)
+    loadB_dn = loads[:, o3:].reshape(P, pods, J)
+    fA_up, fA_dn = _bottleneck(cfg, up, down, loadA_up, loadA_dn)
+    fB_up, fB_dn = _bottleneck(cfg, up2, down2, loadB_up, loadB_dn)
+    sA = jnp.minimum(fA_up[p_iota, fb.src_leaf[:, None], a_of],
+                     fA_dn[p_iota, a_of, fb.dst_leaf[:, None]])
+    sB = jnp.minimum(fB_up[p_iota, pod_s[:, None], assign],
+                     fB_dn[p_iota, pod_d[:, None], assign])
+    scale_f = jnp.where(cross, jnp.minimum(sA, sB), sA)
+    through = fabric_rate * scale_f
+    qA = (carry.q_up[p_iota, fb.src_leaf[:, None], a_of] +
+          carry.q_down[p_iota, a_of, fb.dst_leaf[:, None]])
+    qB = (carry.q2_up[p_iota, pod_s[:, None], assign] +
+          carry.q2_down[p_iota, pod_d[:, None], assign])
+    qmean = qA + jnp.where(cross, qB, 0.0)
+    return loadA_up, loadA_dn, loadB_up, loadB_dn, through, qmean
+
+
+def _ordered_bucket_sum(g: jnp.ndarray) -> jnp.ndarray:
+    """Sum the trailing bucket-width axis of a gathered (P, rows, C)
+    plan.  Float64 (parity mode) accumulates strictly left-to-right in
+    flow order — see `_AggPerms` — float32 takes the fast tree
+    reduction."""
+    if g.dtype == jnp.float64:
+        return jax.lax.fori_loop(
+            1, g.shape[2],
+            lambda c, acc: acc + jax.lax.dynamic_index_in_dim(
+                g, c, 2, keepdims=False),
+            g[:, :, 0])
+    return g.sum(-1)
+
+
 def _slot_step(cfg: JxConfig, fb: FlowBatch, pair_idx: jnp.ndarray,
                aggs: _AggPerms, assign_segments: jnp.ndarray,
                seg_up: jnp.ndarray, seg_down: jnp.ndarray,
-               seg_acc: jnp.ndarray, stack: Optional[StackIdx],
+               seg_acc: jnp.ndarray, seg_up2: jnp.ndarray,
+               seg_down2: jnp.ndarray, stack: Optional[StackIdx],
                load_fn: Callable, carry: SimCarry, xs):
     # timelines are piecewise-constant, so the scan carries only the
     # (n_seg, ...) boundary snapshots and gathers the current segment
     t, seg = xs
-    up = seg_up[seg] * cfg.uplink_cap                     # (P, L, S)
-    down = seg_down[seg] * cfg.uplink_cap                 # (P, S, L)
+    up = seg_up[seg] * cfg.uplink_cap                     # (P, L, S|A)
+    down = seg_down[seg] * cfg.uplink_cap                 # (P, S|A, L)
     acc = (seg_acc[seg] * cfg.access_cap).T               # (H, P)
+    up2 = seg_up2[seg] * cfg.core_cap                     # (P, pods, C)
+    down2 = seg_down2[seg] * cfg.core_cap
 
     demand = jnp.where(carry.done | (t < fb.start_slot), 0.0, fb.demand)
     offered = _plane_split(cfg, carry.nic, demand, stack)  # (F, P)
     fabric_rate = jnp.where(fb.same_leaf[:, None], 0.0, offered)
 
     # ---- link loads + per-flow fabric throughput/queue, without any
-    # (F, P, S) intermediate: AR/WAR fractions are leaf-pair quantities,
-    # so flows aggregate to (P, L, L) before touching the spine axis;
-    # ECMP's one-hot spine choice reduces to (F, P) gathers + padded
-    # bucket sums.  Each branch returns (load_up, load_down, through,
-    # qmean); under traced dispatch `lax.switch` evaluates both branches
-    # for the whole batch and selects per element.
-    if stack is None:
-        if cfg.routing == "ecmp":
-            load_up, load_down, through, qmean = _route_ecmp(
-                cfg, carry, fabric_rate, up, down, fb, assign_segments,
-                load_fn, seg)
-        else:
-            load_up, load_down, through, qmean = _route_pair(
-                cfg, carry, fabric_rate, up, down, aggs, pair_idx,
-                use_war=cfg.routing == "war")
+    # (F, P, J) load intermediate: AR/WAR fractions are leaf-pair
+    # quantities, so flows aggregate to (P, L, L) before touching the
+    # path axis; ECMP's one-hot path choice reduces to (F, P) gathers +
+    # padded bucket sums.  The topology kind is static, so the branch
+    # list holds that kind's pair/ecmp implementations (fat-tree ones
+    # also return stage-B loads); under traced dispatch `lax.switch`
+    # evaluates both branches for the whole batch and selects per
+    # element.
+    use_war = cfg.routing == "war" if stack is None else stack.is_war
+    if cfg.kind == "fat_tree":
+        branches = [
+            partial(_route_pair_ft, cfg, carry, fabric_rate, up, down,
+                    up2, down2, aggs, pair_idx, use_war),
+            partial(_route_ecmp_ft, cfg, carry, fabric_rate, up, down,
+                    up2, down2, fb, assign_segments, load_fn, seg)]
     else:
         branches = [
             partial(_route_pair, cfg, carry, fabric_rate, up, down,
-                    aggs, pair_idx, stack.is_war),
+                    aggs, pair_idx, use_war),
             partial(_route_ecmp, cfg, carry, fabric_rate, up, down,
                     fb, assign_segments, load_fn, seg)]
-        if isinstance(stack.route, int):
-            # lane-sorted megabatch: the dispatcher grouped elements by
-            # route, so the per-element index is concrete within the
-            # lane and only that branch is traced (no switch tax)
-            load_up, load_down, through, qmean = branches[stack.route]()
-        else:
-            load_up, load_down, through, qmean = jax.lax.switch(
-                stack.route, branches)
+    if stack is None:
+        routed = branches[1 if cfg.routing == "ecmp" else 0]()
+    elif isinstance(stack.route, int):
+        # lane-sorted megabatch: the dispatcher grouped elements by
+        # route, so the per-element index is concrete within the
+        # lane and only that branch is traced (no switch tax)
+        routed = branches[stack.route]()
+    else:
+        routed = jax.lax.switch(stack.route, branches)
+    if cfg.kind == "fat_tree":
+        load_up, load_down, loadB_up, loadB_dn, through, qmean = routed
+    else:
+        load_up, load_down, through, qmean = routed
 
     load_acc_tx = _seg_sum(offered, aggs.src)             # (H, P)
     load_acc_rx = _seg_sum(offered, aggs.dst)
@@ -554,13 +713,24 @@ def _slot_step(cfg: JxConfig, fb: FlowBatch, pair_idx: jnp.ndarray,
                     jnp.minimum(1.0, qmean / (4 * cfg.ecn_queue_thresh)),
                     0.0)
 
-    # ---- queue evolution ----
+    # ---- queue evolution (stage B only exists on fat_tree; the kind
+    # is static, so leaf_spine programs carry the placeholders through
+    # untouched) ----
     q_up = jnp.clip(carry.q_up + (load_up - up) / jnp.maximum(up, _EPS),
                     0.0, cfg.q_cap)
     q_up = jnp.where(up <= _EPS, 0.0, q_up)
     q_down = jnp.clip(carry.q_down + (load_down - down) /
                       jnp.maximum(down, _EPS), 0.0, cfg.q_cap)
     q_down = jnp.where(down <= _EPS, 0.0, q_down)
+    if cfg.kind == "fat_tree":
+        q2_up = jnp.clip(carry.q2_up + (loadB_up - up2) /
+                         jnp.maximum(up2, _EPS), 0.0, cfg.q_cap)
+        q2_up = jnp.where(up2 <= _EPS, 0.0, q2_up)
+        q2_down = jnp.clip(carry.q2_down + (loadB_dn - down2) /
+                           jnp.maximum(down2, _EPS), 0.0, cfg.q_cap)
+        q2_down = jnp.where(down2 <= _EPS, 0.0, q2_down)
+    else:
+        q2_up, q2_down = carry.q2_up, carry.q2_down
     util = load_up / jnp.maximum(up, _EPS)
 
     # ---- NIC control update (pre-stall rates, as in run_sim) ----
@@ -593,17 +763,17 @@ def _slot_step(cfg: JxConfig, fb: FlowBatch, pair_idx: jnp.ndarray,
     goodput_sum = carry.goodput_sum + jnp.where(counted, achieved, 0.0)
 
     new_carry = SimCarry(
-        q_up=q_up, q_down=q_down, nic=nic, remaining=remaining,
-        done=done, completion=completion, goodput_sum=goodput_sum,
-        util_up=util)
+        q_up=q_up, q_down=q_down, q2_up=q2_up, q2_down=q2_down,
+        nic=nic, remaining=remaining, done=done, completion=completion,
+        goodput_sum=goodput_sum, util_up=util)
     return new_carry, achieved.sum()
 
 
 def _simulate(cfg: JxConfig, fb: FlowBatch, seg_up, seg_down, seg_acc,
-              assign_segments, aggs, seg_id, stack=None, carry0=None,
-              ecmp_table=None, uid=None):
+              seg_up2, seg_down2, assign_segments, aggs, seg_id,
+              stack=None, carry0=None, ecmp_table=None, uid=None):
     if carry0 is None:
-        carry0 = init_carry(fb, cfg.n_planes, cfg.n_leaves, cfg.n_spines)
+        carry0 = init_carry(fb, cfg)
     if ecmp_table is None:
         def load_fn(seg):
             return aggs.ecmp_load[seg]
@@ -615,7 +785,8 @@ def _simulate(cfg: JxConfig, fb: FlowBatch, seg_up, seg_down, seg_acc,
     xs = (jnp.arange(cfg.slots), seg_id)
     step = partial(_slot_step, cfg, fb, pair_idx, aggs, assign_segments,
                    jnp.asarray(seg_up), jnp.asarray(seg_down),
-                   jnp.asarray(seg_acc), stack, load_fn)
+                   jnp.asarray(seg_acc), jnp.asarray(seg_up2),
+                   jnp.asarray(seg_down2), stack, load_fn)
     carry, totals = jax.lax.scan(step, carry0, xs)
     r = cfg.record_every
     n_rec = (cfg.slots + r - 1) // r
@@ -626,14 +797,16 @@ def _simulate(cfg: JxConfig, fb: FlowBatch, seg_up, seg_down, seg_acc,
 
 
 def _simulate_mb(cfg: JxConfig, stack: StackIdx, carry0: SimCarry,
-                 fb: FlowBatch, seg_up, seg_down, seg_acc,
-                 assign_segments, aggs, uid, seg_id, ecmp_table):
+                 fb: FlowBatch, seg_up, seg_down, seg_acc, seg_up2,
+                 seg_down2, assign_segments, aggs, uid, seg_id,
+                 ecmp_table):
     """Megabatch element: traced branch dispatch + donated carry.  Every
     argument between `stack` and `seg_id` (inclusive) is vmapped;
     `ecmp_table` is batch-constant (the deduplicated ECMP plan table)."""
-    return _simulate(cfg, fb, seg_up, seg_down, seg_acc, assign_segments,
-                     aggs, seg_id, stack=stack, carry0=carry0,
-                     ecmp_table=ecmp_table, uid=uid)
+    return _simulate(cfg, fb, seg_up, seg_down, seg_acc, seg_up2,
+                     seg_down2, assign_segments, aggs, seg_id,
+                     stack=stack, carry0=carry0, ecmp_table=ecmp_table,
+                     uid=uid)
 
 
 def _jitted(cfg: JxConfig, batched: bool, n_shards: int = 1):
@@ -649,7 +822,7 @@ def _jitted(cfg: JxConfig, batched: bool, n_shards: int = 1):
     if not batched:
         fn = jax.jit(fn)
     else:
-        fn = jax.vmap(fn, in_axes=(0, 0, 0, 0, 0, 0, None))
+        fn = jax.vmap(fn, in_axes=(0,) * 8 + (None,))
         if n_shards == 1:
             fn = jax.jit(fn)
         else:
@@ -658,7 +831,7 @@ def _jitted(cfg: JxConfig, batched: bool, n_shards: int = 1):
             # launch runs its per-device shards on parallel threads —
             # the single-process equivalent of the NumPy backend's
             # process pool
-            fn = jax.pmap(fn, in_axes=(0, 0, 0, 0, 0, 0, None))
+            fn = jax.pmap(fn, in_axes=(0,) * 8 + (None,))
     _JIT_CACHE[key] = fn
     return fn
 
@@ -682,24 +855,24 @@ def _jitted_mb(cfg: JxConfig, n_shards: int = 1,
         return fn
     if lanes is None:
         body = jax.vmap(partial(_simulate_mb, cfg),
-                        in_axes=(0,) * 10 + (None,))
+                        in_axes=(0,) * 12 + (None,))
     else:
         stack_axes = StackIdx(route=None, is_war=0, nic=0, is_esr=0)
         v = jax.vmap(partial(_simulate_mb, cfg),
-                     in_axes=(stack_axes,) + (0,) * 9 + (None,))
+                     in_axes=(stack_axes,) + (0,) * 11 + (None,))
         tm = jax.tree_util.tree_map
 
-        def body(stack, carry0, fb, up, down, acc, assign, aggs, uid,
-                 seg_id, table):
+        def body(stack, carry0, fb, up, down, acc, up2, down2, assign,
+                 aggs, uid, seg_id, table):
             outs, off = [], 0
             for route, n in lanes:
                 def cut(x, off=off, n=n):
                     return jax.lax.slice_in_dim(x, off, off + n, axis=0)
                 st = tm(cut, stack)._replace(route=route)
                 outs.append(v(st, tm(cut, carry0), tm(cut, fb), cut(up),
-                              cut(down), cut(acc), cut(assign),
-                              tm(cut, aggs), cut(uid), cut(seg_id),
-                              table))
+                              cut(down), cut(acc), cut(up2), cut(down2),
+                              cut(assign), tm(cut, aggs), cut(uid),
+                              cut(seg_id), table))
                 off += n
             return tuple(jnp.concatenate(parts, 0)
                          for parts in zip(*outs))
@@ -707,7 +880,7 @@ def _jitted_mb(cfg: JxConfig, n_shards: int = 1,
     if n_shards == 1:
         fn = jax.jit(body, donate_argnums=(1,))
     else:
-        fn = jax.pmap(body, in_axes=(0,) * 10 + (None,),
+        fn = jax.pmap(body, in_axes=(0,) * 12 + (None,),
                       donate_argnums=(1,))
     _JIT_CACHE[key] = fn
     return fn
@@ -749,50 +922,123 @@ def _seg_id(boundaries, slots: int) -> np.ndarray:
 def _assign_for(cfg: JxConfig, fa: FlowArrays, tl: FaultTimeline,
                 seed: int, boundaries) -> np.ndarray:
     if cfg.routing == "ecmp":
-        return ecmp_assign_segments(fa.src_leaf, fa.dst_leaf, tl, seed,
-                                    cfg.n_spines, boundaries,
-                                    uplink_cap=cfg.uplink_cap)
+        return ecmp_assign_segments(
+            fa.src_leaf, fa.dst_leaf, tl, seed, cfg.n_paths, boundaries,
+            uplink_cap=cfg.uplink_cap, core_cap=cfg.core_cap,
+            cores_per_agg=cfg.cores_per_agg,
+            leaves_per_pod=cfg.leaves_per_pod)
     return np.zeros((1, len(fa), cfg.n_planes), np.int32)
 
 
 def _seg_caps(tl: FaultTimeline, boundaries
-              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+              ) -> Tuple[np.ndarray, ...]:
     """Compress a dense timeline to its boundary snapshots
-    ((n_seg, ...) each) — the engine re-expands via `_seg_id` gathers."""
+    ((n_seg, ...) each) — the engine re-expands via `_seg_id` gathers.
+    Stage-B snapshots are (n_seg, P, 1, 1) ones on leaf_spine (passed
+    through but never read by that kind's traced program)."""
     b = list(boundaries)
-    return tl.up[b], tl.down[b], tl.access[b]
+    if tl.up2 is not None:
+        return (tl.up[b], tl.down[b], tl.access[b], tl.up2[b],
+                tl.down2[b])
+    P = tl.up.shape[1]
+    dummy = np.ones((len(b), P, 1, 1))
+    return tl.up[b], tl.down[b], tl.access[b], dummy, dummy
+
+
+def _masked_perm_matrix(keys: np.ndarray, mask: np.ndarray,
+                        n_buckets: int, width: int,
+                        pad: int) -> np.ndarray:
+    """`_perm_matrix` over only the flows where `mask` — the stage-B
+    fat-tree plans exclude intra-pod flows (which never touch a core
+    link; the NumPy path adds exact 0.0 for them, so exclusion is
+    bit-equivalent).  Flow order is preserved within buckets."""
+    perm = np.full((n_buckets, width), pad, np.int32)
+    idx = np.flatnonzero(mask)
+    sub = np.asarray(keys)[idx]
+    order = np.argsort(sub, kind="stable")
+    sk = sub[order]
+    counts = np.bincount(sk, minlength=n_buckets)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    ranks = np.arange(len(sk)) - starts[sk]
+    perm[sk, ranks] = idx[order]
+    return perm
+
+
+def _ft_ecmp_keys(cfg: JxConfig, fa: FlowArrays, assign_gp: np.ndarray
+                  ) -> Tuple[Tuple[np.ndarray, np.ndarray, int], ...]:
+    """The four fat-tree load-bucket key families for one (segment,
+    plane) assignment column: (keys, mask, n_buckets) each, in plan
+    row order (A-up, A-down, B-up, B-down)."""
+    L, A = cfg.n_leaves, cfg.n_aggs
+    J, pods = cfg.n_paths, cfg.n_pods
+    a_of = assign_gp // cfg.cores_per_agg
+    pod_s = fa.src_leaf // cfg.leaves_per_pod
+    pod_d = fa.dst_leaf // cfg.leaves_per_pod
+    cross = pod_s != pod_d
+    every = np.ones(len(fa), bool)
+    return ((fa.src_leaf * A + a_of, every, L * A),
+            (a_of * L + fa.dst_leaf, every, A * L),
+            (pod_s * J + assign_gp, cross, pods * J),
+            (pod_d * J + assign_gp, cross, pods * J))
+
+
+def _plan_rows(cfg: JxConfig) -> int:
+    """Row count of one ECMP load plan: stage-A up+down buckets, plus
+    the two stage-B bucket families on fat_tree."""
+    if cfg.kind == "fat_tree":
+        L, A = cfg.n_leaves, cfg.n_aggs
+        return L * A + A * L + 2 * cfg.n_pods * cfg.n_paths
+    return 2 * cfg.n_leaves * cfg.n_spines
 
 
 def _agg_widths(cfg: JxConfig, fa: FlowArrays,
                 assign: np.ndarray) -> Tuple[int, ...]:
     """Max bucket sizes for each aggregation axis (shared across a batch
     so the padded perm matrices stack)."""
-    def w(keys, n):
+    def w(keys, n, mask=None):
+        if mask is not None:
+            keys = keys[mask]
+            if keys.size == 0:
+                return 1
         return max(1, int(np.bincount(keys, minlength=n).max()))
     H, L, S, P = cfg.n_hosts, cfg.n_leaves, cfg.n_spines, cfg.n_planes
     wu = 1
     if cfg.routing == "ecmp":
         for g in range(assign.shape[0]):
             for p in range(P):
-                wu = max(wu,
-                         w(fa.src_leaf * S + assign[g][:, p], L * S),
-                         w(assign[g][:, p] * L + fa.dst_leaf, S * L))
+                if cfg.kind == "fat_tree":
+                    wu = max([wu] + [
+                        w(keys, n, mask) for keys, mask, n in
+                        _ft_ecmp_keys(cfg, fa, assign[g][:, p])])
+                else:
+                    wu = max(wu,
+                             w(fa.src_leaf * S + assign[g][:, p], L * S),
+                             w(assign[g][:, p] * L + fa.dst_leaf, S * L))
     return (w(fa.src, H), w(fa.dst, H),
             w(fa.src_leaf * L + fa.dst_leaf, L * L), wu)
 
 
 def _ecmp_load_plan(cfg: JxConfig, fa: FlowArrays, assign: np.ndarray,
                     wu: int, pad: int) -> np.ndarray:
-    """(n_seg, P, L*S + S*L, wu) ECMP load-aggregation plan (see
+    """(n_seg, P, `_plan_rows(cfg)`, wu) ECMP load-aggregation plan (see
     `_AggPerms.ecmp_load`) — the single builder shared by the per-group
     and megabatch paths, so their 1e-5 row-identity cannot drift."""
     P, L, S = cfg.n_planes, cfg.n_leaves, cfg.n_spines
-    return np.stack([
-        np.stack([np.concatenate([
+
+    def plane(g, p):
+        if cfg.kind == "fat_tree":
+            return np.concatenate([
+                _masked_perm_matrix(keys, mask, n, wu, pad)
+                for keys, mask, n in
+                _ft_ecmp_keys(cfg, fa, assign[g][:, p])])
+        return np.concatenate([
             _perm_matrix(fa.src_leaf * S + assign[g][:, p],
                          L * S, wu, pad),
             _perm_matrix(assign[g][:, p] * L + fa.dst_leaf,
-                         S * L, wu, pad)]) for p in range(P)])
+                         S * L, wu, pad)])
+
+    return np.stack([
+        np.stack([plane(g, p) for p in range(P)])
         for g in range(assign.shape[0])])
 
 
@@ -834,9 +1080,9 @@ def run_compiled(compiled) -> JxSimResult:
     boundaries = tuple(tl.change_slots())
     segs = _assign_for(cfg, fa, tl, compiled.cfg.seed, boundaries)
     aggs = _aggs_for(cfg, fa, segs, _agg_widths(cfg, fa, segs))
-    up, down, acc = _seg_caps(tl, boundaries)
-    args = (FlowBatch.from_arrays(fa), up, down, acc, segs, aggs,
-            _seg_id(boundaries, cfg.slots))
+    up, down, acc, up2, down2 = _seg_caps(tl, boundaries)
+    args = (FlowBatch.from_arrays(fa), up, down, acc, up2, down2, segs,
+            aggs, _seg_id(boundaries, cfg.slots))
     _record_launch("group", (cfg, False, 1), args)
     out = _jitted(cfg, False)(*args)
     return _wrap(cfg, fa, out)
@@ -876,12 +1122,10 @@ def dispatch_compiled_batch(points: List):
             for (_, fa, _), a in zip(prepared, assigns)]
     fb = FlowBatch.stack([fa for _, fa, _ in prepared])
     caps = [_seg_caps(tl, boundaries) for _, _, tl in prepared]
-    up = np.stack([u for u, _, _ in caps])
-    down = np.stack([d for _, d, _ in caps])
-    acc = np.stack([a for _, _, a in caps])
+    up, down, acc, up2, down2 = (np.stack(col) for col in zip(*caps))
     seg_id = _seg_id(boundaries, cfg.slots)
     aggs_b = _AggPerms(*(np.stack(col) for col in zip(*aggs)))
-    args = [fb, up, down, acc, np.stack(assigns), aggs_b]
+    args = [fb, up, down, acc, up2, down2, np.stack(assigns), aggs_b]
     B = len(points)
     n_dev = len(jax.devices())
     shards = min(B, n_dev) if n_dev > 1 and B > 1 else 1

@@ -174,11 +174,11 @@ def _carry0(B: int, F_b: int, cfg: JxConfig,
             remaining: np.ndarray) -> engine.SimCarry:
     """Batched initial scan carry (the donated argument), mirroring
     `state.init_carry`'s dtypes under the active x64 setting."""
-    from .state import NicCarry, SimCarry
+    from .state import NicCarry, SimCarry, stage_shapes
     x64 = bool(jax.config.jax_enable_x64)
     fdt = np.float64 if x64 else np.float32
     idt = np.int64 if x64 else np.int32
-    P, L, S = cfg.n_planes, cfg.n_leaves, cfg.n_spines
+    (P, L, U), b_shape = stage_shapes(cfg)
     nic = NicCarry(
         rate=np.ones((B, F_b, P), fdt),
         alpha=np.zeros((B, F_b, P), fdt),
@@ -186,14 +186,16 @@ def _carry0(B: int, F_b: int, cfg: JxConfig,
         eligible=np.ones((B, F_b, P), bool),
         pending_fail=np.zeros((B, F_b, P), idt))
     return SimCarry(
-        q_up=np.zeros((B, P, L, S), fdt),
-        q_down=np.zeros((B, P, S, L), fdt),
+        q_up=np.zeros((B, P, L, U), fdt),
+        q_down=np.zeros((B, P, U, L), fdt),
+        q2_up=np.zeros((B,) + b_shape, fdt),
+        q2_down=np.zeros((B,) + b_shape, fdt),
         nic=nic,
         remaining=remaining.astype(fdt),
         done=np.zeros((B, F_b), bool),
         completion=np.full((B, F_b), -1, idt),
         goodput_sum=np.zeros((B, F_b), fdt),
-        util_up=np.zeros((B, P, L, S), fdt))
+        util_up=np.zeros((B, P, L, U), fdt))
 
 
 def _dispatch_group(cfg: JxConfig, pts: List[_Point], caches: Dict):
@@ -214,12 +216,12 @@ def _dispatch_group(cfg: JxConfig, pts: List[_Point], caches: Dict):
     widths = tuple(_bucket(m) for m in
                    map(max, zip(*(p.widths for p in pts))))
     wu = widths[3]
-    P, L, S = cfg.n_planes, cfg.n_leaves, cfg.n_spines
+    P = cfg.n_planes
 
     # deduplicated ECMP plan table; uid 0 = the inert all-pad plan that
     # pair-routed elements point at (its gathers read the zero row)
     rows: List[np.ndarray] = [
-        np.full((seg_b, P, L * S + S * L, wu), F_b, np.int32)]
+        np.full((seg_b, P, engine._plan_rows(cfg), wu), F_b, np.int32)]
     row_uid: Dict[Tuple, int] = {}
     zero_assign = np.zeros((seg_b, F_b, P), np.int32)
 
@@ -251,10 +253,11 @@ def _dispatch_group(cfg: JxConfig, pts: List[_Point], caches: Dict):
         skey = ("segcaps", p.tl_key, seg_b)
         padded = caches.get(skey)
         if padded is None:
-            u, d, ac = p.caps
+            u, d, ac, u2, d2 = p.caps
             padded = caches[skey] = (
                 _pad_segs(u, seg_b), _pad_segs(d, seg_b),
-                _pad_segs(ac, seg_b),
+                _pad_segs(ac, seg_b), _pad_segs(u2, seg_b),
+                _pad_segs(d2, seg_b),
                 engine._seg_id(p.boundaries, cfg.slots))
         return {"index": p.index, "fa": p.fa, "cols": cols,
                 "perms": perms, "uid": uid, "assign": assign,
@@ -301,9 +304,11 @@ def _dispatch_group(cfg: JxConfig, pts: List[_Point], caches: Dict):
               np.stack([e["caps"][0] for e in seq]),
               np.stack([e["caps"][1] for e in seq]),
               np.stack([e["caps"][2] for e in seq]),
+              np.stack([e["caps"][3] for e in seq]),
+              np.stack([e["caps"][4] for e in seq]),
               np.stack([e["assign"] for e in seq]), aggs,
               np.array([e["uid"] for e in seq], np.int32),
-              np.stack([e["caps"][3] for e in seq]))
+              np.stack([e["caps"][5] for e in seq]))
     if shards > 1:
         mapped = jax.tree_util.tree_map(
             lambda a: np.asarray(a).reshape(

@@ -65,20 +65,35 @@ class NicCarry(NamedTuple):
 
 
 class SimCarry(NamedTuple):
-    q_up: jnp.ndarray          # (P, L, S) queue, slot*cap units
-    q_down: jnp.ndarray        # (P, S, L)
+    """Stage-A queues (`q_up`/`q_down`) are leaf↔spine on leaf_spine
+    and leaf↔agg on fat_tree; stage-B queues (`q2_up`/`q2_down`) are
+    the fat-tree pod↔core tier — (P, 1, 1) placeholders on leaf_spine,
+    never read there (the topology kind is static at trace time)."""
+    q_up: jnp.ndarray          # (P, L, S|A) queue, slot*cap units
+    q_down: jnp.ndarray        # (P, S|A, L)
+    q2_up: jnp.ndarray         # (P, pods, C) fat_tree; (P, 1, 1) else
+    q2_down: jnp.ndarray       # (P, pods, C) fat_tree; (P, 1, 1) else
     nic: NicCarry
     remaining: jnp.ndarray     # (F,)
     done: jnp.ndarray          # (F,) bool
     completion: jnp.ndarray    # (F,) int, -1 = unfinished
     goodput_sum: jnp.ndarray   # (F,) sum of achieved over counted frames
-    util_up: jnp.ndarray       # (P, L, S) last slot's uplink utilization
+    util_up: jnp.ndarray       # (P, L, S|A) last slot's uplink utilization
 
 
-def init_carry(fb: FlowBatch, n_planes: int, n_leaves: int,
-               n_spines: int) -> SimCarry:
+def stage_shapes(cfg) -> Tuple[Tuple[int, int, int], Tuple[int, int, int]]:
+    """((P, L, n_up), (P, pods_b, cores_b)) queue/capacity shapes for a
+    `JxConfig`-like object — the single source of truth both backends'
+    carry builders use."""
+    P, L = cfg.n_planes, cfg.n_leaves
+    if cfg.kind == "fat_tree":
+        return (P, L, cfg.n_aggs), (P, cfg.n_pods, cfg.n_cores)
+    return (P, L, cfg.n_spines), (P, 1, 1)
+
+
+def init_carry(fb: FlowBatch, cfg) -> SimCarry:
     F = fb.src.shape[0]
-    P, L, S = n_planes, n_leaves, n_spines
+    (P, L, U), b_shape = stage_shapes(cfg)
     dtype = jnp.asarray(0.0).dtype          # float64 iff x64 enabled
     itype = jnp.asarray(np.int64(0)).dtype
     nic = NicCarry(
@@ -88,11 +103,13 @@ def init_carry(fb: FlowBatch, n_planes: int, n_leaves: int,
         eligible=jnp.ones((F, P), bool),
         pending_fail=jnp.zeros((F, P), itype))
     return SimCarry(
-        q_up=jnp.zeros((P, L, S), dtype),
-        q_down=jnp.zeros((P, S, L), dtype),
+        q_up=jnp.zeros((P, L, U), dtype),
+        q_down=jnp.zeros((P, U, L), dtype),
+        q2_up=jnp.zeros(b_shape, dtype),
+        q2_down=jnp.zeros(b_shape, dtype),
         nic=nic,
         remaining=fb.bytes_total.astype(dtype),
         done=jnp.zeros(F, bool),
         completion=jnp.full(F, -1, itype),
         goodput_sum=jnp.zeros(F, dtype),
-        util_up=jnp.zeros((P, L, S), dtype))
+        util_up=jnp.zeros((P, L, U), dtype))

@@ -8,7 +8,7 @@ import numpy as np
 
 from .cc import NicState
 from .fabric import Flow, FlowArrays, FluidFabric
-from .topology import LeafSpine
+from .topology import Fabric, LeafSpine
 
 
 @dataclass
@@ -56,9 +56,11 @@ class SimResult:
 def rehash_dead_assign(alive: np.ndarray, assign: np.ndarray,
                        rng: np.random.Generator, n_spines: int
                        ) -> np.ndarray:
-    """Re-hash ECMP assignments whose path died onto a surviving spine.
+    """Re-hash ECMP assignments whose path died onto a surviving path
+    (`n_spines` is the path-axis size: spines on leaf_spine, cores on
+    fat_tree).
 
-    `alive`: (F, P, S) path liveness; `assign`: (F, P) current spine per
+    `alive`: (F, P, J) path liveness; `assign`: (F, P) current path per
     (flow, plane).  Draws from `rng` only when some assignment is dead
     with an alive alternative — the JAX backend's host-side replay
     (`netsim.jx.events.ecmp_assign_segments`) shares this function so
@@ -78,30 +80,30 @@ def rehash_dead_assign(alive: np.ndarray, assign: np.ndarray,
     return assign
 
 
-def run_sim(topo: LeafSpine, flows: List[Flow], cfg: SimConfig,
-            events: Optional[Callable[[int, LeafSpine], None]] = None,
+def run_sim(topo: Fabric, flows: List[Flow], cfg: SimConfig,
+            events: Optional[Callable[[int, Fabric], None]] = None,
             ) -> SimResult:
     rng = np.random.default_rng(cfg.seed)
     fa = FlowArrays.build(flows, topo)
-    F, P, S = len(fa), topo.n_planes, topo.n_spines
+    F, P, J = len(fa), topo.n_planes, topo.n_paths
     fabric = FluidFabric(topo, base_rtt_us=cfg.base_rtt_us,
                          slot_us=cfg.slot_us)
     nic = NicState(
         mode=cfg.nic, n_flows=F, n_planes=P,
         sw_lb_delay_slots=cfg.sw_lb_delay_slots())
 
-    # ECMP static assignment: one spine per (flow, plane).  Routing
-    # withdraws dead paths (slow control plane), so flows whose assigned
-    # spine-path died are re-hashed onto survivors — ECMP's problem is
-    # imbalance, not black-holing.
-    assign = rng.integers(0, S, size=(F, P))
+    # ECMP static assignment: one path per (flow, plane) — a spine on
+    # leaf_spine, an (agg, core) tuple on fat_tree, where the canonical
+    # wiring makes the core index determine the agg on both ends so the
+    # hash is a single draw over [0, n_paths).  Routing withdraws dead
+    # paths (slow control plane), so flows whose assigned path died are
+    # re-hashed onto survivors — ECMP's problem is imbalance, not
+    # black-holing.
+    assign = rng.integers(0, J, size=(F, P))
 
     def _rehash_dead(assign):
-        cap = np.minimum(
-            topo.up[:, fa.src_leaf, :],
-            np.swapaxes(topo.down, 1, 2)[:, fa.dst_leaf, :])  # (P, F, S)
-        cap = cap.transpose(1, 0, 2)                          # (F, P, S)
-        return rehash_dead_assign(cap > 1e-12, assign, rng, S)
+        cap = topo.path_capacity(fa.src_leaf, fa.dst_leaf)    # (F, P, J)
+        return rehash_dead_assign(cap > 1e-12, assign, rng, J)
     remaining = fa.bytes_total.copy()
     done = np.zeros(F, bool)
     completion = np.full(F, -1, np.int64)
@@ -112,6 +114,7 @@ def run_sim(topo: LeafSpine, flows: List[Flow], cfg: SimConfig,
             events(t, topo)
         demand = np.where(done | (t < fa.start_slot), 0.0, fa.demand)
         offered = nic.plane_split(demand)
+        pair = None
         if cfg.routing == "ecmp":
             assign = _rehash_dead(assign)
             frac = fabric.ecmp_fractions(fa, assign)
@@ -119,12 +122,12 @@ def run_sim(topo: LeafSpine, flows: List[Flow], cfg: SimConfig,
             rw = None
             if cfg.routing == "war":
                 # remote weight = normalized healthy down-capacity
-                dn = topo.down
-                rw = dn / np.maximum(dn.max(axis=1, keepdims=True), 1e-9)
+                # (stage-composed on fat_tree)
+                rw = fabric.remote_weights()
             pair = fabric.pair_fractions("war" if rw is not None else "ar",
                                          rw)
             frac = pair[:, fa.src_leaf, fa.dst_leaf, :].transpose(1, 0, 2)
-        res = fabric.step(fa, offered, frac)
+        res = fabric.step(fa, offered, frac, pair=pair)
         # RTT probes: a plane is reachable iff both endpoints' access links
         # on that plane are up (probes run independently of data traffic)
         probe_ok = ((topo.access.T[fa.src] > 1e-12) &

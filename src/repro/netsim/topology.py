@@ -1,14 +1,41 @@
-"""Multi-plane leaf–spine topologies (NSX-style, fluid granularity).
+"""Tier-generic fabrics: multi-plane leaf–spine and 3-tier fat-tree.
 
 Link capacities are normalized to 1.0 = one port at line rate.  Parallel
 links between switches (sub-max-scale consolidation, §6.1) appear as
 capacity > 1 on a (leaf, spine) edge.  Every plane is an independent copy
 (§3.1: planes are disconnected, joined only at the host NIC).
+
+Two fabric kinds share one protocol (`Fabric`):
+
+* `LeafSpine` — the paper's flat multiplane design: one switching stage,
+  path axis = spine index.
+* `FatTree` — the hierarchical 3-tier baseline (leaf–agg–core with pods)
+  the multiplane argument is made against.  Canonical wiring: core `j`
+  attaches to agg `j // (n_cores // n_aggs)` in *every* pod, so an
+  inter-pod path is fully determined by the core index and the path axis
+  is simply `j ∈ [0, n_cores)`; intra-pod paths alias onto aggs via
+  `agg_of_path[j]`.  Two link stages result:
+
+    stage A  leaf↔agg   `up`/`down`, shapes (P, L, A) / (P, A, L)
+             (aggs are pod-local: leaf `l` reaches only its pod's aggs,
+             so the local agg index `a` is unambiguous given `l`)
+    stage B  pod↔core   `up2`/`down2`, shapes (P, pods, C)
+             (each core has exactly one agg link per pod)
+
+  Oversubscription is the ratio of a leaf's host-facing capacity to its
+  stage-A uplink capacity, tuned via `link_cap`/`parallel_links` and
+  `core_link_cap` (stage B).
+
+Both kinds expose `n_paths`, `path_capacity` (the per-(src_leaf,
+dst_leaf, path) min-capacity the ECMP re-hash and max-flow build on),
+and tier-aware fault injection; `maxflow_matrix` computes the exact
+min-cut across stages (the layered graphs are series-parallel) and sums
+across planes.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -22,6 +49,8 @@ class LeafSpine:
     parallel_links: int = 1
     link_cap: float = 1.0
     access_cap: float = 1.0
+
+    kind = "leaf_spine"
 
     # capacity arrays (set in __post_init__)
     up: np.ndarray = field(init=False)      # (P, L, S) leaf->spine
@@ -40,8 +69,20 @@ class LeafSpine:
     def n_hosts(self) -> int:
         return self.n_leaves * self.hosts_per_leaf
 
+    @property
+    def n_paths(self) -> int:
+        """Size of the per-(leaf pair) routing-choice axis."""
+        return self.n_spines
+
     def leaf_of(self, host: int) -> int:
         return host // self.hosts_per_leaf
+
+    def path_capacity(self, src_leaf: np.ndarray, dst_leaf: np.ndarray
+                      ) -> np.ndarray:
+        """(F, P, J) min capacity along each path for each leaf pair."""
+        cap = np.minimum(self.up[:, src_leaf, :],
+                         np.swapaxes(self.down, 1, 2)[:, dst_leaf, :])
+        return cap.transpose(1, 0, 2)
 
     # ---- fault injection -------------------------------------------------
     def fail_uplink(self, plane: int, leaf: int, spine: int,
@@ -80,15 +121,229 @@ class LeafSpine:
         return t
 
 
-def leaf_pair_maxflow(t: LeafSpine, plane: int, l1: int, l2: int) -> float:
-    """Max flow leaf->leaf through the spine tier (2-tier: sum over spines
-    of min(up, down))."""
-    return float(np.sum(np.minimum(t.up[plane, l1, :],
-                                   t.down[plane, :, l2])))
+@dataclass
+class FatTree:
+    """3-tier leaf–agg–core fat-tree (see module docstring for the
+    path-axis reduction).  `n_cores` must be a multiple of `n_aggs`;
+    `core_link_cap` <= 0 inherits the stage-A uplink capacity."""
+    n_pods: int
+    leaves_per_pod: int
+    n_aggs: int                  # agg switches per pod
+    n_cores: int                 # core switches, total
+    hosts_per_leaf: int
+    n_planes: int = 1
+    parallel_links: int = 1
+    link_cap: float = 1.0        # leaf<->agg discrete link
+    core_link_cap: float = 0.0   # pod<->core link; <= 0 -> uplink_cap
+    access_cap: float = 1.0
+
+    kind = "fat_tree"
+
+    up: np.ndarray = field(init=False)      # (P, L, A) leaf->agg (local a)
+    down: np.ndarray = field(init=False)    # (P, A, L) agg->leaf
+    up2: np.ndarray = field(init=False)     # (P, pods, C) agg->core
+    down2: np.ndarray = field(init=False)   # (P, pods, C) core->agg
+    access: np.ndarray = field(init=False)  # (P, H)
+
+    def __post_init__(self):
+        if self.n_pods < 2:
+            raise ValueError("FatTree requires n_pods >= 2 "
+                             "(use LeafSpine for a single-stage fabric)")
+        if self.n_cores % self.n_aggs != 0 or self.n_cores < self.n_aggs:
+            raise ValueError(
+                f"n_cores ({self.n_cores}) must be a positive multiple "
+                f"of n_aggs ({self.n_aggs})")
+        P, L, A = self.n_planes, self.n_leaves, self.n_aggs
+        cap = self.link_cap * self.parallel_links
+        self.up = np.full((P, L, A), cap, np.float64)
+        self.down = np.full((P, A, L), cap, np.float64)
+        ccap = self.core_cap
+        self.up2 = np.full((P, self.n_pods, self.n_cores), ccap,
+                           np.float64)
+        self.down2 = np.full((P, self.n_pods, self.n_cores), ccap,
+                             np.float64)
+        self.access = np.full((P, self.n_hosts), self.access_cap,
+                              np.float64)
+
+    # ---- shape helpers ---------------------------------------------------
+    @property
+    def n_leaves(self) -> int:
+        return self.n_pods * self.leaves_per_pod
+
+    @property
+    def n_hosts(self) -> int:
+        return self.n_leaves * self.hosts_per_leaf
+
+    @property
+    def n_paths(self) -> int:
+        return self.n_cores
+
+    @property
+    def cores_per_agg(self) -> int:
+        return self.n_cores // self.n_aggs
+
+    @property
+    def core_cap(self) -> float:
+        return (self.core_link_cap if self.core_link_cap > 0
+                else self.link_cap * self.parallel_links)
+
+    @property
+    def agg_of_path(self) -> np.ndarray:
+        """(C,) local agg index serving path (= core) j, in every pod."""
+        return np.arange(self.n_cores) // self.cores_per_agg
+
+    @property
+    def pod_of_leaf(self) -> np.ndarray:
+        return np.arange(self.n_leaves) // self.leaves_per_pod
+
+    def leaf_of(self, host: int) -> int:
+        return host // self.hosts_per_leaf
+
+    def path_capacity(self, src_leaf: np.ndarray, dst_leaf: np.ndarray
+                      ) -> np.ndarray:
+        """(F, P, J) min capacity along each path: stage-A on both ends,
+        plus the pod<->core hops when the pair crosses pods."""
+        src_leaf = np.asarray(src_leaf)
+        dst_leaf = np.asarray(dst_leaf)
+        aj = self.agg_of_path
+        capA = np.minimum(self.up[:, src_leaf, :][:, :, aj],
+                          self.down[:, aj, :][:, :, dst_leaf]
+                          .transpose(0, 2, 1))            # (P, F, J)
+        pod_s = self.pod_of_leaf[src_leaf]
+        pod_d = self.pod_of_leaf[dst_leaf]
+        capB = np.minimum(self.up2[:, pod_s, :],
+                          self.down2[:, pod_d, :])        # (P, F, J)
+        cross = (pod_s != pod_d)[None, :, None]
+        return np.where(cross, np.minimum(capA, capB),
+                        capA).transpose(1, 0, 2)
+
+    # ---- fault injection -------------------------------------------------
+    def fail_uplink(self, plane: int, leaf: int, agg: int,
+                    frac: float = 1.0) -> None:
+        """Kill `frac` of a stage-A (leaf, local agg) link."""
+        self.up[plane, leaf, agg] *= (1.0 - frac)
+        self.down[plane, agg, leaf] *= (1.0 - frac)
+
+    def fail_core_link(self, plane: int, pod: int, core: int,
+                       frac: float = 1.0) -> None:
+        """Kill `frac` of a stage-B (pod, core) link pair."""
+        self.up2[plane, pod, core] *= (1.0 - frac)
+        self.down2[plane, pod, core] *= (1.0 - frac)
+
+    def fail_agg(self, plane: int, pod: int, agg: int) -> None:
+        """Whole-switch loss: the agg's leaf links and core links die."""
+        lo, hi = pod * self.leaves_per_pod, (pod + 1) * self.leaves_per_pod
+        self.up[plane, lo:hi, agg] = 0.0
+        self.down[plane, agg, lo:hi] = 0.0
+        cores = np.flatnonzero(self.agg_of_path == agg)
+        self.up2[plane, pod, cores] = 0.0
+        self.down2[plane, pod, cores] = 0.0
+
+    def trim_leaf_uplinks(self, plane: int, leaf: int,
+                          keep_frac: float) -> None:
+        self.up[plane, leaf, :] *= keep_frac
+        self.down[plane, :, leaf] *= keep_frac
+
+    def fail_access(self, plane: int, host: int) -> None:
+        self.access[plane, host] = 0.0
+
+    def restore_access(self, plane: int, host: int) -> None:
+        self.access[plane, host] = self.access_cap
+
+    def random_link_failures(self, rng: np.random.Generator,
+                             frac: float) -> None:
+        """Uniform random failures over BOTH stages: every leaf–agg and
+        every pod–core link fails independently with probability `frac`
+        (one discrete link subtracted, floor 0)."""
+        for p in range(self.n_planes):
+            mask = rng.random((self.n_leaves, self.n_aggs)) < frac
+            unit = self.link_cap
+            self.up[p] = np.maximum(self.up[p] - mask * unit, 0.0)
+            self.down[p] = np.maximum(self.down[p] - mask.T * unit, 0.0)
+            mask2 = rng.random((self.n_pods, self.n_cores)) < frac
+            unit2 = self.core_cap
+            self.up2[p] = np.maximum(self.up2[p] - mask2 * unit2, 0.0)
+            self.down2[p] = np.maximum(self.down2[p] - mask2 * unit2, 0.0)
+
+    def copy(self) -> "FatTree":
+        t = FatTree(self.n_pods, self.leaves_per_pod, self.n_aggs,
+                    self.n_cores, self.hosts_per_leaf, self.n_planes,
+                    self.parallel_links, self.link_cap,
+                    self.core_link_cap, self.access_cap)
+        t.up = self.up.copy()
+        t.down = self.down.copy()
+        t.up2 = self.up2.copy()
+        t.down2 = self.down2.copy()
+        t.access = self.access.copy()
+        return t
 
 
-def maxflow_matrix(t: LeafSpine, plane: int = 0) -> np.ndarray:
-    """(L, L) leaf-pair max-flow (Fig 1c)."""
-    up = t.up[plane]                     # (L, S)
-    down = t.down[plane]                 # (S, L)
-    return np.minimum(up[:, None, :], down.T[None, :, :]).sum(-1)
+Fabric = Union[LeafSpine, FatTree]
+
+
+# ---------------------------------------------------------------------------
+# max-flow as min-cut across stages
+# ---------------------------------------------------------------------------
+
+def _planes(t: Fabric, plane: Optional[int]) -> List[int]:
+    return list(range(t.n_planes)) if plane is None else [plane]
+
+
+def leaf_pair_maxflow(t: Fabric, l1: int, l2: int,
+                      plane: Optional[int] = None) -> float:
+    """Max flow leaf->leaf through the fabric.  `plane=None` (default)
+    sums every plane — planes are disconnected copies joined at the NIC,
+    so fabric-level max-flow is additive across them; pass an int to
+    restrict to one plane.
+
+    leaf_spine: sum over spines of min(up, down).
+    fat_tree:   exact min-cut of the series-parallel layered graph —
+    per agg, the leaf-facing bottleneck caps the parallel core bundle:
+    sum_a min(min(up1, down1), sum_{j in a} min(up2, down2)) for
+    cross-pod pairs; intra-pod pairs never leave stage A.
+    """
+    total = 0.0
+    for p in _planes(t, plane):
+        if t.kind == "leaf_spine":
+            total += float(np.sum(np.minimum(t.up[p, l1, :],
+                                             t.down[p, :, l2])))
+            continue
+        capA = np.minimum(t.up[p, l1, :], t.down[p, :, l2])   # (A,)
+        pod1 = int(t.pod_of_leaf[l1])
+        pod2 = int(t.pod_of_leaf[l2])
+        if pod1 == pod2:
+            total += float(capA.sum())
+            continue
+        capB = np.minimum(t.up2[p, pod1, :], t.down2[p, pod2, :])  # (C,)
+        bundle = capB.reshape(t.n_aggs, t.cores_per_agg).sum(1)
+        total += float(np.minimum(capA, bundle).sum())
+    return total
+
+
+def maxflow_matrix(t: Fabric, plane: Optional[int] = None) -> np.ndarray:
+    """(L, L) leaf-pair max-flow (Fig 1c).  `plane=None` sums across
+    planes (the whole-fabric figure the multiplane claims are about);
+    an int restricts to one plane."""
+    L = t.n_leaves
+    out = np.zeros((L, L))
+    for p in _planes(t, plane):
+        if t.kind == "leaf_spine":
+            up = t.up[p]                     # (L, S)
+            down = t.down[p]                 # (S, L)
+            out += np.minimum(up[:, None, :],
+                              down.T[None, :, :]).sum(-1)
+            continue
+        capA = np.minimum(t.up[p][:, None, :],
+                          t.down[p].T[None, :, :])        # (L, L, A)
+        pods = t.pod_of_leaf
+        # stage B only varies per (pod, pod): bundle at pod granularity
+        # first, then gather per leaf pair — (pods, pods, A), not (L, L, C)
+        capB_pod = np.minimum(t.up2[p][:, None, :],
+                              t.down2[p][None, :, :])     # (pods, pods, C)
+        bundle_pod = capB_pod.reshape(t.n_pods, t.n_pods, t.n_aggs,
+                                      t.cores_per_agg).sum(-1)
+        bundle = bundle_pod[pods[:, None], pods[None, :]]  # (L, L, A)
+        cross = pods[:, None] != pods[None, :]
+        out += np.where(cross[:, :, None],
+                        np.minimum(capA, bundle), capA).sum(-1)
+    return out

@@ -1,7 +1,7 @@
 """Declarative scenario engine: spec DSL -> compiler -> named registry ->
 batched multi-seed runner (see ISSUE/README scenario table)."""
-from .spec import (FaultSpec, ScenarioSpec, SimSpec, TenantSpec,
-                   TopologySpec, WorkloadSpec)
+from .spec import (FaultBoundsError, FaultSpec, ScenarioSpec, SimSpec,
+                   TenantSpec, TopologySpec, WorkloadSpec)
 from .compile import (CompiledScenario, compile_scenario, run_scenario)
 from .registry import (SCENARIOS, fig11_partial_uplink, get_scenario,
                        list_scenarios, register)

@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.netsim.fabric import Flow
 from repro.netsim.sim import SimConfig, SimResult, run_sim
-from repro.netsim.topology import LeafSpine
+from repro.netsim.topology import Fabric, FatTree, LeafSpine
 from repro.netsim.workloads import (all2all, bisection_pairs, one_to_many,
                                     ring_neighbors)
 
@@ -29,10 +29,10 @@ class CompiledScenario:
     """Single-use run bundle: `topo` is mutated in place by `events` on
     the NumPy backend, so compile again (cheap) for a fresh run."""
     spec: ScenarioSpec
-    topo: LeafSpine
+    topo: Fabric
     flows: List[Flow]
     cfg: SimConfig
-    events: Callable[[int, LeafSpine], None]
+    events: Callable[[int, Fabric], None]
     tenants: Dict[str, List[int]]
     fault_slots: Tuple[Tuple[int, str], ...]   # (slot, label), sorted
 
@@ -182,8 +182,30 @@ def build_flows(spec: ScenarioSpec, topo: LeafSpine,
 # fault schedule -> events closure
 # ---------------------------------------------------------------------------
 
-def _planes(f: FaultSpec, topo: LeafSpine) -> List[int]:
+def _planes(f: FaultSpec, topo: Fabric) -> List[int]:
     return list(fault_planes(f, topo.n_planes))
+
+
+def _fail_random_link(topo: Fabric, p: int, rng: np.random.Generator,
+                      frac: float) -> None:
+    """One uniformly-drawn fabric-link kill for random_fail's exact-k
+    mode.  Draw-for-draw shared semantics with the jx timeline compiler
+    (`netsim.jx.events._apply_fault`): leaf_spine draws (leaf, spine);
+    fat_tree draws one index over leaf–agg links followed by pod–core
+    links."""
+    if topo.kind == "leaf_spine":
+        topo.fail_uplink(p, int(rng.integers(topo.n_leaves)),
+                         int(rng.integers(topo.n_spines)), frac)
+        return
+    L, A = topo.n_leaves, topo.n_aggs
+    n_stage_a = L * A
+    idx = int(rng.integers(n_stage_a + topo.n_pods * topo.n_cores))
+    if idx < n_stage_a:
+        topo.fail_uplink(p, idx // A, idx % A, frac)
+    else:
+        rem = idx - n_stage_a
+        topo.fail_core_link(p, rem // topo.n_cores, rem % topo.n_cores,
+                            frac)
 
 
 def _flap(t: int, f: FaultSpec, fail, restore) -> None:
@@ -197,7 +219,7 @@ def _flap(t: int, f: FaultSpec, fail, restore) -> None:
 
 
 def make_events(spec: ScenarioSpec
-                ) -> Tuple[Callable[[int, LeafSpine], None],
+                ) -> Tuple[Callable[[int, Fabric], None],
                            Tuple[Tuple[int, str], ...]]:
     cap_link = spec.topo.uplink_cap
     cap_acc = spec.topo.access_cap
@@ -211,7 +233,7 @@ def make_events(spec: ScenarioSpec
         topo.up[p, leaf, spine] = cap_link
         topo.down[p, spine, leaf] = cap_link
 
-    def events(t: int, topo: LeafSpine) -> None:
+    def events(t: int, topo: Fabric) -> None:
         for i, f in enumerate(faults):
             if f.kind == "link_kill":
                 if t == f.start_slot:
@@ -243,8 +265,13 @@ def make_events(spec: ScenarioSpec
                 for j, s in enumerate(f.spines):
                     if t == f.start_slot + j * f.period:
                         for p in _planes(f, topo):
-                            topo.up[p, :, s] = 0.0
-                            topo.down[p, s, :] = 0.0
+                            if topo.kind == "fat_tree":
+                                # whole-switch loss: the agg's leaf AND
+                                # core links die together
+                                topo.fail_agg(p, f.pod, s)
+                            else:
+                                topo.up[p, :, s] = 0.0
+                                topo.down[p, s, :] = 0.0
             elif f.kind == "straggler":
                 if t == f.start_slot:
                     for p in _planes(f, topo):
@@ -260,16 +287,23 @@ def make_events(spec: ScenarioSpec
                 if t == f.start_slot:
                     rng = np.random.default_rng(fail_seeds[i])
                     if f.count:
-                        # exact-k mode: `count` uplink draws per plane
-                        # (repeats compound, like the Fig 14a proxy)
+                        # exact-k mode: `count` fabric-link draws per
+                        # plane (repeats compound, like the Fig 14a
+                        # proxy); on fat_tree both stages are in the
+                        # draw population
                         for p in _planes(f, topo):
                             for _ in range(f.count):
-                                topo.fail_uplink(
-                                    p, int(rng.integers(topo.n_leaves)),
-                                    int(rng.integers(topo.n_spines)),
-                                    f.frac)
+                                _fail_random_link(topo, p, rng, f.frac)
                     else:
                         topo.random_link_failures(rng, f.frac)
+            elif f.kind == "core_kill":
+                if t == f.start_slot:
+                    for p in _planes(f, topo):
+                        topo.fail_core_link(p, f.pod, f.core, f.frac)
+                elif f.stop_slot is not None and t == f.stop_slot:
+                    for p in _planes(f, topo):
+                        topo.up2[p, f.pod, f.core] = topo.core_cap
+                        topo.down2[p, f.pod, f.core] = topo.core_cap
 
     slots = sorted(
         {sl for f in faults
@@ -282,14 +316,25 @@ def make_events(spec: ScenarioSpec
 # top level
 # ---------------------------------------------------------------------------
 
+def build_topology(ts) -> Fabric:
+    """Instantiate the runtime fabric a `TopologySpec` describes."""
+    if ts.kind == "fat_tree":
+        return FatTree(
+            n_pods=ts.n_pods, leaves_per_pod=ts.leaves_per_pod,
+            n_aggs=ts.n_aggs, n_cores=ts.n_cores,
+            hosts_per_leaf=ts.hosts_per_leaf, n_planes=ts.n_planes,
+            parallel_links=ts.parallel_links, link_cap=ts.link_cap,
+            core_link_cap=ts.core_link_cap, access_cap=ts.access_cap)
+    return LeafSpine(
+        n_leaves=ts.n_leaves, n_spines=ts.n_spines,
+        hosts_per_leaf=ts.hosts_per_leaf, n_planes=ts.n_planes,
+        parallel_links=ts.parallel_links, link_cap=ts.link_cap,
+        access_cap=ts.access_cap)
+
+
 def compile_scenario(spec: ScenarioSpec) -> CompiledScenario:
     spec.validate()
-    topo = LeafSpine(
-        n_leaves=spec.topo.n_leaves, n_spines=spec.topo.n_spines,
-        hosts_per_leaf=spec.topo.hosts_per_leaf,
-        n_planes=spec.topo.n_planes,
-        parallel_links=spec.topo.parallel_links,
-        link_cap=spec.topo.link_cap, access_cap=spec.topo.access_cap)
+    topo = build_topology(spec.topo)
     rng = np.random.default_rng(spec.workload_seed)
     tenants = resolve_tenants(spec, rng)
     flows = build_flows(spec, topo, tenants, rng)

@@ -16,16 +16,41 @@ from typing import Optional, Tuple
 WORKLOAD_KINDS = ("bisection", "all2all", "allreduce", "incast",
                   "permutation", "storage", "pairs", "one2many")
 FAULT_KINDS = ("link_kill", "link_flap", "access_kill", "access_flap",
-               "cascade", "straggler", "leaf_trim", "random_fail")
+               "cascade", "straggler", "leaf_trim", "random_fail",
+               "core_kill")
 PLACEMENTS = ("block", "interleave", "random", "remainder", "explicit")
 ROUTINGS = ("ar", "war", "ecmp")
 NICS = ("spx", "dcqcn", "global", "esr", "swlb")
 BACKENDS = ("numpy", "jax")
+TOPOLOGY_KINDS = ("leaf_spine", "fat_tree")
+
+
+class FaultBoundsError(ValueError):
+    """A `FaultSpec` addresses a plane/leaf/spine/agg/pod/core/host
+    outside the scenario's topology shape."""
 
 
 @dataclass(frozen=True)
 class TopologySpec:
-    """Shape of the multi-plane leaf–spine fabric (mirrors `LeafSpine`)."""
+    """Shape of the fabric.
+
+    kind:
+      'leaf_spine' — flat multiplane leaf–spine (mirrors `LeafSpine`):
+                     one switching stage, `n_spines` paths per plane.
+      'fat_tree'   — 3-tier leaf–agg–core baseline (mirrors `FatTree`):
+                     `n_pods` pods of `n_leaves / n_pods` leaves and
+                     `n_aggs` agg switches each, `n_cores` core switches
+                     (a multiple of `n_aggs`; core `j` serves agg
+                     `j // (n_cores // n_aggs)` in every pod).  `n_spines`
+                     is unused.  `core_link_cap` <= 0 inherits
+                     `uplink_cap`; oversubscription = host capacity
+                     per leaf vs `n_aggs * uplink_cap` (stage A) and
+                     agg ingress vs its core bundle (stage B).
+
+    The fat-tree fields elide from content hashes at their defaults
+    (`HASH_ELIDE_DEFAULTS`), so pre-existing leaf-spine specs keep their
+    cache keys across this schema extension.
+    """
     n_leaves: int = 8
     n_spines: int = 8
     hosts_per_leaf: int = 8
@@ -33,6 +58,14 @@ class TopologySpec:
     parallel_links: int = 1
     link_cap: float = 1.0
     access_cap: float = 1.0
+    kind: str = "leaf_spine"
+    n_pods: int = 1
+    n_aggs: int = 1
+    n_cores: int = 1
+    core_link_cap: float = 0.0
+
+    HASH_ELIDE_DEFAULTS = ("kind", "n_pods", "n_aggs", "n_cores",
+                           "core_link_cap")
 
     @property
     def n_hosts(self) -> int:
@@ -41,6 +74,42 @@ class TopologySpec:
     @property
     def uplink_cap(self) -> float:
         return self.link_cap * self.parallel_links
+
+    @property
+    def leaves_per_pod(self) -> int:
+        return self.n_leaves // self.n_pods
+
+    @property
+    def core_cap(self) -> float:
+        return (self.core_link_cap if self.core_link_cap > 0
+                else self.uplink_cap)
+
+    @property
+    def n_paths(self) -> int:
+        """Per-(leaf pair, plane) routing-choice axis: spines for
+        leaf_spine, cores for fat_tree."""
+        return self.n_spines if self.kind == "leaf_spine" else self.n_cores
+
+    def validate(self, name: str = "topo") -> "TopologySpec":
+        if self.kind not in TOPOLOGY_KINDS:
+            raise ValueError(f"{name}: unknown topology kind "
+                             f"{self.kind!r}; known: {TOPOLOGY_KINDS}")
+        if self.kind == "fat_tree":
+            if self.n_pods < 2:
+                raise ValueError(
+                    f"{name}: fat_tree requires n_pods >= 2 "
+                    f"(got {self.n_pods}); use kind='leaf_spine' for a "
+                    "single-stage fabric")
+            if self.n_leaves % self.n_pods != 0:
+                raise ValueError(
+                    f"{name}: n_leaves ({self.n_leaves}) must be "
+                    f"divisible by n_pods ({self.n_pods})")
+            if self.n_aggs < 1 or self.n_cores % self.n_aggs != 0 \
+                    or self.n_cores < self.n_aggs:
+                raise ValueError(
+                    f"{name}: n_cores ({self.n_cores}) must be a "
+                    f"positive multiple of n_aggs ({self.n_aggs})")
+        return self
 
 
 @dataclass(frozen=True)
@@ -113,8 +182,11 @@ class FaultSpec:
       'access_kill' — host NIC-plane port down at `start_slot`
                       (restored at `stop_slot` if set).
       'access_flap' — periodic version of access_kill.
-      'cascade'     — rolling spine loss: spine `spines[i]` dies (all
-                      leaves) at `start_slot + i*period`.
+      'cascade'     — rolling switch loss: spine `spines[i]` dies (all
+                      leaves) at `start_slot + i*period`.  On fat_tree
+                      the indices address agg switches of pod `pod`,
+                      and the whole switch dies: its leaf links AND its
+                      core links.
       'straggler'   — host access capacity scaled to `frac` between
                       `start_slot` and `stop_slot` (slow-rank injection).
       'leaf_trim'   — leaf uplink capacity scaled to `frac` at
@@ -122,12 +194,23 @@ class FaultSpec:
       'random_fail' — random fabric link failures at `start_slot`:
                       `count` = 0 fails each link independently with
                       probability `frac` (Fig 1c / §6.4); `count` > 0
-                      draws exactly `count` (leaf, spine) uplinks per
-                      selected plane and multiplies each by `1 - frac`
-                      — `frac=1` kills the link outright (Fig 14a's
-                      k-concurrent-failure sweeps).
+                      draws exactly `count` fabric links per selected
+                      plane and multiplies each by `1 - frac` — `frac=1`
+                      kills the link outright (Fig 14a's k-concurrent-
+                      failure sweeps).  On fat_tree both stages (leaf–agg
+                      and pod–core links) are in the draw population.
+      'core_kill'   — fat_tree only: remove `frac` of the (plane, pod,
+                      core) stage-B link pair at `start_slot`; restore at
+                      `stop_slot` if set (the tier the multiplane design
+                      deletes — §3.1).
 
-    `plane` = -1 applies to every plane.
+    `plane` = -1 applies to every plane.  On fat_tree topologies `spine`
+    addresses the pod-local agg index for link faults.  `validate()`
+    bound-checks every index a fault uses against the topology shape and
+    raises `FaultBoundsError` otherwise.
+
+    New tier fields (`pod`, `core`) elide from content hashes at their
+    defaults so pre-existing specs keep their cache keys.
     """
     kind: str
     start_slot: int = 0
@@ -141,6 +224,10 @@ class FaultSpec:
     host: int = 0
     frac: float = 1.0
     count: int = 0                       # random_fail: exact-k mode
+    pod: int = 0                         # core_kill / fat_tree cascade
+    core: int = 0                        # core_kill
+
+    HASH_ELIDE_DEFAULTS = ("pod", "core")
 
 
 @dataclass(frozen=True)
@@ -179,6 +266,7 @@ class ScenarioSpec:
         return replace(self, workload_seed=seed)
 
     def validate(self) -> "ScenarioSpec":
+        self.topo.validate(f"{self.name}: topo")
         names = [t.name for t in self.tenants]
         if len(set(names)) != len(names):
             raise ValueError(f"{self.name}: duplicate tenant names {names}")
@@ -224,6 +312,7 @@ class ScenarioSpec:
                 raise ValueError(
                     f"{self.name}: count applies only to random_fail, "
                     f"not {f.kind!r}")
+            _check_fault_bounds(self.name, f, self.topo)
         if self.sim.routing not in ROUTINGS:
             raise ValueError(
                 f"{self.name}: unknown routing {self.sim.routing!r}")
@@ -233,6 +322,51 @@ class ScenarioSpec:
             raise ValueError(
                 f"{self.name}: unknown backend {self.sim.backend!r}")
         return self
+
+
+def _check_fault_bounds(name: str, f: FaultSpec,
+                        topo: TopologySpec) -> None:
+    """Bound-check every index a fault actually uses against the
+    topology shape (satellite of ISSUE 5: out-of-range indices used to
+    pass validation and die — or silently wrap via negative indexing —
+    deep inside the event closures / the jx timeline compiler)."""
+    def bad(field: str, value: int, n: int, axis: str) -> None:
+        raise FaultBoundsError(
+            f"{name}: fault {f.kind!r} {field}={value} outside "
+            f"[0, {n}) ({axis})")
+
+    if not (f.plane == -1 or 0 <= f.plane < topo.n_planes):
+        raise FaultBoundsError(
+            f"{name}: fault {f.kind!r} plane={f.plane} outside "
+            f"[0, {topo.n_planes}) (and not -1 = all planes)")
+    n_up = topo.n_spines if topo.kind == "leaf_spine" else topo.n_aggs
+    up_axis = "spines" if topo.kind == "leaf_spine" else "aggs per pod"
+    if f.kind in ("link_kill", "link_flap"):
+        if not 0 <= f.leaf < topo.n_leaves:
+            bad("leaf", f.leaf, topo.n_leaves, "leaves")
+        if not 0 <= f.spine < n_up:
+            bad("spine", f.spine, n_up, up_axis)
+    elif f.kind == "leaf_trim":
+        if not 0 <= f.leaf < topo.n_leaves:
+            bad("leaf", f.leaf, topo.n_leaves, "leaves")
+    elif f.kind == "cascade":
+        for s in f.spines:
+            if not 0 <= s < n_up:
+                bad("spines[...]", s, n_up, up_axis)
+        if topo.kind == "fat_tree" and not 0 <= f.pod < topo.n_pods:
+            bad("pod", f.pod, topo.n_pods, "pods")
+    elif f.kind in ("access_kill", "access_flap", "straggler"):
+        if not 0 <= f.host < topo.n_hosts:
+            bad("host", f.host, topo.n_hosts, "hosts")
+    elif f.kind == "core_kill":
+        if topo.kind != "fat_tree":
+            raise FaultBoundsError(
+                f"{name}: fault 'core_kill' requires a fat_tree "
+                f"topology (got kind={topo.kind!r})")
+        if not 0 <= f.pod < topo.n_pods:
+            bad("pod", f.pod, topo.n_pods, "pods")
+        if not 0 <= f.core < topo.n_cores:
+            bad("core", f.core, topo.n_cores, "cores")
 
 
 def fault_planes(f: FaultSpec, n_planes: int) -> Tuple[int, ...]:
@@ -265,7 +399,7 @@ def fault_transition_slots(f: FaultSpec, horizon: int
     transitions."""
     out = []
     if f.kind in ("link_kill", "access_kill", "straggler", "leaf_trim",
-                  "random_fail"):
+                  "random_fail", "core_kill"):
         if f.start_slot < horizon:
             out.append((f.start_slot, f.kind))
     elif f.kind in ("link_flap", "access_flap"):

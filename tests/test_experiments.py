@@ -213,6 +213,26 @@ def test_spec_key_content_sensitivity():
     assert a != spec_key(_tiny(), salt="derive.tag")
 
 
+def test_new_topology_fault_fields_elide_from_cache_keys():
+    """Migration contract (ISSUE 5): the fat-tree schema extension must
+    not re-key pre-existing cache entries — `TopologySpec`'s and
+    `FaultSpec`'s new fields are omitted from the canonical form while
+    they hold their defaults, and appear once set."""
+    from repro.experiments.cache import canonicalize
+    from repro.scenarios import TopologySpec
+
+    t = canonicalize(TopologySpec())["fields"]
+    for field in ("kind", "n_pods", "n_aggs", "n_cores", "core_link_cap"):
+        assert field not in t, field
+    ft = canonicalize(TopologySpec(kind="fat_tree", n_pods=2, n_aggs=2,
+                                   n_cores=4))["fields"]
+    assert ft["kind"] == "fat_tree" and ft["n_pods"] == 2
+    f = canonicalize(FaultSpec("link_kill", leaf=1))["fields"]
+    assert "pod" not in f and "core" not in f
+    fc = canonicalize(FaultSpec("core_kill", pod=1, core=2))["fields"]
+    assert fc["pod"] == 1 and fc["core"] == 2
+
+
 def test_cache_hit_miss_and_corruption(tmp_path):
     cache = RunCache(str(tmp_path))
     key = spec_key(_tiny())

@@ -1,0 +1,77 @@
+"""Tier-generic fabric unit anchors (ISSUE 5): the fat-tree's exact
+min-cut max-flow values, stage-composed path capacities, tier-aware
+fault injection, and the plane-summing generalization of
+`maxflow_matrix`/`leaf_pair_maxflow`.  The hypothesis property suite
+over both topology kinds lives in `test_topology_properties.py`.
+"""
+import numpy as np
+
+from repro.netsim.topology import FatTree, LeafSpine, leaf_pair_maxflow, \
+    maxflow_matrix
+
+# ---------------------------------------------------------------------------
+# unit anchors: exact min-cut values
+# ---------------------------------------------------------------------------
+
+def _ft() -> FatTree:
+    return FatTree(n_pods=2, leaves_per_pod=2, n_aggs=2, n_cores=8,
+                   hosts_per_leaf=4, link_cap=2.0, core_link_cap=1.0)
+
+
+def test_fat_tree_healthy_maxflow():
+    t = _ft()
+    mf = maxflow_matrix(t)
+    # intra-pod (0,1): 2 aggs x 2.0; cross-pod (0,2): per agg
+    # min(leaf link 2.0, bundle 4x1.0) = 2.0 -> same 4.0
+    assert np.allclose(mf, 4.0)
+    assert np.allclose(mf, mf.T)
+
+
+def test_fat_tree_core_kill_binds_only_when_bundle_below_leaf_link():
+    t = _ft()
+    t.fail_core_link(0, 0, 0)
+    mf = maxflow_matrix(t)
+    # bundle 4 -> 3 still >= the 2.0 leaf-agg link: nothing binds
+    assert np.allclose(mf, 4.0)
+    for c in (1, 2):
+        t.fail_core_link(0, 0, c)
+    mf = maxflow_matrix(t)
+    # agg 0's pod-0 bundle is now 1.0 < 2.0: cross-pod pairs touching
+    # pod 0 lose exactly 1.0; intra-pod pairs are untouched
+    assert mf[0, 1] == 4.0 and mf[2, 3] == 4.0
+    assert mf[0, 2] == 3.0 and mf[1, 3] == 3.0
+    assert leaf_pair_maxflow(t, 2, 0) == 3.0
+
+
+def test_fat_tree_agg_loss_kills_leaf_and_core_links():
+    t = _ft()
+    t.fail_agg(0, 0, 0)
+    assert (t.up[0, :2, 0] == 0).all() and (t.down[0, 0, :2] == 0).all()
+    assert (t.up2[0, 0, :4] == 0).all()          # agg 0's cores
+    assert (t.up2[0, 0, 4:] == 1.0).all()        # agg 1's untouched
+    # intra-pod pod-0 pairs: one agg left; cross-pod via agg 1 only
+    mf = maxflow_matrix(t)
+    assert mf[0, 1] == 2.0 and mf[0, 2] == 2.0 and mf[2, 3] == 4.0
+
+
+def test_leaf_spine_maxflow_sums_planes():
+    t = LeafSpine(n_leaves=4, n_spines=4, hosts_per_leaf=2, n_planes=3)
+    assert maxflow_matrix(t)[0, 1] == 12.0           # 3 planes x 4 spines
+    assert maxflow_matrix(t, plane=0)[0, 1] == 4.0   # old per-plane view
+    t.fail_uplink(2, 0, 0)
+    assert leaf_pair_maxflow(t, 0, 1) == 11.0
+    assert leaf_pair_maxflow(t, 0, 1, plane=2) == 3.0
+
+
+def test_path_capacity_composes_stages():
+    t = _ft()
+    src = np.array([0, 0])
+    dst = np.array([1, 2])                           # intra-pod, cross-pod
+    cap = t.path_capacity(src, dst)                  # (F, P, J)
+    assert cap.shape == (2, 1, 8)
+    assert (cap[0, 0] == 2.0).all()                  # leaf links bind
+    assert (cap[1, 0] == 1.0).all()                  # core links bind
+    t.fail_core_link(0, 1, 5)
+    cap = t.path_capacity(src, dst)
+    assert cap[0, 0, 5] == 2.0                       # intra-pod unaffected
+    assert cap[1, 0, 5] == 0.0                       # cross-pod path dead

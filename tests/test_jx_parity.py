@@ -67,6 +67,26 @@ def test_parity_routing_nic_cross(routing, nic):
     _assert_parity(spec, ref, jres)
 
 
+@pytest.mark.parametrize("routing", ["ar", "war", "ecmp"])
+@pytest.mark.parametrize("nic", ["spx", "dcqcn", "global", "esr", "swlb"])
+def test_parity_fat_tree_routing_nic_cross(routing, nic):
+    """Fat-tree twin of the routing x nic cross: core-tier faults plus
+    random two-stage failures on the 3-tier testbed.  The numpy
+    fat-tree step mirrors the jx pair-aggregated op order, so parity
+    holds at machine precision even where AR's symmetric fractions park
+    queues on quantization-bin edges."""
+    from dataclasses import replace
+
+    from repro.scenarios import FaultSpec
+    spec = get_scenario("ft_core_failure_resiliency")
+    spec = replace(spec, faults=spec.faults + (
+        FaultSpec("random_fail", start_slot=60, frac=0.15),
+        FaultSpec("link_kill", start_slot=45, leaf=0, spine=1),))
+    spec = spec.with_sim(slots=160, routing=routing, nic=nic)
+    ref, jres = _run_both(spec)
+    _assert_parity(spec, ref, jres)
+
+
 def test_parity_swlb_delayed_exclusion():
     """swlb's software-timescale plane exclusion (pending_fail firing)
     must match: run fig12 long enough for the delayed reaction."""

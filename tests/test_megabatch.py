@@ -137,6 +137,29 @@ def test_megabatch_multi_axis_grid_single_compile():
     assert stats["compiles"] == 0
 
 
+def test_megabatch_mixed_topology_kinds_one_compile_per_bucket():
+    """A grid mixing leaf_spine and fat_tree points (the topology-axis
+    experiment shape) fuses into exactly one launch and one program
+    compile per topology-kind shape bucket, row-identical to the
+    per-group dispatch."""
+    points = _grid_points(None, [
+        Axis("scenario", ("bisection_multiplane", "bisection_fat_tree")),
+        Axis("sim.routing", ("war", "ecmp")),
+        Axis("seed", (0, 1)),
+        Axis("sim.slots", (200,)),      # random_fail at 150 still fires
+    ])
+    reset_dispatch_stats()
+    with enable_x64():
+        mega = execute_points(points, backend="jax",
+                              jx_dispatch="megabatch")
+    stats = dispatch_stats()
+    assert stats["dispatches"] == 2, stats   # one per topology kind
+    assert stats["compiles"] == 2, stats
+    with enable_x64():
+        group = execute_points(points, backend="jax", jx_dispatch="group")
+    _assert_rows_identical(points, group, mega)
+
+
 def test_jitted_rebuilds_on_device_set_change(monkeypatch):
     """Regression: `_jitted` used to key its memo on `JxConfig` only, so
     a pmap callable built for N host devices was silently reused after

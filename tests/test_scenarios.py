@@ -97,6 +97,69 @@ def test_unknown_kinds_rejected():
                      faults=(FaultSpec("meteor"),)).validate()
 
 
+def _spec_with_fault(fault, topo=SMALL):
+    return ScenarioSpec(name="bounds", topo=topo,
+                        workloads=(WorkloadSpec("all2all"),),
+                        faults=(fault,))
+
+
+def test_fault_indices_bound_checked():
+    """Regression (ISSUE 5 satellite): out-of-range fault indices used
+    to pass validation and die with a bare IndexError — or silently
+    wrap via negative indexing — deep in the event closures / the jx
+    timeline compiler.  They must raise `FaultBoundsError` at
+    `validate()` time."""
+    from repro.scenarios.spec import FaultBoundsError
+
+    bad = [
+        FaultSpec("link_kill", plane=2),               # n_planes = 1
+        FaultSpec("link_kill", plane=-2),              # only -1 = all
+        FaultSpec("link_kill", leaf=2),                # n_leaves = 2
+        FaultSpec("link_kill", spine=-1),
+        FaultSpec("link_flap", period=4, spine=2),     # n_spines = 2
+        FaultSpec("leaf_trim", leaf=-1),
+        FaultSpec("cascade", period=4, spines=(0, 2)),
+        FaultSpec("access_kill", host=4),              # n_hosts = 4
+        FaultSpec("access_flap", period=4, host=-1),
+        FaultSpec("straggler", host=17),
+        FaultSpec("core_kill"),                        # not a fat_tree
+    ]
+    for fault in bad:
+        with pytest.raises(FaultBoundsError):
+            _spec_with_fault(fault).validate()
+
+    ft = TopologySpec(kind="fat_tree", n_leaves=2, hosts_per_leaf=2,
+                      n_pods=2, n_aggs=2, n_cores=4)
+    bad_ft = [
+        FaultSpec("link_kill", spine=2),               # n_aggs = 2
+        FaultSpec("core_kill", pod=2),                 # n_pods = 2
+        FaultSpec("core_kill", core=4),                # n_cores = 4
+        FaultSpec("cascade", period=4, spines=(0,), pod=-1),
+    ]
+    for fault in bad_ft:
+        with pytest.raises(FaultBoundsError):
+            _spec_with_fault(fault, ft).validate()
+
+    # in-range faults (including the fat-tree agg addressing) still pass
+    _spec_with_fault(FaultSpec("link_kill", leaf=1, spine=1)).validate()
+    _spec_with_fault(FaultSpec("random_fail", plane=-1, frac=0.5)).validate()
+    _spec_with_fault(FaultSpec("core_kill", pod=1, core=3), ft).validate()
+    _spec_with_fault(FaultSpec("cascade", period=4, spines=(1,), pod=1),
+                     ft).validate()
+
+
+def test_fat_tree_topology_shape_validated():
+    with pytest.raises(ValueError, match="n_pods"):
+        TopologySpec(kind="fat_tree", n_pods=1).validate()
+    with pytest.raises(ValueError, match="divisible"):
+        TopologySpec(kind="fat_tree", n_leaves=3, n_pods=2).validate()
+    with pytest.raises(ValueError, match="n_cores"):
+        TopologySpec(kind="fat_tree", n_pods=2, n_aggs=3,
+                     n_cores=4).validate()
+    with pytest.raises(ValueError, match="kind"):
+        TopologySpec(kind="clos").validate()
+
+
 def test_flap_schedule_restores_capacity():
     spec = ScenarioSpec(
         name="flap", topo=SMALL,
