@@ -53,6 +53,11 @@ from .common import emit
 
 DEFAULT_SCENARIO = "flap_during_incast"
 DEFAULT_JSON = "BENCH_backend.json"
+# the committed perf trajectory: the last blessed run of this benchmark,
+# checked in at the repo root and regenerated whenever perf moves on
+# purpose (CI's megabatch-smoke gate fails a >20% warm-throughput drop)
+BASELINE_PATH = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_backend.json")
 SCHEMA = 1
 
 
@@ -74,6 +79,33 @@ def bench_grid(scenario: str, routings, nics, fracs, n_seeds: int,
                       axes=product(*axes))
 
 
+def compare_baseline(out: dict, base: Optional[dict]) -> dict:
+    """Fresh run vs the committed snapshot.  Only megabatch warm
+    throughput is gated — cold time is dominated by XLA compile noise.
+    Runs are comparable only on the same grid and device count; a
+    mismatch reports `comparable: false` so CI skips instead of failing
+    on cross-machine variance."""
+    if base is None:
+        return {"comparable": False, "reason": "no committed baseline"}
+    if base.get("schema") != out["schema"]:
+        return {"comparable": False,
+                "reason": f"schema {base.get('schema')} != {out['schema']}"}
+    if base.get("grid") != out["grid"]:
+        return {"comparable": False, "reason": "grid differs"}
+    if base.get("devices") != out["devices"]:
+        return {"comparable": False,
+                "reason": (f"devices {base.get('devices')} != "
+                           f"{out['devices']}")}
+    ref = base.get("megabatch", {}).get("warm_slots_per_s")
+    if not ref:
+        return {"comparable": False,
+                "reason": "baseline has no megabatch.warm_slots_per_s"}
+    cur = out["megabatch"]["warm_slots_per_s"]
+    return {"comparable": True, "reason": "",
+            "baseline_warm_slots_per_s": ref,
+            "warm_slots_per_s": cur, "ratio": cur / ref}
+
+
 def _time_best(fn, iters: int) -> float:
     best = float("inf")
     for _ in range(iters):
@@ -89,8 +121,16 @@ def run(scenario: str = DEFAULT_SCENARIO,
         fracs: Tuple[float, ...] = (0.2, 0.4, 0.6, 0.8),
         n_seeds: int = 2, slots: Optional[int] = None,
         processes: Optional[int] = None, with_numpy: bool = True,
-        json_out: Optional[str] = DEFAULT_JSON) -> dict:
+        json_out: Optional[str] = DEFAULT_JSON,
+        baseline: Optional[str] = BASELINE_PATH) -> dict:
     from repro.netsim.jx import dispatch_stats, reset_dispatch_stats
+
+    # read the committed snapshot up front — json_out may legitimately
+    # point at the same file (CI regenerates the baseline in place)
+    base = None
+    if baseline and os.path.exists(baseline):
+        with open(baseline, encoding="utf-8") as f:
+            base = json.load(f)
 
     exp = bench_grid(scenario, routings, nics, fracs, n_seeds, slots)
     points = [p.spec for p in exp.points()]
@@ -170,6 +210,16 @@ def run(scenario: str = DEFAULT_SCENARIO,
             if with_numpy else "")
          + f",row_mismatches={mism}")
 
+    out["baseline"] = cmp = compare_baseline(out, base)
+    if cmp["comparable"]:
+        print(f"# bench baseline: ratio={cmp['ratio']:.3f} "
+              f"(warm {cmp['warm_slots_per_s']:.0f} vs committed "
+              f"{cmp['baseline_warm_slots_per_s']:.0f} slots/s)",
+              flush=True)
+    else:
+        print(f"# bench baseline: not comparable ({cmp['reason']})",
+              flush=True)
+
     if json_out:
         with open(json_out, "w", encoding="utf-8") as f:
             json.dump(out, f, indent=2)
@@ -198,6 +248,10 @@ def main(argv=None) -> None:
     p.add_argument("--no-numpy", action="store_true",
                    help="skip the process-pool baseline")
     p.add_argument("--json-out", default=DEFAULT_JSON)
+    p.add_argument("--baseline", default=BASELINE_PATH,
+                   help="committed snapshot to compare against "
+                        "(default: repo-root BENCH_backend.json; "
+                        "'' disables)")
     p.add_argument("--smoke", action="store_true",
                    help="CI-sized defaults: 2 nics x 3 fracs x 2 "
                         "seeds, 120 slots (36 points); explicit flags "
@@ -217,7 +271,7 @@ def main(argv=None) -> None:
         n_seeds=args.seeds if args.seeds is not None else 2,
         slots=args.slots if args.slots is not None else slots,
         processes=args.processes, with_numpy=not args.no_numpy,
-        json_out=args.json_out)
+        json_out=args.json_out, baseline=args.baseline or None)
 
 
 if __name__ == "__main__":

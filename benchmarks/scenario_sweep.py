@@ -12,13 +12,16 @@ CLI (also invoked by CI as a cached 2-point smoke):
 from __future__ import annotations
 
 import argparse
+import functools
+import os
 import sys
 from typing import List, Optional
 
 from repro.experiments import (Axis, Experiment, ResultSet, RunCache,
                                compile_cache_entries, product,
                                run_experiment)
-from repro.scenarios import list_scenarios
+from repro.scenarios import get_scenario, list_scenarios
+from repro.trace import TraceSpec, trace_to_npz, trace_to_perfetto
 
 from .common import emit, timeit
 
@@ -26,18 +29,43 @@ DEFAULT_SCENARIOS = ("multi_tenant_50_50", "flap_during_incast",
                      "cascading_spine_loss", "straggler_failure_compound")
 
 
+def export_trace(spec, compiled, result, out_dir: str) -> dict:
+    """Derive hook (module-level: process pools pickle it) writing each
+    point's HFT trace as npz + Perfetto-JSON under `out_dir`."""
+    trace = getattr(result, "trace", None)
+    if trace is None:
+        return {}
+    stem = (f"{spec.name}.{spec.sim.nic}.{spec.sim.routing}"
+            f".s{spec.sim.seed}")
+    trace_to_npz(os.path.join(out_dir, f"{stem}.npz"), trace,
+                 slot_us=spec.sim.slot_us, label=stem)
+    trace_to_perfetto(os.path.join(out_dir, f"{stem}.perfetto.json"),
+                      trace, slot_us=spec.sim.slot_us, label=stem)
+    return {"trace_stem": stem}
+
+
 def stack_experiment(scenarios, nic: str, routing: str, n_seeds: int,
-                     slots: Optional[int]) -> Experiment:
+                     slots: Optional[int],
+                     trace_out: Optional[str] = None,
+                     trace_every: int = 1) -> Experiment:
     """One stack's grid: scenario × seed, with the stack and horizon as
-    single-value axes so they land in the ResultSet coordinates."""
-    axes = [Axis("scenario", tuple(scenarios)),
+    single-value axes so they land in the ResultSet coordinates.  With
+    `trace_out` the scenario axis carries pre-traced specs (labelled by
+    name as usual) and the derive hook exports each point's trace."""
+    specs = tuple(get_scenario(s) for s in scenarios)
+    derive = None
+    if trace_out:
+        ts = TraceSpec(enabled=True, every=trace_every)
+        specs = tuple(s.with_sim(trace=ts) for s in specs)
+        derive = functools.partial(export_trace, out_dir=trace_out)
+    axes = [Axis("scenario", specs),
             Axis("seed", tuple(range(n_seeds))),
             Axis("sim.nic", (nic,)),
             Axis("sim.routing", (routing,))]
     if slots:
         axes.append(Axis("sim.slots", (slots,)))
     return Experiment(name=f"scenario_sweep.{nic}.{routing}",
-                      axes=product(*axes))
+                      axes=product(*axes), derive=derive)
 
 
 def run(scenarios=DEFAULT_SCENARIOS, n_seeds: int = 2,
@@ -46,12 +74,17 @@ def run(scenarios=DEFAULT_SCENARIOS, n_seeds: int = 2,
         backend: str = "numpy",
         cache_dir: Optional[str] = None,
         json_out: Optional[str] = None,
-        compile_cache_dir: Optional[str] = None) -> ResultSet:
+        compile_cache_dir: Optional[str] = None,
+        trace_out: Optional[str] = None,
+        trace_every: int = 1) -> ResultSet:
     # the paper pairs stacks (SPX NIC + AR, DCQCN + ECMP); sweep each
     # pairing over seeds × scenarios rather than a nic × routing product
     cache = RunCache(cache_dir) if cache_dir else None
+    if trace_out:
+        os.makedirs(trace_out, exist_ok=True)
     merged: Optional[ResultSet] = None
     hits = misses = 0
+    flights: List[dict] = []
     cc_before = (compile_cache_entries(compile_cache_dir)
                  if compile_cache_dir else 0)
 
@@ -59,12 +92,15 @@ def run(scenarios=DEFAULT_SCENARIOS, n_seeds: int = 2,
         nonlocal merged, hits, misses
         for nic, routing in stacks:
             exp = stack_experiment(scenarios, nic, routing, n_seeds,
-                                   slots)
+                                   slots, trace_out=trace_out,
+                                   trace_every=trace_every)
             rs = run_experiment(exp, processes=processes,
                                 backend=backend, cache=cache,
                                 compile_cache_dir=compile_cache_dir)
             hits += rs.cache_hits
             misses += rs.cache_misses
+            if rs.flight:
+                flights.append(rs.flight)
             if merged is None:
                 merged = rs
             else:
@@ -80,6 +116,26 @@ def run(scenarios=DEFAULT_SCENARIOS, n_seeds: int = 2,
              f"recovery_slots={m.worst_recovery()},"
              f"sym_cv={m.symmetry_cv:.3f},"
              f"outliers={len(m.symmetry_outliers)}")
+    # flight-recorder digest: executor wall time and dispatch counts per
+    # stack, one line (greppable) regardless of stack count
+    execs = [e for fl in flights for e in fl.get("executions", ())]
+    if execs:
+        wall = sum(e.get("wall_s", 0.0) for e in execs)
+        disp = sum(e.get("dispatch_stats", {}).get("dispatches", 0)
+                   for e in execs)
+        comp = sum(e.get("dispatch_stats", {}).get("compiles", 0)
+                   for e in execs)
+        pts = sum(e.get("n_points", 0) for e in execs)
+        line = (f"# flight: points={pts} exec_wall_s={wall:.3f} "
+                f"hits={hits} misses={misses}")
+        if backend == "jax":
+            line += f" dispatches={disp} compiles={comp}"
+        print(line, flush=True)
+    if trace_out:
+        n_files = len([f for f in os.listdir(trace_out)
+                       if f.endswith(".npz")])
+        print(f"# traces: {trace_out} ({n_files} npz + perfetto pairs)",
+              flush=True)
     if cache is not None:
         print(f"# cache: hits={hits} misses={misses}", flush=True)
     if compile_cache_dir:
@@ -124,13 +180,20 @@ def main(argv=None) -> None:
                         " fused sweep programs survive process restarts")
     p.add_argument("--json-out", default=None,
                    help="write the merged ResultSet JSON here")
+    p.add_argument("--trace-out", default=None, metavar="DIR",
+                   help="enable HFT trace capture and write one npz + "
+                        "Perfetto JSON per point into DIR")
+    p.add_argument("--trace-every", type=int, default=1,
+                   help="trace decimation: record every Nth slot "
+                        "(paper's 100us-10ms knob; default 1)")
     args = p.parse_args(argv)
     print("name,us_per_call,derived")
     run(tuple(args.scenarios), n_seeds=args.seeds, slots=args.slots,
         processes=args.processes, stacks=tuple(args.stacks),
         backend=args.backend, cache_dir=args.cache_dir,
         json_out=args.json_out,
-        compile_cache_dir=args.compile_cache_dir)
+        compile_cache_dir=args.compile_cache_dir,
+        trace_out=args.trace_out, trace_every=args.trace_every)
 
 
 if __name__ == "__main__":

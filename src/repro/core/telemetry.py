@@ -36,10 +36,17 @@ def classify_histogram(hist: np.ndarray,
     someone else; 'straggler' = mass in the mid-range — the slow rank
     itself; 'line-rate' = top-bin dominated."""
     n = hist.shape[0]
-    total = max(hist.sum(), 1.0)
-    k = max(1, int(n * edge_frac))
+    total = hist.sum()
+    if total <= 0:
+        return "idle"            # no samples / no mass: nothing flowed
+    # Clamp the edge windows to disjoint halves: with nbins < 1/edge_frac
+    # the naive k would make hist[:k] and hist[-k:] overlap, double-count
+    # the shared bins, and drive `mid` negative.
+    k = max(1, min(int(n * edge_frac), n // 2)) if n > 1 else 1
     low, high = hist[:k].sum() / total, hist[-k:].sum() / total
-    mid = 1.0 - low - high
+    if n == 1:                   # single bin is both edges; all mass "mid"
+        low = high = 0.0
+    mid = max(0.0, 1.0 - low - high)
     if high > 0.85:
         return "line-rate"
     if mid < 0.25 and low > 0.05 and high > 0.05:

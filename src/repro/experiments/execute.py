@@ -23,6 +23,7 @@ from __future__ import annotations
 import multiprocessing
 import os
 import sys
+import time
 from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
 from dataclasses import replace
 from functools import partial
@@ -60,13 +61,23 @@ def compile_cache_entries(cache_dir: str) -> int:
         return 0
 
 
+def _timed_point(p: ScenarioSpec, derive: Optional[Callable] = None):
+    """`run_point` plus its wall clock — module-level so process pools
+    can pickle it (workers time themselves; the parent only sees
+    completion order)."""
+    t0 = time.perf_counter()
+    m = run_point(p, derive=derive)
+    return m, time.perf_counter() - t0
+
+
 def execute_points(points: List[ScenarioSpec],
                    processes: Optional[int] = None,
                    backend: Optional[str] = None,
                    derive: Optional[Callable] = None,
                    on_result: Optional[OnResult] = None,
                    jx_dispatch: Optional[str] = None,
-                   compile_cache_dir: Optional[str] = None
+                   compile_cache_dir: Optional[str] = None,
+                   flight: Optional[Dict] = None
                    ) -> List[ScenarioMetrics]:
     """Run every point; returns metrics in point order.  `backend=None`
     inherits the specs' `sim.backend` (which must agree — mixed grids
@@ -74,8 +85,23 @@ def execute_points(points: List[ScenarioSpec],
     it completes, *before* the call returns.  `jx_dispatch` picks the
     JAX dispatch path ('megabatch' default, 'group' = the legacy
     per-structure batching; `REPRO_JX_DISPATCH` overrides the default);
-    `compile_cache_dir` enables the persistent XLA compilation cache."""
+    `compile_cache_dir` enables the persistent XLA compilation cache.
+
+    `flight`, when a dict, is filled with the executor flight-recorder
+    summary: backend/mode, total wall clock, per-point wall times (JAX
+    points share one launch, so their cost is the finalized group's wall
+    amortized over its points), and — on the JAX paths — the
+    dispatch/compile counter deltas from `dispatch_stats()`."""
     emit = on_result or (lambda i, m: None)
+    t_start = time.perf_counter()
+    point_walls: List[Dict] = []
+
+    def _done(mode: str, **kw) -> None:
+        if flight is not None:
+            flight.update(
+                {"backend": backend, "mode": mode, "n_points": len(points),
+                 "wall_s": round(time.perf_counter() - t_start, 6),
+                 "points": point_walls, **kw})
     if backend is None:
         inherited = {p.sim.backend for p in points}
         if len(inherited) > 1:
@@ -92,7 +118,10 @@ def execute_points(points: List[ScenarioSpec],
             raise ValueError(
                 f"unknown jx_dispatch {mode!r}; expected one of "
                 f"{JX_DISPATCH_MODES}")
-        return _execute_jax(points, derive, emit, mode)
+        out, stats = _execute_jax(points, derive, emit, mode,
+                                  point_walls)
+        _done(mode, dispatch_stats=stats)
+        return out
     if backend != "numpy":
         raise ValueError(
             f"unknown backend {backend!r}; expected 'numpy' or 'jax'")
@@ -103,13 +132,20 @@ def execute_points(points: List[ScenarioSpec],
               if p.sim.backend != "numpy" else p for p in points]
     if processes is None:
         processes = min(len(points), os.cpu_count() or 1)
-    runner = partial(run_point, derive=derive) if derive else run_point
-    if processes <= 1 or len(points) <= 1:
-        results: List[Optional[ScenarioMetrics]] = []
+    runner = partial(_timed_point, derive=derive)
+
+    def _serial(results=None):
+        results = []
         for i, p in enumerate(points):
-            m = runner(p)
+            m, w = runner(p)
+            point_walls.append({"index": i, "wall_s": round(w, 6)})
             emit(i, m)
             results.append(m)
+        return results
+
+    if processes <= 1 or len(points) <= 1:
+        results = _serial()
+        _done("serial")
         return results
     # forking a parent whose XLA backend is live (multithreaded) can
     # deadlock the workers, so after a backend="jax" sweep ran in this
@@ -122,11 +158,8 @@ def execute_points(points: List[ScenarioSpec],
     if _xla_backend_live():
         main_file = getattr(sys.modules.get("__main__"), "__file__", None)
         if main_file is not None and not os.path.exists(main_file):
-            results = []
-            for i, p in enumerate(points):
-                m = runner(p)
-                emit(i, m)
-                results.append(m)
+            results = _serial()
+            _done("serial")
             return results
         methods = multiprocessing.get_all_start_methods()
         ctx = multiprocessing.get_context(
@@ -141,9 +174,11 @@ def execute_points(points: List[ScenarioSpec],
             done, pending = wait(pending, return_when=FIRST_COMPLETED)
             for fut in done:
                 i = futures[fut]
-                m = fut.result()      # re-raises worker exceptions
+                m, w = fut.result()   # re-raises worker exceptions
+                point_walls.append({"index": i, "wall_s": round(w, 6)})
                 out[i] = m
                 emit(i, m)
+    _done("pool", processes=processes)
     return out
 
 
@@ -161,8 +196,8 @@ def _xla_backend_live() -> bool:
 
 
 def _execute_jax(points: List[ScenarioSpec], derive: Optional[Callable],
-                 emit: OnResult,
-                 mode: str = "megabatch") -> List[ScenarioMetrics]:
+                 emit: OnResult, mode: str = "megabatch",
+                 point_walls: Optional[List[Dict]] = None):
     """Batched single-process sweep.
 
     'megabatch' (default): every structurally compatible point — any
@@ -182,7 +217,10 @@ def _execute_jax(points: List[ScenarioSpec], derive: Optional[Callable],
     `XLA_FLAGS=--xla_force_host_platform_device_count=N` sharding batch
     axes over the N host devices, and completed rows stream out per
     finalized batch."""
+    from repro.netsim.jx.engine import dispatch_stats
+
     results: List[Optional[ScenarioMetrics]] = [None] * len(points)
+    stats0 = dispatch_stats()
 
     def deliver(i, c, r):
         m = distill_metrics(points[i], c, r)
@@ -191,15 +229,28 @@ def _execute_jax(points: List[ScenarioSpec], derive: Optional[Callable],
         results[i] = m
         emit(i, m)
 
+    def record_group(idxs: List[int], wall_s: float) -> None:
+        # one fused launch per group: its wall clock amortizes evenly
+        if point_walls is not None:
+            each = round(wall_s / max(len(idxs), 1), 6)
+            point_walls.extend({"index": i, "wall_s": each}
+                               for i in idxs)
+
+    def stats_delta() -> Dict[str, int]:
+        s1 = dispatch_stats()
+        return {k: v - stats0.get(k, 0) for k, v in s1.items()}
+
     if mode == "megabatch":
         from repro.netsim.jx.megabatch import (dispatch_megabatch,
                                                finalize_group)
 
         compiled = [compile_scenario(p) for p in points]
         for idxs, handle in dispatch_megabatch(compiled):
+            tg = time.perf_counter()
             for i, r in zip(idxs, finalize_group(handle)):
                 deliver(i, compiled[i], r)
-        return results
+            record_group(idxs, time.perf_counter() - tg)
+        return results, stats_delta()
 
     from repro.netsim.jx.engine import (dispatch_compiled_batch,
                                         finalize_batch)
@@ -220,6 +271,8 @@ def _execute_jax(points: List[ScenarioSpec], derive: Optional[Callable],
         dispatched.append((idxs, compiled,
                            dispatch_compiled_batch(compiled)))
     for idxs, compiled, handle in dispatched:
+        tg = time.perf_counter()
         for i, c, r in zip(idxs, compiled, finalize_batch(handle)):
             deliver(i, c, r)
-    return results
+        record_group(idxs, time.perf_counter() - tg)
+    return results, stats_delta()

@@ -21,6 +21,7 @@ interrupted sweep resumes where it died.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, replace
 from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
@@ -119,10 +120,16 @@ class Experiment:
 
     def cache_salt(self) -> str:
         """Folds the derive hook's identity into cache keys: different
-        extra-metric logic must not alias plain runs."""
+        extra-metric logic must not alias plain runs.  `functools.partial`
+        of a module-level function is accepted (its bound arguments join
+        the salt — e.g. a trace export directory)."""
         if self.derive is None:
             return ""
-        return f"{self.derive.__module__}.{self.derive.__qualname__}"
+        d = self.derive
+        if isinstance(d, functools.partial):
+            inner = f"{d.func.__module__}.{d.func.__qualname__}"
+            return f"{inner}{d.args!r}{sorted(d.keywords.items())!r}"
+        return f"{d.__module__}.{d.__qualname__}"
 
 
 def run_experiment(exp: Experiment,
@@ -176,14 +183,25 @@ def run_experiment(exp: Experiment,
 
     # mixed-backend grids (e.g. a sim.backend axis) partition into one
     # executor call per backend, each batched as usual
+    executions: List[Dict] = []
     for bk in ("numpy", "jax"):
         group = [p for p in pending if p.spec.sim.backend == bk]
         if group:
+            fl: Dict = {}
             execute_points(
                 [p.spec for p in group], processes=processes, backend=bk,
                 derive=exp.derive, jx_dispatch=jx_dispatch,
                 compile_cache_dir=compile_cache_dir,
-                on_result=lambda j, m, g=group: on_result(g, j, m))
+                on_result=lambda j, m, g=group: on_result(g, j, m),
+                flight=fl)
+            # executor point indices are group-local; lift to grid order
+            for pw in fl.get("points", ()):
+                pw["index"] = group[pw["index"]].index
+            executions.append(fl)
+    rs.flight = {"experiment": exp.name,
+                 "cache_hits": rs.cache_hits,
+                 "cache_misses": rs.cache_misses,
+                 "executions": executions}
     rs.sort_to_grid_order()
     return rs
 

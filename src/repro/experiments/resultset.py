@@ -22,11 +22,16 @@ import math
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.scenarios.runner import (METRIC_FIELDS, METRIC_KINDS,
-                                    ScenarioMetrics, metric_value)
+                                    TRACE_METRIC_DEFAULTS, ScenarioMetrics,
+                                    metric_value)
 
 SCHEMA_VERSION = 1
 
 METRIC_COLUMNS: Tuple[str, ...] = tuple(n for n, _, _ in METRIC_FIELDS)
+
+# Columns that may be absent from serializations written before they
+# existed — deserialization backfills the default instead of raising.
+_BACKFILL_COLUMNS: Dict[str, Any] = dict(TRACE_METRIC_DEFAULTS)
 
 def _std(xs: List[float]) -> float:
     mu = sum(xs) / len(xs)
@@ -69,6 +74,9 @@ class ResultSet:
         self._order: List[int] = []          # grid ordinal per row
         self.cache_hits = 0
         self.cache_misses = 0
+        # executor flight-recorder summary (per-point wall clock,
+        # dispatch/compile counts); attached by `run_experiment`
+        self.flight: Optional[Dict[str, Any]] = None
 
     # ---- shape ----------------------------------------------------------
     @property
@@ -145,16 +153,10 @@ class ResultSet:
 
     def to_metrics(self) -> List[ScenarioMetrics]:
         """Reconstruct the `ScenarioMetrics` records (row order)."""
-        out = []
-        for r in self.rows():
-            out.append(ScenarioMetrics.from_dict({
-                k: r[k] for k in
-                ("scenario", "seed", "routing", "nic", "mean_goodput",
-                 "tenant_mean", "tenant_p01", "tenant_p99",
-                 "isolation_index", "recovery_slots", "completion_tail",
-                 "symmetry_cv", "symmetry_uniform", "symmetry_outliers",
-                 "extra")}))
-        return out
+        derived = ("worst_recovery_slots",)      # recomputed, not stored
+        keys = [n for n in METRIC_COLUMNS if n not in derived]
+        return [ScenarioMetrics.from_dict({k: r[k] for k in keys})
+                for r in self.rows()]
 
     # ---- queries --------------------------------------------------------
     def _subset(self, idxs: Iterable[int]) -> "ResultSet":
@@ -236,12 +238,13 @@ class ResultSet:
 
     # ---- serialization --------------------------------------------------
     def to_json(self) -> str:
-        return json.dumps(
-            {"schema_version": SCHEMA_VERSION,
-             "coord_names": self.coord_names,
-             "n_rows": len(self),
-             "columns": {n: self._cols[n] for n in self.column_names}},
-            sort_keys=True)
+        doc = {"schema_version": SCHEMA_VERSION,
+               "coord_names": self.coord_names,
+               "n_rows": len(self),
+               "columns": {n: self._cols[n] for n in self.column_names}}
+        if self.flight is not None:
+            doc["flight"] = self.flight
+        return json.dumps(doc, sort_keys=True)
 
     @classmethod
     def from_json(cls, text: str) -> "ResultSet":
@@ -252,14 +255,20 @@ class ResultSet:
                 f"ResultSet schema version {ver!r} != supported "
                 f"{SCHEMA_VERSION}")
         rs = cls(d["coord_names"])
+        n_rows = int(d.get("n_rows", 0))
         for n in rs.column_names:
             if n not in d["columns"]:
+                if n in _BACKFILL_COLUMNS:
+                    rs._cols[n] = [_jsonify(_BACKFILL_COLUMNS[n])
+                                   for _ in range(n_rows)]
+                    continue
                 raise ValueError(f"ResultSet JSON missing column {n!r}")
             rs._cols[n] = list(d["columns"][n])
         lens = {len(c) for c in rs._cols.values()}
         if len(lens) > 1:
             raise ValueError(f"ragged ResultSet columns: lengths {lens}")
         rs._order = list(range(len(rs)))
+        rs.flight = d.get("flight")
         return rs
 
     def to_csv(self) -> str:
@@ -289,16 +298,20 @@ class ResultSet:
             raise ValueError("empty ResultSet CSV")
         header = rows[0]
         coord_names = [n[5:] for n in header if n.startswith("axis.")]
-        missing = [n for n in METRIC_COLUMNS if n not in header]
+        missing = [n for n in METRIC_COLUMNS if n not in header
+                   and n not in _BACKFILL_COLUMNS]
         if missing:
             raise ValueError(f"ResultSet CSV missing columns {missing}")
         rs = cls(coord_names)
         parsers = {"str": str, "int": int, "float": float,
                    "bool": lambda s: s == "True", "json": json.loads}
+        backfill = [n for n in METRIC_COLUMNS if n not in header]
         for cells in rows[1:]:
             for n, cell in zip(header, cells):
                 if n in rs._cols:
                     rs._cols[n].append(parsers[rs.column_kind(n)](cell))
+            for n in backfill:
+                rs._cols[n].append(_jsonify(_BACKFILL_COLUMNS[n]))
             rs._order.append(len(rs._order))
         lens = {len(c) for c in rs._cols.values()}
         if len(lens) > 1:

@@ -58,6 +58,7 @@ from repro.netsim.cc import (DCQCN_AI, DCQCN_ALPHA_G, MIN_RATE,
 from repro.netsim.fabric import (AR_TEMPERATURE, ECN_QUEUE_THRESH,
                                  JSQ_BINS, Q_CAP, FlowArrays)
 from repro.netsim.sim import SimConfig
+from repro.trace import TraceSpec
 
 from .events import (FaultTimeline, compile_fault_timeline,
                      ecmp_assign_segments)
@@ -103,6 +104,10 @@ class JxConfig:
     jsq_bins: int = JSQ_BINS
     q_cap: float = Q_CAP
     use_pallas: bool = False
+    # Participates in every jit-cache key / launch fingerprint, so the
+    # default (disabled) spec leaves program identity — and the HLO —
+    # exactly as if tracing did not exist.
+    trace: TraceSpec = TraceSpec()
 
     @property
     def n_paths(self) -> int:
@@ -143,7 +148,8 @@ class JxConfig:
             n_aggs=topo.n_aggs if fat else 1,
             n_cores=topo.n_cores if fat else 1,
             core_cap=topo.core_cap if fat else 1.0,
-            use_pallas=pallas_enabled())
+            use_pallas=pallas_enabled(),
+            trace=getattr(cfg, "trace", TraceSpec()))
 
 
 @dataclass
@@ -159,6 +165,7 @@ class JxSimResult:
     groups: List[str]
     group_of: np.ndarray
     slot_us: float
+    trace: Optional[Dict[str, np.ndarray]] = None
 
     def group_mean(self, group: str) -> float:
         gi = self.groups.index(group)
@@ -766,7 +773,22 @@ def _slot_step(cfg: JxConfig, fb: FlowBatch, pair_idx: jnp.ndarray,
         q_up=q_up, q_down=q_down, q2_up=q2_up, q2_down=q2_down,
         nic=nic, remaining=remaining, done=done, completion=completion,
         goodput_sum=goodput_sum, util_up=util)
-    return new_carry, achieved.sum()
+    if not cfg.trace.enabled:
+        return new_carry, achieved.sum()
+    # Trace outputs ride the scan's stacked ys (never the donated
+    # carry); decimation happens in `_simulate`.  Padded flows offer
+    # zero, so their host_bw contribution is exactly zero and the
+    # megabatch finalizer only strips the flow-axis fields.
+    sig = {
+        "host_bw": lambda: _seg_sum(
+            jnp.where(stalled[:, None], 0.0, achieved_pp), aggs.src),
+        "util": lambda: util,
+        "queue": lambda: q_up,
+        "ecn": lambda: ecn,
+        "eligible": lambda: nic.eligible,
+    }
+    return new_carry, ((achieved.sum(),) +
+                       tuple(sig[f]() for f in cfg.trace.active_fields()))
 
 
 def _simulate(cfg: JxConfig, fb: FlowBatch, seg_up, seg_down, seg_acc,
@@ -787,13 +809,19 @@ def _simulate(cfg: JxConfig, fb: FlowBatch, seg_up, seg_down, seg_acc,
                    jnp.asarray(seg_up), jnp.asarray(seg_down),
                    jnp.asarray(seg_acc), jnp.asarray(seg_up2),
                    jnp.asarray(seg_down2), stack, load_fn)
-    carry, totals = jax.lax.scan(step, carry0, xs)
+    carry, ys = jax.lax.scan(step, carry0, xs)
+    if cfg.trace.enabled:
+        # strided slice inside the jitted program: slot set matches the
+        # numpy loop's `t % every == 0`
+        totals, tail = ys[0], tuple(y[::cfg.trace.every] for y in ys[1:])
+    else:
+        totals, tail = ys, ()
     r = cfg.record_every
     n_rec = (cfg.slots + r - 1) // r
     w0 = int(n_rec * cfg.warmup_frac)
     frames = (n_rec - w0) if n_rec > w0 else n_rec
     return (carry.goodput_sum / frames, carry.completion, totals,
-            carry.util_up)
+            carry.util_up) + tail
 
 
 def _simulate_mb(cfg: JxConfig, stack: StackIdx, carry0: SimCarry,
@@ -1063,13 +1091,19 @@ def _aggs_for(cfg: JxConfig, fa: FlowArrays, assign: np.ndarray,
 
 
 def _wrap(cfg: JxConfig, fa: FlowArrays, out) -> JxSimResult:
-    mean_goodput, completion, totals, util = (np.asarray(o) for o in out)
+    mean_goodput, completion, totals, util = \
+        (np.asarray(o) for o in out[:4])
+    trace = None
+    if cfg.trace.enabled:
+        trace = {"slot": cfg.trace.recorded_slots(cfg.slots)}
+        trace.update((name, np.asarray(arr)) for name, arr
+                     in zip(cfg.trace.active_fields(), out[4:]))
     return JxSimResult(
         mean_goodput=mean_goodput,
         completion_slot=completion.astype(np.int64),
         total_goodput=totals[::cfg.record_every],
         util_up_last=util, groups=fa.groups, group_of=fa.group,
-        slot_us=cfg.slot_us)
+        slot_us=cfg.slot_us, trace=trace)
 
 
 def run_compiled(compiled) -> JxSimResult:

@@ -42,6 +42,7 @@ import jax
 import numpy as np
 
 from repro.netsim.fabric import FlowArrays
+from repro.trace import FLOW_AXIS_FIELDS
 
 from . import engine
 from .engine import JxConfig, JxSimResult, StackIdx, stack_idx_for
@@ -366,9 +367,16 @@ def finalize_group(handle) -> List[JxSimResult]:
         if index < 0 or index in by_index:      # lane pad replica
             continue
         F = len(fa)
-        mean_goodput, completion, totals, util = (o[b] for o in outs)
-        by_index[index] = engine._wrap(
-            cfg, fa, [mean_goodput[:F], completion[:F], totals, util])
+        row = [o[b] for o in outs]
+        mean_goodput, completion, totals, util = row[:4]
+        point_out = [mean_goodput[:F], completion[:F], totals, util]
+        # trace tail: flow-axis fields carry the bucket padding on axis 1
+        # (after time); pad flows are inert, so slicing recovers the
+        # unpadded capture exactly
+        for name, arr in zip(cfg.trace.active_fields(), row[4:]):
+            point_out.append(arr[:, :F] if name in FLOW_AXIS_FIELDS
+                             else arr)
+        by_index[index] = engine._wrap(cfg, fa, point_out)
     return [by_index[i] for i in order]
 
 

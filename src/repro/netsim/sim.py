@@ -6,6 +6,8 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.trace import TraceSpec
+
 from .cc import NicState
 from .fabric import Flow, FlowArrays, FluidFabric
 from .topology import Fabric, LeafSpine
@@ -23,6 +25,7 @@ class SimConfig:
     seed: int = 0
     record_every: int = 1
     backend: str = "numpy"       # 'numpy' | 'jax' (see repro.netsim.jx)
+    trace: TraceSpec = TraceSpec()
 
     def sw_lb_delay_slots(self) -> int:
         """swlb reaction delay in slots (0 for hardware-PLB stacks) —
@@ -41,6 +44,7 @@ class SimResult:
     groups: List[str]
     group_of: np.ndarray
     slot_us: float
+    trace: Optional[Dict[str, np.ndarray]] = None
 
     def group_mean(self, group: str) -> float:
         gi = self.groups.index(group)
@@ -108,6 +112,11 @@ def run_sim(topo: Fabric, flows: List[Flow], cfg: SimConfig,
     done = np.zeros(F, bool)
     completion = np.full(F, -1, np.int64)
 
+    tr = cfg.trace
+    rec_tr: Dict[str, list] = ({f: [] for f in tr.active_fields()}
+                               if tr.enabled else {})
+    n_hosts = topo.access.shape[1]
+
     rec_g, rec_r = [], []
     for t in range(cfg.slots):
         if events is not None:
@@ -156,6 +165,24 @@ def run_sim(topo: Fabric, flows: List[Flow], cfg: SimConfig,
             w = np.maximum(offered, 1e-12)
             rec_r.append((res.rtt * w).sum(1) / w.sum(1))
 
+        if tr.enabled and t % tr.every == 0:
+            # Mirrors the jx engine's per-slot trace outputs exactly
+            # (pinned by tests/test_trace.py parity).
+            if "host_bw" in rec_tr:
+                hb = np.zeros((n_hosts, P))
+                np.add.at(hb, fa.src,
+                          np.where(stalled[:, None], 0.0,
+                                   res.plane_rates))
+                rec_tr["host_bw"].append(hb)
+            if "util" in rec_tr:
+                rec_tr["util"].append(res.util_up.copy())
+            if "queue" in rec_tr:
+                rec_tr["queue"].append(fabric.state.q_up.copy())
+            if "ecn" in rec_tr:
+                rec_tr["ecn"].append(res.ecn.copy())
+            if "eligible" in rec_tr:
+                rec_tr["eligible"].append(nic.eligible.copy())
+
     goodput = np.asarray(rec_g)
     rtt = np.asarray(rec_r)
     w0 = int(goodput.shape[0] * cfg.warmup_frac)
@@ -164,4 +191,7 @@ def run_sim(topo: Fabric, flows: List[Flow], cfg: SimConfig,
         mean_goodput=goodput[w0:].mean(0) if goodput.shape[0] > w0
         else goodput.mean(0),
         util_up_last=res.util_up, groups=fa.groups, group_of=fa.group,
-        slot_us=cfg.slot_us)
+        slot_us=cfg.slot_us,
+        trace=({"slot": tr.recorded_slots(cfg.slots),
+                **{k: np.asarray(v) for k, v in rec_tr.items()}}
+               if tr.enabled else None))

@@ -348,7 +348,7 @@ def compile_scenario(spec: ScenarioSpec) -> CompiledScenario:
         warmup_frac=spec.sim.warmup_frac,
         sw_lb_delay_ms=spec.sim.sw_lb_delay_ms,
         seed=spec.sim.seed, record_every=spec.sim.record_every,
-        backend=spec.sim.backend)
+        backend=spec.sim.backend, trace=spec.sim.trace)
     return CompiledScenario(spec=spec, topo=topo, flows=flows, cfg=cfg,
                             events=events, tenants=tenants,
                             fault_slots=fault_slots)

@@ -27,6 +27,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.telemetry import symmetry_check
+from repro.trace import trace_summary
 
 from .compile import CompiledScenario, compile_scenario
 from .registry import get_scenario
@@ -94,16 +95,28 @@ METRIC_FIELDS: Tuple[Tuple[str, str, Callable], ...] = (
     ("symmetry_cv",          "float", lambda m: m.symmetry_cv),
     ("worst_recovery_slots", "int",   lambda m: m.worst_recovery()),
     ("symmetry_uniform",     "bool",  lambda m: m.symmetry_uniform),
+    ("hft_transient_drops",  "int",   lambda m: m.hft_transient_drops),
+    ("bimodal_frac",         "float", lambda m: m.bimodal_frac),
     ("tenant_mean",          "json",  lambda m: m.tenant_mean),
     ("tenant_p01",           "json",  lambda m: m.tenant_p01),
     ("tenant_p99",           "json",  lambda m: m.tenant_p99),
     ("recovery_slots",       "json",  lambda m: m.recovery_slots),
     ("symmetry_outliers",    "json",  lambda m: m.symmetry_outliers),
+    ("straggler_ranks",      "json",  lambda m: m.straggler_ranks),
     ("extra",                "json",  lambda m: m.extra),
 )
 
 METRIC_KINDS: Dict[str, str] = {n: k for n, k, _ in METRIC_FIELDS}
 _METRIC_VALUE: Dict[str, Callable] = {n: v for n, _, v in METRIC_FIELDS}
+
+# Columns added after a serialization already existed get filled with
+# these when absent, so pre-trace ResultSet JSON/CSV and cache entries
+# keep loading (see `resultset.from_json` / `ScenarioMetrics.from_dict`).
+TRACE_METRIC_DEFAULTS: Dict[str, object] = {
+    "hft_transient_drops": -1,
+    "bimodal_frac": float("nan"),
+    "straggler_ranks": (),
+}
 
 
 def metric_value(m: "ScenarioMetrics", name: str):
@@ -153,6 +166,11 @@ class ScenarioMetrics:
     symmetry_uniform: bool
     symmetry_outliers: Tuple[Tuple[int, int], ...]    # (plane, spine)
     extra: Dict[str, float] = field(default_factory=dict)
+    # §5 trace-derived columns — meaningful only when the point ran with
+    # `sim.trace` enabled; the defaults mark "no trace captured"
+    hft_transient_drops: int = -1
+    bimodal_frac: float = float("nan")
+    straggler_ranks: Tuple[int, ...] = ()
 
     CSV_FIELDS = tuple(name for name, _ in _CSV_COLUMNS)
 
@@ -183,6 +201,9 @@ class ScenarioMetrics:
             "symmetry_uniform": bool(self.symmetry_uniform),
             "symmetry_outliers": [list(o) for o in self.symmetry_outliers],
             "extra": dict(self.extra),
+            "hft_transient_drops": int(self.hft_transient_drops),
+            "bimodal_frac": float(self.bimodal_frac),
+            "straggler_ranks": [int(r) for r in self.straggler_ranks],
         }
 
     @classmethod
@@ -205,7 +226,11 @@ class ScenarioMetrics:
             symmetry_uniform=bool(d["symmetry_uniform"]),
             symmetry_outliers=tuple((int(p), int(s))
                                     for p, s in d["symmetry_outliers"]),
-            extra={str(k): v for k, v in d.get("extra", {}).items()})
+            extra={str(k): v for k, v in d.get("extra", {}).items()},
+            hft_transient_drops=int(d.get("hft_transient_drops", -1)),
+            bimodal_frac=float(d.get("bimodal_frac", float("nan"))),
+            straggler_ranks=tuple(
+                int(r) for r in d.get("straggler_ranks", ())))
 
 
 # ---------------------------------------------------------------------------
@@ -295,6 +320,16 @@ def distill_metrics(spec: ScenarioSpec, c: CompiledScenario,
         uniform &= rep.uniform
         outliers += [(p, s) for s in rep.outliers]
 
+    # §5.2/§5.3: trace-derived columns when the point captured one
+    trace = getattr(res, "trace", None)
+    extra: Dict = {}
+    summ = dict(TRACE_METRIC_DEFAULTS)
+    if trace is not None:
+        summ = trace_summary(trace, spec.topo.access_cap,
+                             spec.topo.n_planes)
+        if "port_classes" in summ:
+            extra["port_classes"] = summ["port_classes"]
+
     return ScenarioMetrics(
         scenario=spec.name, seed=spec.sim.seed, routing=spec.sim.routing,
         nic=spec.sim.nic,
@@ -304,7 +339,10 @@ def distill_metrics(spec: ScenarioSpec, c: CompiledScenario,
         isolation_index=_jain(np.asarray(norm)),
         recovery_slots=recovery, completion_tail=tail,
         symmetry_cv=float(worst_cv), symmetry_uniform=bool(uniform),
-        symmetry_outliers=tuple(outliers))
+        symmetry_outliers=tuple(outliers), extra=extra,
+        hft_transient_drops=int(summ["hft_transient_drops"]),
+        bimodal_frac=float(summ["bimodal_frac"]),
+        straggler_ranks=tuple(summ["straggler_ranks"]))
 
 
 # ---------------------------------------------------------------------------

@@ -13,6 +13,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 from typing import Optional, Tuple
 
+from repro.trace import TraceSpec
+
 WORKLOAD_KINDS = ("bisection", "all2all", "allreduce", "incast",
                   "permutation", "storage", "pairs", "one2many")
 FAULT_KINDS = ("link_kill", "link_flap", "access_kill", "access_flap",
@@ -243,6 +245,12 @@ class SimSpec:
     seed: int = 0
     record_every: int = 1
     backend: str = "numpy"       # 'numpy' | 'jax'
+    trace: TraceSpec = TraceSpec()
+
+    # Tracing never changes simulated physics, and the default spec is
+    # elided from the canonical hash, so pre-trace cache entries and
+    # spec keys stay valid.
+    HASH_ELIDE_DEFAULTS = ("trace",)
 
 
 @dataclass(frozen=True)
@@ -321,6 +329,10 @@ class ScenarioSpec:
         if self.sim.backend not in BACKENDS:
             raise ValueError(
                 f"{self.name}: unknown backend {self.sim.backend!r}")
+        try:
+            self.sim.trace.validate()
+        except ValueError as e:
+            raise ValueError(f"{self.name}: {e}") from None
         return self
 
 

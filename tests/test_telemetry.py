@@ -65,3 +65,76 @@ def test_step_time_tracker_flags_slow_host():
         times[2] = 1.8
         slow = tr.update(times)
     assert slow == [2]
+
+
+# ---------------------------------------------------------------------------
+# classify_histogram edge behavior + bi-modal/straggler/idle boundaries
+# (regression coverage for the all-zero and nbins < 1/edge_frac fixes)
+# ---------------------------------------------------------------------------
+
+def test_all_zero_histogram_is_idle():
+    """No mass means nothing flowed — must not classify 'straggler'."""
+    assert classify_histogram(np.zeros(20)) == "idle"
+    assert classify_histogram(np.zeros(3)) == "idle"
+    assert classify_histogram(np.zeros(1)) == "idle"
+
+
+def test_idle_port_series_is_idle():
+    assert classify_histogram(bw_histogram(np.zeros(500))) == "idle"
+    near = np.full(500, 0.004)                  # all mass in bin 0
+    assert classify_histogram(bw_histogram(near)) == "idle"
+
+
+def test_degenerate_small_nbins_never_negative_mid():
+    """nbins < 1/edge_frac used to overlap the edge windows and drive
+    the mid-mass negative; the windows are now clamped to disjoint
+    halves, so every class is a valid label for every bin count."""
+    valid = {"idle", "line-rate", "healthy-blocked", "straggler"}
+    rng = np.random.default_rng(7)
+    for nbins in (1, 2, 3, 4, 5, 6, 20, 40):
+        for _ in range(20):
+            hist = rng.integers(0, 50, nbins).astype(float)
+            assert classify_histogram(hist) in valid
+    # bi-modal mass with 3 bins: edges are single disjoint bins
+    assert classify_histogram(np.array([50.0, 0.0, 50.0])) == \
+        "healthy-blocked"
+    # 2 bins: everything is edge mass; low-heavy -> idle-ish, not crash
+    assert classify_histogram(np.array([100.0, 1.0])) == "idle"
+    assert classify_histogram(np.array([10.0, 90.0])) in valid
+
+
+def test_single_bin_histogram_is_mid_dominated():
+    """One bin has no edge resolution: all mass counts as mid-range."""
+    assert classify_histogram(np.array([42.0])) == "straggler"
+
+
+def test_classification_boundaries_sweep():
+    """Property sweep over two-point mixtures low/high: the label moves
+    idle -> healthy-blocked -> line-rate as mass shifts to the top bin,
+    and injecting mid-range mass >= 25% always yields 'straggler'."""
+    n = 1000
+    for k in range(0, n + 1, 50):
+        frac_high = k / n
+        samples = np.concatenate([np.full(n - k, 0.01), np.full(k, 0.99)])
+        cls = classify_histogram(bw_histogram(samples))
+        if frac_high <= 0.05:
+            assert cls == "idle", frac_high
+        elif frac_high > 0.85:
+            assert cls == "line-rate", frac_high
+        else:
+            assert cls == "healthy-blocked", frac_high
+    for frac_mid in (0.26, 0.5, 0.75, 1.0):
+        k = int(n * frac_mid)
+        samples = np.concatenate([
+            np.full((n - k) // 2, 0.01), np.full((n - k) // 2, 0.99),
+            np.full(k, 0.5)])
+        assert classify_histogram(bw_histogram(samples)) == "straggler", \
+            frac_mid
+
+
+def test_find_stragglers_ignores_idle_ranks():
+    """A rank that never sent anything is idle, not a straggler."""
+    ranks = np.zeros((4, 500))
+    ranks[1] = 0.5                              # the actual straggler
+    ranks[2] = 0.99                             # line rate
+    assert find_stragglers(ranks) == [1]
