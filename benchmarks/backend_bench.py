@@ -52,6 +52,9 @@ from repro.scenarios import list_scenarios  # noqa: E402
 from .common import emit
 
 DEFAULT_SCENARIO = "flap_during_incast"
+# the giga-scale single point (4096 hosts / 102,400 flows): the shape
+# that forces the engine's sparse segment-summed aggregation path
+LARGE_SCENARIO = "giga_fabric_storage"
 DEFAULT_JSON = "BENCH_backend.json"
 # the committed perf trajectory: the last blessed run of this benchmark,
 # checked in at the repo root and regenerated whenever perf moves on
@@ -101,9 +104,65 @@ def compare_baseline(out: dict, base: Optional[dict]) -> dict:
         return {"comparable": False,
                 "reason": "baseline has no megabatch.warm_slots_per_s"}
     cur = out["megabatch"]["warm_slots_per_s"]
-    return {"comparable": True, "reason": "",
-            "baseline_warm_slots_per_s": ref,
-            "warm_slots_per_s": cur, "ratio": cur / ref}
+    cmp = {"comparable": True, "reason": "",
+           "baseline_warm_slots_per_s": ref,
+           "warm_slots_per_s": cur, "ratio": cur / ref}
+    # informational: the giga-scale point's trajectory, when both the
+    # run and the snapshot carry one for the same scenario/shape
+    lb, lo = base.get("large_scale"), out.get("large_scale")
+    if lb and lo and lb.get("warm_slots_per_s") and (
+            {k: lo.get(k) for k in ("scenario", "hosts", "flows",
+                                    "slots", "x64")}
+            == {k: lb.get(k) for k in ("scenario", "hosts", "flows",
+                                       "slots", "x64")}):
+        cmp["large_ratio"] = (lo["warm_slots_per_s"]
+                              / lb["warm_slots_per_s"])
+    return cmp
+
+
+def run_large(scenario: str = LARGE_SCENARIO,
+              slots: Optional[int] = None, warm_iters: int = 2) -> dict:
+    """Time the giga-scale single point (O(4k) hosts / O(100k) flows)
+    through the megabatch path — cold (XLA compile) and warm.  At this
+    shape `agg_mode_default` selects the sparse segment-summed
+    aggregation, so this is the perf point that guards the kernelized
+    hot path at scale."""
+    import jax
+
+    from repro.netsim.jx import dispatch_stats, reset_dispatch_stats
+    from repro.netsim.jx.engine import agg_mode_default
+    from repro.scenarios import get_scenario
+    from repro.scenarios.compile import compile_scenario
+
+    spec = get_scenario(scenario)
+    if slots:
+        spec = spec.with_sim(slots=slots)
+    compiled = compile_scenario(spec)
+    n_flows = len(compiled.flows)
+    topo = spec.topo
+    reset_dispatch_stats()
+    t0 = time.perf_counter()
+    execute_points([spec], backend="jax", jx_dispatch="megabatch")
+    cold = time.perf_counter() - t0
+    stats = dispatch_stats()
+    warm = _time_best(
+        lambda: execute_points([spec], backend="jax",
+                               jx_dispatch="megabatch"), iters=warm_iters)
+    row = {"scenario": scenario, "hosts": topo.n_hosts,
+           "flows": n_flows, "planes": topo.n_planes,
+           "slots": spec.sim.slots,
+           "x64": bool(jax.config.jax_enable_x64),
+           "agg_mode": agg_mode_default(topo.n_hosts, topo.n_leaves,
+                                        topo.n_paths, topo.n_planes),
+           "cold_s": cold, "warm_s": warm,
+           "dispatches": stats["dispatches"],
+           "compiles": stats["compiles"],
+           "warm_slots_per_s": spec.sim.slots / max(warm, 1e-9)}
+    emit(f"backend_bench.large.{scenario}", warm * 1e6,
+         f"hosts={topo.n_hosts},flows={n_flows},cold_s={cold:.2f},"
+         f"warm_s={warm:.2f},agg={row['agg_mode']},"
+         f"slots_per_s={row['warm_slots_per_s']:.1f}")
+    return row
 
 
 def _time_best(fn, iters: int) -> float:
@@ -122,7 +181,9 @@ def run(scenario: str = DEFAULT_SCENARIO,
         n_seeds: int = 2, slots: Optional[int] = None,
         processes: Optional[int] = None, with_numpy: bool = True,
         json_out: Optional[str] = DEFAULT_JSON,
-        baseline: Optional[str] = BASELINE_PATH) -> dict:
+        baseline: Optional[str] = BASELINE_PATH,
+        large: bool = False,
+        large_slots: Optional[int] = None) -> dict:
     from repro.netsim.jx import dispatch_stats, reset_dispatch_stats
 
     # read the committed snapshot up front — json_out may legitimately
@@ -210,11 +271,16 @@ def run(scenario: str = DEFAULT_SCENARIO,
             if with_numpy else "")
          + f",row_mismatches={mism}")
 
+    if large:
+        out["large_scale"] = run_large(slots=large_slots)
+
     out["baseline"] = cmp = compare_baseline(out, base)
     if cmp["comparable"]:
         print(f"# bench baseline: ratio={cmp['ratio']:.3f} "
               f"(warm {cmp['warm_slots_per_s']:.0f} vs committed "
-              f"{cmp['baseline_warm_slots_per_s']:.0f} slots/s)",
+              f"{cmp['baseline_warm_slots_per_s']:.0f} slots/s)"
+              + (f", large_ratio={cmp['large_ratio']:.3f}"
+                 if "large_ratio" in cmp else ""),
               flush=True)
     else:
         print(f"# bench baseline: not comparable ({cmp['reason']})",
@@ -256,6 +322,12 @@ def main(argv=None) -> None:
                    help="CI-sized defaults: 2 nics x 3 fracs x 2 "
                         "seeds, 120 slots (36 points); explicit flags "
                         "still win")
+    p.add_argument("--large", action="store_true",
+                   help="also time the giga-scale single point "
+                        f"({LARGE_SCENARIO}: 4096 hosts, 102,400 "
+                        "flows) through the sparse aggregation path")
+    p.add_argument("--large-slots", type=int, default=None,
+                   help="override the giga point's slot count")
     args = p.parse_args(argv)
     print("name,us_per_call,derived")
     # smoke only changes the *defaults* — explicit flags always win
@@ -271,7 +343,8 @@ def main(argv=None) -> None:
         n_seeds=args.seeds if args.seeds is not None else 2,
         slots=args.slots if args.slots is not None else slots,
         processes=args.processes, with_numpy=not args.no_numpy,
-        json_out=args.json_out, baseline=args.baseline or None)
+        json_out=args.json_out, baseline=args.baseline or None,
+        large=args.large, large_slots=args.large_slots)
 
 
 if __name__ == "__main__":

@@ -7,13 +7,23 @@ The k sweep is the `fig14a_fabric_flaps` experiment — a `faults` axis of
 exact-k random uplink kills, averaged over a seed axis.
 (b) 256K multi-plane endpoint flaps: P99 CCT slowdown as a function of the
 NIC's plane-failover convergence time (pristine/failed/degraded NIC-state
-composition) — pure composition math, no fabric sim."""
+composition) — pure composition math, no fabric sim.
+
+`--giga` adds (c): a *directly simulated* 4096-host / 102,400-flow
+multiplane point (`giga_fabric_storage`) through the JAX engine's sparse
+segment-summed aggregation path — the pristine fabric vs the same fabric
+with 8 concurrent random link kills, fig14a's degradation question asked
+of the full fluid simulation instead of the compositional proxy."""
 from __future__ import annotations
+
+import argparse
+import sys
+import time
 
 import numpy as np
 
 from repro.core.fault_tolerance import concurrent_failure_pmf
-from repro.experiments import get_experiment, run_experiment
+from repro.experiments import execute_points, get_experiment, run_experiment
 
 from .common import emit
 
@@ -64,5 +74,45 @@ def run() -> None:
              f"p99cct_slowdown={slow:.2f}x")
 
 
+def run_giga(slots: int = 0) -> None:
+    """(c) the giga-scale point, simulated rather than composed: mean
+    goodput of 102,400 storage flows over 4096 hosts with and without
+    8 concurrent random fabric link kills, plus the wall clock the
+    sparse aggregation path takes for each."""
+    from dataclasses import replace
+
+    from repro.scenarios import get_scenario
+
+    spec = get_scenario("giga_fabric_storage")
+    if slots:
+        spec = spec.with_sim(slots=slots)
+    pristine = replace(spec, faults=())
+    t0 = time.perf_counter()
+    out = execute_points([pristine, spec], backend="jax",
+                         jx_dispatch="megabatch")
+    wall = time.perf_counter() - t0
+    g0, gk = out[0].mean_goodput, out[1].mean_goodput
+    emit("fig14c.giga_sim.k8_random_kill", wall * 1e6,
+         f"hosts=4096,flows=102400,goodput_pristine={g0:.4f},"
+         f"goodput_k8={gk:.4f},degradation={gk / g0:.4f},"
+         f"wall_s={wall:.1f}")
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--giga", action="store_true",
+                   help="also simulate the 4096-host / 102,400-flow "
+                        "point directly (JAX sparse aggregation path)")
+    p.add_argument("--giga-only", action="store_true",
+                   help="skip (a)/(b); just the giga sim point")
+    p.add_argument("--giga-slots", type=int, default=0,
+                   help="override the giga point's slot count")
+    args = p.parse_args(argv)
+    if not args.giga_only:
+        run()
+    if args.giga or args.giga_only:
+        run_giga(slots=args.giga_slots)
+
+
 if __name__ == "__main__":
-    run()
+    main(sys.argv[1:])

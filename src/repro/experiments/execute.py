@@ -90,8 +90,9 @@ def execute_points(points: List[ScenarioSpec],
     `flight`, when a dict, is filled with the executor flight-recorder
     summary: backend/mode, total wall clock, per-point wall times (JAX
     points share one launch, so their cost is the finalized group's wall
-    amortized over its points), and — on the JAX paths — the
-    dispatch/compile counter deltas from `dispatch_stats()`."""
+    amortized over its points), and — on the JAX paths — this sweep's
+    own dispatch/compile counts (`collect_dispatch`) plus any float32
+    bytes_total overflow conditions hit while preparing it."""
     emit = on_result or (lambda i, m: None)
     t_start = time.perf_counter()
     point_walls: List[Dict] = []
@@ -118,9 +119,9 @@ def execute_points(points: List[ScenarioSpec],
             raise ValueError(
                 f"unknown jx_dispatch {mode!r}; expected one of "
                 f"{JX_DISPATCH_MODES}")
-        out, stats = _execute_jax(points, derive, emit, mode,
-                                  point_walls)
-        _done(mode, dispatch_stats=stats)
+        out, stats, overflows = _execute_jax(points, derive, emit, mode,
+                                             point_walls)
+        _done(mode, dispatch_stats=stats, f32_overflows=overflows)
         return out
     if backend != "numpy":
         raise ValueError(
@@ -217,10 +218,10 @@ def _execute_jax(points: List[ScenarioSpec], derive: Optional[Callable],
     `XLA_FLAGS=--xla_force_host_platform_device_count=N` sharding batch
     axes over the N host devices, and completed rows stream out per
     finalized batch."""
-    from repro.netsim.jx.engine import dispatch_stats
+    from repro.netsim.jx.engine import collect_dispatch, f32_overflow_log
 
     results: List[Optional[ScenarioMetrics]] = [None] * len(points)
-    stats0 = dispatch_stats()
+    n_overflows0 = len(f32_overflow_log())
 
     def deliver(i, c, r):
         m = distill_metrics(points[i], c, r)
@@ -236,43 +237,46 @@ def _execute_jax(points: List[ScenarioSpec], derive: Optional[Callable],
             point_walls.extend({"index": i, "wall_s": each}
                                for i in idxs)
 
-    def stats_delta() -> Dict[str, int]:
-        s1 = dispatch_stats()
-        return {k: v - stats0.get(k, 0) for k, v in s1.items()}
+    # collect_dispatch attributes launches to THIS sweep: the
+    # before/after global-counter delta it replaces misattributed any
+    # launches concurrent executors made on other threads
+    with collect_dispatch() as counter:
+        if mode == "megabatch":
+            from repro.netsim.jx.megabatch import (dispatch_megabatch,
+                                                   finalize_group)
 
-    if mode == "megabatch":
-        from repro.netsim.jx.megabatch import (dispatch_megabatch,
-                                               finalize_group)
+            compiled = [compile_scenario(p) for p in points]
+            for idxs, handle in dispatch_megabatch(compiled):
+                tg = time.perf_counter()
+                for i, r in zip(idxs, finalize_group(handle)):
+                    deliver(i, compiled[i], r)
+                record_group(idxs, time.perf_counter() - tg)
+        else:
+            from repro.netsim.jx.engine import (dispatch_compiled_batch,
+                                                finalize_batch)
 
-        compiled = [compile_scenario(p) for p in points]
-        for idxs, handle in dispatch_megabatch(compiled):
-            tg = time.perf_counter()
-            for i, r in zip(idxs, finalize_group(handle)):
-                deliver(i, compiled[i], r)
-            record_group(idxs, time.perf_counter() - tg)
-        return results, stats_delta()
-
-    from repro.netsim.jx.engine import (dispatch_compiled_batch,
-                                        finalize_batch)
-
-    order: List = []
-    groups: Dict = {}
-    for i, p in enumerate(points):
-        key = replace(p, sim=replace(p.sim, seed=0, backend="numpy"),
-                      workload_seed=0)
-        if key not in groups:
-            groups[key] = []
-            order.append(key)
-        groups[key].append(i)
-    dispatched = []
-    for key in order:
-        idxs = groups[key]
-        compiled = [compile_scenario(points[i]) for i in idxs]
-        dispatched.append((idxs, compiled,
-                           dispatch_compiled_batch(compiled)))
-    for idxs, compiled, handle in dispatched:
-        tg = time.perf_counter()
-        for i, c, r in zip(idxs, compiled, finalize_batch(handle)):
-            deliver(i, c, r)
-        record_group(idxs, time.perf_counter() - tg)
-    return results, stats_delta()
+            order: List = []
+            groups: Dict = {}
+            for i, p in enumerate(points):
+                key = replace(p,
+                              sim=replace(p.sim, seed=0,
+                                          backend="numpy"),
+                              workload_seed=0)
+                if key not in groups:
+                    groups[key] = []
+                    order.append(key)
+                groups[key].append(i)
+            dispatched = []
+            for key in order:
+                idxs = groups[key]
+                compiled = [compile_scenario(points[i]) for i in idxs]
+                dispatched.append((idxs, compiled,
+                                   dispatch_compiled_batch(compiled)))
+            for idxs, compiled, handle in dispatched:
+                tg = time.perf_counter()
+                for i, c, r in zip(idxs, compiled,
+                                   finalize_batch(handle)):
+                    deliver(i, c, r)
+                record_group(idxs, time.perf_counter() - tg)
+    overflows = list(f32_overflow_log()[n_overflows0:])
+    return results, counter.snapshot(), overflows

@@ -23,3 +23,14 @@ def pallas_enabled(override: Optional[bool] = None) -> bool:
     if env is not None:
         return env.lower() in ("1", "true", "t", "yes", "y", "on")
     return jax.default_backend() == "tpu"
+
+
+def pallas_interpret(override: Optional[bool] = None) -> bool:
+    """Whether a Pallas kernel must run in interpret mode: required on
+    every non-TPU backend (`pallas_call` without `interpret=True` fails
+    off-TPU).  Kernel entry points resolve this when their `interpret`
+    argument is None, so `REPRO_NETSIM_PALLAS=1` exercises the kernel
+    bodies on CPU CI without per-call-site plumbing."""
+    if override is not None:
+        return override
+    return jax.default_backend() != "tpu"

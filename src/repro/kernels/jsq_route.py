@@ -10,6 +10,7 @@ ops per block of packets.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -59,7 +60,7 @@ def pair_fractions(q: jax.Array, cap: jax.Array, w: jax.Array, *,
                    nbins: int = 16, temperature: float = 1.0,
                    qmax: float = 8.0, br: int = 128,
                    use_pallas: bool = False,
-                   interpret: bool = False) -> jax.Array:
+                   interpret: Optional[bool] = None) -> jax.Array:
     """Spine-selection fractions for every (plane, src-leaf, dst-leaf)
     path — the per-slot AR/WAR hot path of the simulator.  `q`/`cap`/`w`
     are (..., S): summed up+down queue depth, min(up, down) path
@@ -69,8 +70,9 @@ def pair_fractions(q: jax.Array, cap: jax.Array, w: jax.Array, *,
     With `use_pallas=False` this is exactly `ref.pair_score_softmax_ref`
     (bit-identical to the engine's historical jnp math).  The Pallas
     path flattens the leading axes into rows of `br` and scores each on
-    the VPU in float32."""
-    from . import ref
+    the VPU in float32; `interpret=None` resolves via
+    `backend.pallas_interpret` (interpret everywhere but TPU)."""
+    from . import backend, ref
 
     if not use_pallas:
         return ref.pair_score_softmax_ref(q, cap, w, nbins=nbins,
@@ -101,16 +103,20 @@ def pair_fractions(q: jax.Array, cap: jax.Array, w: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((br, S), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((q2.shape[0], S), jnp.float32),
-        interpret=interpret,
-    )(q2, cap2, w2)
+        interpret=backend.pallas_interpret(interpret),
+    )(q2.astype(jnp.float32), cap2.astype(jnp.float32),
+      w2.astype(jnp.float32))
     return out[:R].reshape(*lead, S).astype(q.dtype)
 
 
 def jsq_route(queues: jax.Array, up_mask: jax.Array, weights: jax.Array,
               pkt_hash: jax.Array, *, nbins: int = 16, qmax: float = 1.0,
-              bp: int = 256, interpret: bool = False) -> jax.Array:
+              bp: int = 256,
+              interpret: Optional[bool] = None) -> jax.Array:
     """queues/up_mask/weights: (ports,); pkt_hash: (N,) uint32.
     Returns (N,) int32 egress port per packet."""
+    from . import backend
+
     (n_ports,) = queues.shape
     N = pkt_hash.shape[0]
     bp = min(bp, N)
@@ -132,7 +138,9 @@ def jsq_route(queues: jax.Array, up_mask: jax.Array, weights: jax.Array,
         ],
         out_specs=pl.BlockSpec((bp, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((pkt_hash.shape[0], 1), jnp.int32),
-        interpret=interpret,
-    )(queues[None, :], up_mask[None, :].astype(jnp.float32),
-      weights[None, :], pkt_hash[:, None].astype(jnp.uint32))
+        interpret=backend.pallas_interpret(interpret),
+    )(queues[None, :].astype(jnp.float32),
+      up_mask[None, :].astype(jnp.float32),
+      weights[None, :].astype(jnp.float32),
+      pkt_hash[:, None].astype(jnp.uint32))
     return out[:N, 0]

@@ -14,8 +14,10 @@ import jax.numpy as jnp
 from . import flash_attention as _fa
 from . import decode_attention as _da
 from . import jsq_route as _jr
+from . import link_load as _ll
 from . import plb_select as _ps
 from . import int8_codec as _ic
+from . import queue_ecn as _qe
 
 
 def _interpret() -> bool:
@@ -88,6 +90,53 @@ def pair_fractions(q, cap, w, *, nbins: int = 16,
     return _jr.pair_fractions(q, cap, w, nbins=nbins,
                               temperature=temperature, qmax=qmax, br=br,
                               use_pallas=True, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "br"))
+def bucket_load_bottleneck(g, cap, *, eps: float = _ll.EPS,
+                           br: int = 128):
+    """Fused (P, rows, C) load-plan sum + bottleneck scaling (Pallas
+    path; the simulator dispatches via
+    `link_load.bucket_load_bottleneck`, keeping the bit-exact jnp
+    fallback off-TPU and the ordered f64 parity sum everywhere)."""
+    return _ll.bucket_load_bottleneck(g, cap, eps=eps, ordered=False,
+                                      br=br, use_pallas=True,
+                                      interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "bp"))
+def bottleneck(cap, load, *, eps: float = _ll.EPS, bp: int = 1024):
+    """Elementwise min(1, cap/load) link scale factor (Pallas path)."""
+    return _ll.bottleneck(cap, load, eps=eps, bp=bp, use_pallas=True,
+                          interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("q_cap", "eps", "bp"))
+def queue_update(q, load, cap, *, q_cap: float, eps: float = _qe.EPS,
+                 bp: int = 1024):
+    """Fluid queue integrator + utilization (Pallas path; see
+    `queue_ecn.queue_update` for the dispatching entry point)."""
+    return _qe.queue_update(q, load, cap, q_cap=q_cap, eps=eps, bp=bp,
+                            use_pallas=True, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "mode", "base_rtt_us", "slot_us", "ecn_thresh", "target_rtt_us",
+    "min_rate", "md", "ai", "rtt_gain", "dcqcn_ai", "alpha_g", "bp"))
+def nic_update(qmean, rate, alpha, esr, *, mode: str, base_rtt_us: float,
+               slot_us: float, ecn_thresh: float, target_rtt_us: float,
+               min_rate: float, md: float, ai: float, rtt_gain: float,
+               dcqcn_ai: float, alpha_g: float, bp: int = 256):
+    """Fused RTT/ECN + CC rate step (Pallas path; see
+    `queue_ecn.nic_update` for the dispatching entry point)."""
+    return _qe.nic_update(qmean, rate, alpha, esr, mode=mode,
+                          base_rtt_us=base_rtt_us, slot_us=slot_us,
+                          ecn_thresh=ecn_thresh,
+                          target_rtt_us=target_rtt_us,
+                          min_rate=min_rate, md=md, ai=ai,
+                          rtt_gain=rtt_gain, dcqcn_ai=dcqcn_ai,
+                          alpha_g=alpha_g, bp=bp, use_pallas=True,
+                          interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("br",))

@@ -12,6 +12,7 @@ uncongested planes — exactly the paper's hierarchy.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -73,7 +74,7 @@ def _plane_split_kernel(rate_ref, elig_ref, demand_ref, out_ref,
 def plane_split(rate: jax.Array, eligible: jax.Array, demand: jax.Array,
                 *, mode: str, min_rate: float = 0.0, bp: int = 256,
                 use_pallas: bool = False,
-                interpret: bool = False) -> jax.Array:
+                interpret: Optional[bool] = None) -> jax.Array:
     """Batched fluid plane split — the per-slot NIC hot path of the
     simulator.  `rate`/`eligible`: (F, P); `demand`: (F,).  Returns the
     (F, P) offered matrix.
@@ -82,8 +83,9 @@ def plane_split(rate: jax.Array, eligible: jax.Array, demand: jax.Array,
     `kernels.backend.pallas_enabled`) this is exactly
     `ref.plane_split_ref` — bit-identical to the engine's historical
     jnp math, which the x64 parity suite pins.  The Pallas path runs
-    float32 blocks of `bp` flows on the VPU."""
-    from . import ref
+    float32 blocks of `bp` flows on the VPU; `interpret=None` resolves
+    via `backend.pallas_interpret` (interpret everywhere but TPU)."""
+    from . import backend, ref
 
     if not use_pallas:
         return ref.plane_split_ref(rate, eligible, demand, mode=mode,
@@ -108,7 +110,7 @@ def plane_split(rate: jax.Array, eligible: jax.Array, demand: jax.Array,
         ],
         out_specs=pl.BlockSpec((bp, P), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rate.shape[0], P), jnp.float32),
-        interpret=interpret,
+        interpret=backend.pallas_interpret(interpret),
     )(rate.astype(jnp.float32), eligible.astype(jnp.float32),
       demand[:, None].astype(jnp.float32))
     return out[:F].astype(rate.dtype)
@@ -117,9 +119,11 @@ def plane_split(rate: jax.Array, eligible: jax.Array, demand: jax.Array,
 def plb_select(rate_allow: jax.Array, eligible: jax.Array,
                local_queue: jax.Array, tx_rate: jax.Array,
                pkt_hash: jax.Array, *, bp: int = 256,
-               interpret: bool = False) -> jax.Array:
+               interpret: Optional[bool] = None) -> jax.Array:
     """rate_allow/eligible/local_queue: (P,); tx_rate/pkt_hash: (N,).
     Returns (N,) int32 plane per packet."""
+    from . import backend
+
     (P,) = rate_allow.shape
     N = pkt_hash.shape[0]
     bp = min(bp, N)
@@ -142,8 +146,10 @@ def plb_select(rate_allow: jax.Array, eligible: jax.Array,
         ],
         out_specs=pl.BlockSpec((bp, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((pkt_hash.shape[0], 1), jnp.int32),
-        interpret=interpret,
-    )(rate_allow[None, :], eligible[None, :].astype(jnp.float32),
-      local_queue[None, :], tx_rate[:, None],
+        interpret=backend.pallas_interpret(interpret),
+    )(rate_allow[None, :].astype(jnp.float32),
+      eligible[None, :].astype(jnp.float32),
+      local_queue[None, :].astype(jnp.float32),
+      tx_rate[:, None].astype(jnp.float32),
       pkt_hash[:, None].astype(jnp.uint32))
     return out[:N, 0]

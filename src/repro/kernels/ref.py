@@ -127,6 +127,101 @@ def pair_score_softmax_ref(q, cap, w, *, nbins: int, temperature: float,
     return jnp.where(sums > 0, e / jnp.maximum(sums, 1e-30), 0.0)
 
 
+def bottleneck_ref(cap, load, *, eps: float = 1e-12) -> jax.Array:
+    """Per-link bottleneck scaling factor min(1, cap/load) — the fluid
+    fair-share clamp applied after every load accumulation.  Elementwise
+    and bit-identical to the engine's historical jnp math."""
+    return jnp.minimum(1.0, cap / jnp.maximum(load, eps))
+
+
+def bucket_sum_ref(g, *, ordered: bool = False) -> jax.Array:
+    """Sum the trailing bucket-width axis of a gathered (..., rows, C)
+    load plan.  `ordered=True` accumulates strictly left-to-right (flow
+    order) — float64 parity mode, where a last-ulp tree-reduction
+    difference vs NumPy's sequential `np.add.at` can walk a queue across
+    an ECN threshold and fork the trajectory; `ordered=False` takes the
+    fast tree reduction."""
+    if ordered:
+        return jax.lax.fori_loop(
+            1, g.shape[-1],
+            lambda c, acc: acc + jax.lax.dynamic_index_in_dim(
+                g, c, g.ndim - 1, keepdims=False),
+            g[..., 0])
+    return g.sum(-1)
+
+
+def load_bottleneck_ref(g, cap, *, eps: float = 1e-12,
+                        ordered: bool = False):
+    """Fused stage-A/stage-B load-accumulate + bottleneck: reduce a
+    gathered (P, rows, C) plan to per-link loads and their scale
+    factors.  Returns `(load, frac)`, both (P, rows)."""
+    load = bucket_sum_ref(g, ordered=ordered)
+    return load, bottleneck_ref(cap, load, eps=eps)
+
+
+def queue_update_ref(q, load, cap, *, q_cap: float, eps: float = 1e-12):
+    """Fluid queue integrator: one slot of (load - cap)/cap growth,
+    clipped to [0, q_cap], dead links (cap <= eps) pinned to empty.
+    Returns `(q_new, util)` with util = load/cap."""
+    q_new = jnp.clip(q + (load - cap) / jnp.maximum(cap, eps),
+                     0.0, q_cap)
+    q_new = jnp.where(cap <= eps, 0.0, q_new)
+    util = load / jnp.maximum(cap, eps)
+    return q_new, util
+
+
+def nic_update_ref(qmean, rate, alpha, esr, *, mode: str,
+                   base_rtt_us: float, slot_us: float, ecn_thresh: float,
+                   target_rtt_us: float, min_rate: float, md: float,
+                   ai: float, rtt_gain: float, dcqcn_ai: float,
+                   alpha_g: float):
+    """Fused per-slot NIC control update: queue-derived RTT/ECN signals
+    plus one step of the CC rate law for a static `mode`.  All inputs
+    (F, P) except `esr` (F, 1) bool — ESR's extra multiplicative cut,
+    only read by 'agg'.  Returns `(rtt, ecn, rate_new, alpha_new)`;
+    alpha passes through untouched except under 'dcqcn'.
+
+    mode:
+      'spx'   — per-plane AIMD with ECN-proportional cut and RTT trim
+                (also the swlb rate law; probe/eligibility bookkeeping
+                stays in the engine).
+      'dcqcn' — DCQCN: EWMA alpha, multiplicative cut on any-plane ECN.
+      'agg'   — one aggregate context across planes ('global'/'esr').
+    """
+    rtt = base_rtt_us + qmean * slot_us * 0.5
+    ecn = jnp.where(qmean > ecn_thresh,
+                    jnp.minimum(1.0, qmean / (4 * ecn_thresh)), 0.0)
+    if mode == "dcqcn":
+        ecn_any = ecn.max(-1, keepdims=True)
+        alpha_new = (1 - alpha_g) * alpha + alpha_g * (ecn_any > 0)
+        cut = rate * (1 - alpha_new / 2)
+        grow = jnp.minimum(rate + dcqcn_ai, 1.0)
+        new = jnp.clip(jnp.where(ecn_any > 0, cut, grow), min_rate, 1.0)
+        return rtt, ecn, new, alpha_new
+    if mode == "agg":
+        agg_ecn = ecn.max(-1, keepdims=True)
+        agg_rtt = rtt.max(-1, keepdims=True)
+        cut = rate * md
+        rtt_err = (agg_rtt - target_rtt_us) / target_rtt_us
+        trim = rate * (1 - rtt_gain * jnp.clip(rtt_err, 0, 2))
+        grow = jnp.minimum(rate + ai, 1.0)
+        new = jnp.where(agg_ecn > 0, cut,
+                        jnp.where(rtt_err > 0.25, trim, grow))
+        new = new * jnp.where(jnp.logical_and(esr, agg_ecn > 0),
+                              0.85, 1.0)
+        return rtt, ecn, jnp.clip(new, min_rate, 1.0), alpha
+    if mode != "spx":
+        raise ValueError(f"unknown nic-update mode {mode!r}")
+    rtt_err = (rtt - target_rtt_us) / target_rtt_us
+    cut = rate * (md + (1 - md) * jnp.clip(1 - ecn, 0, 1))
+    trim = rate * (1 - rtt_gain * jnp.clip(rtt_err, 0, 2))
+    grow = jnp.minimum(rate + ai, 1.0)
+    new = jnp.clip(
+        jnp.where(ecn > 0, cut, jnp.where(rtt_err > 0.25, trim, grow)),
+        min_rate, 1.0)
+    return rtt, ecn, new, alpha
+
+
 def int8_encode_ref(x, noise):
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=1, keepdims=True)
     scale = jnp.maximum(amax, 1e-12) / 127.0

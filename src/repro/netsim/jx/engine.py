@@ -29,18 +29,36 @@ branch functions:
     program, so a whole routing × nic × fault × seed grid runs as ONE
     compiled program (`megabatch.py` builds those batches).
 
-The per-slot select/aggregate hot paths (NIC plane split, quantized-JSQ
-spine scoring) dispatch through `repro.kernels.plb_select.plane_split`
-and `repro.kernels.jsq_route.pair_fractions`: a Pallas kernel on TPU, and
-on other backends a jnp fallback (`kernels/ref.py`) that is bit-identical
-to the historical engine math.
+The per-slot hot paths dispatch through the `repro.kernels` package —
+NIC plane split (`plb_select.plane_split`), quantized-JSQ spine scoring
+(`jsq_route.pair_fractions`), fused load-accumulate + bottleneck
+(`link_load.bucket_load_bottleneck` / `link_load.bottleneck`), and the
+fused queue/ECN/NIC control update (`queue_ecn.queue_update` /
+`queue_ecn.nic_update`): a Pallas kernel on TPU (or under
+`REPRO_NETSIM_PALLAS=1`, interpret mode off-TPU), and otherwise a jnp
+fallback (`kernels/ref.py`) that is bit-identical to the historical
+engine math.
+
+Flow aggregation has two modes (`JxConfig.agg_mode`): **dense** gathers
+flows into padded per-link bucket matrices (fast at registry shapes,
+but memory is bounded by `leaves² · planes`-sized plans), **sparse**
+accumulates with `segment_sum` keyed by (plane, link) so flow count
+bounds memory — the giga-scale path, selected automatically for large
+fabrics or forced with `REPRO_JX_AGG=dense|sparse`.  On XLA CPU f64 the
+sparse scatter applies updates in flow order, matching the NumPy
+engine's sequential `np.add.at` bit for bit.
 
 With x64 enabled the trajectory matches the NumPy backend within 1e-5
 (registry-wide parity is enforced by `tests/test_jx_parity.py`); without
-x64 it runs float32 — faster, looser tolerance.
+x64 it runs float32 — faster, looser tolerance (and
+`REPRO_JX_COMPACT=1` additionally shrinks the scan carry: int8 probe
+counters).
 """
 from __future__ import annotations
 
+import os
+import threading
+from contextlib import contextmanager
 from dataclasses import dataclass
 from functools import partial
 from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
@@ -51,7 +69,12 @@ import numpy as np
 
 from repro.kernels.backend import pallas_enabled
 from repro.kernels.jsq_route import pair_fractions as _k_pair_fractions
+from repro.kernels.link_load import (bottleneck as _k_bottleneck,
+                                     bucket_load_bottleneck,
+                                     segment_load)
 from repro.kernels.plb_select import plane_split as _k_plane_split
+from repro.kernels.queue_ecn import (nic_update as _k_nic_update,
+                                     queue_update as _k_queue_update)
 from repro.netsim.cc import (DCQCN_AI, DCQCN_ALPHA_G, MIN_RATE,
                              PROBE_TIMEOUT, SPX_AI, SPX_MD, SPX_RTT_GAIN,
                              TARGET_RTT_US)
@@ -69,6 +92,36 @@ _EPS = 1e-12
 # flipped on first dispatch; scenarios.runner consults it to decide
 # whether forking a process pool is still safe in this process
 _BACKEND_USED = False
+
+
+def _env_flag(name: str) -> Optional[bool]:
+    env = os.environ.get(name)
+    if env is None:
+        return None
+    return env.lower() in ("1", "true", "t", "yes", "y", "on")
+
+
+def agg_mode_default(n_hosts: int, n_leaves: int, n_paths: int,
+                     n_planes: int) -> str:
+    """Pick the flow-aggregation mode for a fabric shape.  Dense
+    gather-plan bucket sums win at registry shapes (XLA CPU gathers beat
+    scatters by ~10x), but their ECMP plans are `2·L²·paths·planes`
+    int32 rows per capacity segment — at giga-scale that term, not the
+    flow population, dominates memory.  `REPRO_JX_AGG=dense|sparse`
+    overrides."""
+    env = os.environ.get("REPRO_JX_AGG")
+    if env in ("dense", "sparse"):
+        return env
+    big = (n_hosts >= 4096 or
+           n_leaves * n_leaves * n_paths * n_planes > (1 << 22))
+    return "sparse" if big else "dense"
+
+
+def compact_carry_default() -> bool:
+    """`REPRO_JX_COMPACT=1` opts float32 runs into the shrunken scan
+    carry (int8 probe counters; x64 parity runs always keep wide
+    state)."""
+    return bool(_env_flag("REPRO_JX_COMPACT"))
 
 
 @dataclass(frozen=True)
@@ -104,6 +157,12 @@ class JxConfig:
     jsq_bins: int = JSQ_BINS
     q_cap: float = Q_CAP
     use_pallas: bool = False
+    # "dense": padded gather-plan bucket sums (registry shapes);
+    # "sparse": segment_sum keyed by (plane, link), so flow count — not
+    # leaves²·paths·planes — bounds memory (giga-scale shapes).
+    agg_mode: str = "dense"
+    # float32 runs only: int8 probe counters in the scan carry
+    compact_carry: bool = False
     # Participates in every jit-cache key / launch fingerprint, so the
     # default (disabled) spec leaves program identity — and the HLO —
     # exactly as if tracing did not exist.
@@ -149,6 +208,10 @@ class JxConfig:
             n_cores=topo.n_cores if fat else 1,
             core_cap=topo.core_cap if fat else 1.0,
             use_pallas=pallas_enabled(),
+            agg_mode=agg_mode_default(
+                topo.n_hosts, topo.n_leaves,
+                topo.n_cores if fat else topo.n_spines, topo.n_planes),
+            compact_carry=compact_carry_default(),
             trace=getattr(cfg, "trace", TraceSpec()))
 
 
@@ -205,9 +268,47 @@ def stack_idx_for(routing: str, nic: str) -> Tuple[int, bool, int, bool]:
 # dispatch bookkeeping: launches + (program-level) compiles
 # ---------------------------------------------------------------------------
 
+_STATS_LOCK = threading.RLock()
 _STATS = {"dispatches": 0, "compiles": 0}
 _SEEN_PROGRAMS: set = set()
 _JIT_CACHE: Dict[Tuple, Callable] = {}
+_COLLECTORS = threading.local()
+
+
+class DispatchCounter:
+    """Per-scope launch/compile counters (see `collect_dispatch`).
+    Incremented only under `_STATS_LOCK`; `snapshot()` returns a plain
+    dict in the `dispatch_stats` shape."""
+
+    __slots__ = ("dispatches", "compiles")
+
+    def __init__(self) -> None:
+        self.dispatches = 0
+        self.compiles = 0
+
+    def snapshot(self) -> Dict[str, int]:
+        with _STATS_LOCK:
+            return {"dispatches": self.dispatches,
+                    "compiles": self.compiles}
+
+
+@contextmanager
+def collect_dispatch():
+    """Attribute launches made by *this thread* inside the block to a
+    fresh `DispatchCounter`.  Unlike sampling the module-global
+    `dispatch_stats` before/after (which misattributes launches from
+    concurrent executors), a collector only sees its own thread's
+    dispatches.  Collectors nest: every active one on the thread counts
+    each launch."""
+    stack = getattr(_COLLECTORS, "stack", None)
+    if stack is None:
+        stack = _COLLECTORS.stack = []
+    counter = DispatchCounter()
+    stack.append(counter)
+    try:
+        yield counter
+    finally:
+        stack.remove(counter)
 
 
 def _device_fingerprint() -> Tuple:
@@ -218,30 +319,40 @@ def _device_fingerprint() -> Tuple:
 
 
 def _record_launch(tag: str, key, args) -> None:
-    _STATS["dispatches"] += 1
     shapes = tuple(
         (np.shape(leaf), str(getattr(leaf, "dtype", type(leaf))))
         for leaf in jax.tree_util.tree_leaves(args))
     fp = (tag, key, shapes, bool(jax.config.jax_enable_x64),
           _device_fingerprint())
-    if fp not in _SEEN_PROGRAMS:
-        _SEEN_PROGRAMS.add(fp)
-        _STATS["compiles"] += 1
+    with _STATS_LOCK:
+        _STATS["dispatches"] += 1
+        fresh = fp not in _SEEN_PROGRAMS
+        if fresh:
+            _SEEN_PROGRAMS.add(fp)
+            _STATS["compiles"] += 1
+        for counter in getattr(_COLLECTORS, "stack", ()):
+            counter.dispatches += 1
+            if fresh:
+                counter.compiles += 1
 
 
 def dispatch_stats() -> Dict[str, int]:
-    """Counters since the last reset: `dispatches` = device-program
-    launches, `compiles` = launches whose (program, shapes, devices)
-    fingerprint had not been seen before in this process."""
-    return dict(_STATS)
+    """Process-wide counters since the last reset: `dispatches` =
+    device-program launches, `compiles` = launches whose (program,
+    shapes, devices) fingerprint had not been seen before in this
+    process.  For attributing launches to one executor, prefer
+    `collect_dispatch` — these globals count every thread."""
+    with _STATS_LOCK:
+        return dict(_STATS)
 
 
 def reset_dispatch_stats() -> None:
     """Zero the counters.  The seen-program set is *not* cleared — it
     mirrors the lifetime of jax's own executable caches, so a warm
     re-run correctly reports 0 compiles."""
-    _STATS["dispatches"] = 0
-    _STATS["compiles"] = 0
+    with _STATS_LOCK:
+        _STATS["dispatches"] = 0
+        _STATS["compiles"] = 0
 
 
 # ---------------------------------------------------------------------------
@@ -269,7 +380,10 @@ def _plane_split(cfg: JxConfig, nic: NicCarry, demand: jnp.ndarray,
 def _probe_common(cfg: JxConfig, nic: NicCarry, probe_ok: jnp.ndarray
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     miss = ~probe_ok
-    probe_miss = jnp.where(miss, nic.probe_miss + 1, 0)
+    # saturate at the timeout: `dead` is unchanged (>= comparison) and
+    # the counter stays in int8 range under the compact carry
+    bump = jnp.minimum(nic.probe_miss + 1, cfg.probe_timeout)
+    probe_miss = jnp.where(miss, bump, 0).astype(nic.probe_miss.dtype)
     dead = probe_miss >= cfg.probe_timeout
     return probe_miss, dead
 
@@ -304,76 +418,66 @@ def _probe_swlb(cfg: JxConfig, nic: NicCarry, rate: jnp.ndarray,
                     eligible=eligible, pending_fail=pending)
 
 
-def _upd_dcqcn(cfg: JxConfig, nic: NicCarry, rtt, ecn, probe_ok,
-               slot) -> NicCarry:
-    ecn_any = ecn.max(1, keepdims=True)
-    alpha = ((1 - DCQCN_ALPHA_G) * nic.alpha +
-             DCQCN_ALPHA_G * (ecn_any > 0))
-    cut = nic.rate * (1 - alpha / 2)
-    grow = jnp.minimum(nic.rate + DCQCN_AI, 1.0)
-    rate = jnp.clip(jnp.where(ecn_any > 0, cut, grow), MIN_RATE, 1.0)
-    return nic._replace(rate=rate, alpha=alpha)
+def _upd_rate(cfg: JxConfig, mode: str, nic: NicCarry, qmean, esr):
+    """RTT/ECN derivation + one fused CC rate branch, dispatched through
+    `kernels.queue_ecn.nic_update` (Pallas on TPU, bit-exact jnp ref
+    otherwise).  Returns `(rtt, ecn, rate, alpha)`."""
+    return _k_nic_update(
+        qmean, nic.rate, nic.alpha, esr, mode=mode,
+        base_rtt_us=cfg.base_rtt_us, slot_us=cfg.slot_us,
+        ecn_thresh=cfg.ecn_queue_thresh,
+        target_rtt_us=cfg.target_rtt_us, min_rate=MIN_RATE, md=SPX_MD,
+        ai=SPX_AI, rtt_gain=SPX_RTT_GAIN, dcqcn_ai=DCQCN_AI,
+        alpha_g=DCQCN_ALPHA_G, use_pallas=cfg.use_pallas)
 
 
-def _upd_agg(cfg: JxConfig, nic: NicCarry, rtt, ecn, probe_ok, slot,
-             is_esr) -> NicCarry:
-    """'global'/'esr': one aggregate CC context across planes.  `is_esr`
-    is a Python bool on the static path, a traced bool under switch —
-    the ×1.0 non-ESR multiply is exact either way."""
-    agg_ecn = ecn.max(1, keepdims=True)
-    agg_rtt = rtt.max(1, keepdims=True)
-    cut = nic.rate * SPX_MD
-    rtt_err = (agg_rtt - cfg.target_rtt_us) / cfg.target_rtt_us
-    trim = nic.rate * (1 - SPX_RTT_GAIN * jnp.clip(rtt_err, 0, 2))
-    grow = jnp.minimum(nic.rate + SPX_AI, 1.0)
-    new = jnp.where(agg_ecn > 0, cut,
-                    jnp.where(rtt_err > 0.25, trim, grow))
-    new = new * jnp.where(jnp.logical_and(is_esr, agg_ecn > 0), 0.85, 1.0)
-    rate = jnp.clip(new, MIN_RATE, 1.0)
-    return _probe_basic(cfg, nic, rate, probe_ok, slot)
+def _upd_dcqcn(cfg, nic, qmean, probe_ok, slot, esr):
+    rtt, ecn, rate, alpha = _upd_rate(cfg, "dcqcn", nic, qmean, esr)
+    return nic._replace(rate=rate, alpha=alpha), rtt, ecn
 
 
-def _upd_perplane_rate(cfg: JxConfig, nic: NicCarry, rtt,
-                       ecn) -> jnp.ndarray:
-    """spx/swlb shared per-plane AIMD rate math."""
-    rtt_err = (rtt - cfg.target_rtt_us) / cfg.target_rtt_us
-    cut = nic.rate * (SPX_MD + (1 - SPX_MD) * jnp.clip(1 - ecn, 0, 1))
-    trim = nic.rate * (1 - SPX_RTT_GAIN * jnp.clip(rtt_err, 0, 2))
-    grow = jnp.minimum(nic.rate + SPX_AI, 1.0)
-    return jnp.clip(
-        jnp.where(ecn > 0, cut, jnp.where(rtt_err > 0.25, trim, grow)),
-        MIN_RATE, 1.0)
+def _upd_agg(cfg, nic, qmean, probe_ok, slot, esr):
+    """'global'/'esr': one aggregate CC context across planes.  ESR's
+    extra multiplicative cut rides the kernel's `esr` operand — a ×1.0
+    multiply for non-ESR flows, which is bit-exact."""
+    rtt, ecn, rate, _ = _upd_rate(cfg, "agg", nic, qmean, esr)
+    return _probe_basic(cfg, nic, rate, probe_ok, slot), rtt, ecn
 
 
-def _upd_spx(cfg, nic, rtt, ecn, probe_ok, slot) -> NicCarry:
-    return _probe_basic(cfg, nic, _upd_perplane_rate(cfg, nic, rtt, ecn),
-                        probe_ok, slot)
+def _upd_spx(cfg, nic, qmean, probe_ok, slot, esr):
+    rtt, ecn, rate, _ = _upd_rate(cfg, "spx", nic, qmean, esr)
+    return _probe_basic(cfg, nic, rate, probe_ok, slot), rtt, ecn
 
 
-def _upd_swlb(cfg, nic, rtt, ecn, probe_ok, slot) -> NicCarry:
-    return _probe_swlb(cfg, nic, _upd_perplane_rate(cfg, nic, rtt, ecn),
-                       probe_ok, slot)
+def _upd_swlb(cfg, nic, qmean, probe_ok, slot, esr):
+    # swlb shares spx's per-plane AIMD law; only the probe path differs
+    rtt, ecn, rate, _ = _upd_rate(cfg, "spx", nic, qmean, esr)
+    return _probe_swlb(cfg, nic, rate, probe_ok, slot), rtt, ecn
 
 
-def _nic_update(cfg: JxConfig, nic: NicCarry, rtt: jnp.ndarray,
-                ecn: jnp.ndarray, probe_ok: jnp.ndarray,
-                slot: jnp.ndarray,
-                stack: Optional[StackIdx] = None) -> NicCarry:
+def _nic_update(cfg: JxConfig, nic: NicCarry, qmean: jnp.ndarray,
+                probe_ok: jnp.ndarray, slot: jnp.ndarray,
+                stack: Optional[StackIdx] = None
+                ) -> Tuple[NicCarry, jnp.ndarray, jnp.ndarray]:
+    """NIC control update (pre-stall rates, as in `run_sim`), fused with
+    the rtt/ecn derivation from the per-flow mean queue.  Returns the
+    new carry plus rtt/ecn (for the queue-delay estimate and trace)."""
+    F = qmean.shape[0]
     if stack is None:
+        esr = jnp.full((F, 1), cfg.nic == "esr")
         if cfg.nic == "dcqcn":
-            return _upd_dcqcn(cfg, nic, rtt, ecn, probe_ok, slot)
+            return _upd_dcqcn(cfg, nic, qmean, probe_ok, slot, esr)
         if cfg.nic in ("global", "esr"):
-            return _upd_agg(cfg, nic, rtt, ecn, probe_ok, slot,
-                            is_esr=cfg.nic == "esr")
+            return _upd_agg(cfg, nic, qmean, probe_ok, slot, esr)
         if cfg.nic == "swlb":
-            return _upd_swlb(cfg, nic, rtt, ecn, probe_ok, slot)
-        return _upd_spx(cfg, nic, rtt, ecn, probe_ok, slot)
+            return _upd_swlb(cfg, nic, qmean, probe_ok, slot, esr)
+        return _upd_spx(cfg, nic, qmean, probe_ok, slot, esr)
+    esr = jnp.broadcast_to(jnp.reshape(stack.is_esr, (1, 1)), (F, 1))
     return jax.lax.switch(stack.nic, [
-        partial(_upd_spx, cfg, nic, rtt, ecn, probe_ok, slot),
-        partial(_upd_dcqcn, cfg, nic, rtt, ecn, probe_ok, slot),
-        partial(_upd_agg, cfg, nic, rtt, ecn, probe_ok, slot,
-                stack.is_esr),
-        partial(_upd_swlb, cfg, nic, rtt, ecn, probe_ok, slot),
+        partial(_upd_spx, cfg, nic, qmean, probe_ok, slot, esr),
+        partial(_upd_dcqcn, cfg, nic, qmean, probe_ok, slot, esr),
+        partial(_upd_agg, cfg, nic, qmean, probe_ok, slot, esr),
+        partial(_upd_swlb, cfg, nic, qmean, probe_ok, slot, esr),
     ])
 
 
@@ -399,8 +503,10 @@ def _pair_fractions(cfg: JxConfig, q_up: jnp.ndarray, q_down: jnp.ndarray,
 
 
 def _bottleneck(cfg: JxConfig, up, down, load_up, load_down):
-    f_up = jnp.minimum(1.0, up / jnp.maximum(load_up, _EPS))
-    f_down = jnp.minimum(1.0, down / jnp.maximum(load_down, _EPS))
+    f_up = _k_bottleneck(up, load_up, eps=_EPS,
+                         use_pallas=cfg.use_pallas)
+    f_down = _k_bottleneck(down, load_down, eps=_EPS,
+                           use_pallas=cfg.use_pallas)
     return f_up, f_down
 
 
@@ -456,6 +562,31 @@ def _seg_sum(vals: jnp.ndarray, perm: jnp.ndarray) -> jnp.ndarray:
     return pad[perm].sum(1)
 
 
+def _host_sum(cfg: JxConfig, vals: jnp.ndarray, idx: jnp.ndarray,
+              perm: jnp.ndarray) -> jnp.ndarray:
+    """(F, P) per-flow values summed into (H, P) per-host buckets:
+    gather-plan sum (dense) or a (host, plane)-keyed `segment_load`
+    (sparse — the row-major flatten scatters in flow order, so XLA CPU
+    f64 stays bit-equal to the NumPy engine's `np.add.at`)."""
+    if cfg.agg_mode != "sparse":
+        return _seg_sum(vals, perm)
+    P = vals.shape[1]
+    keys = idx[:, None] * P + jnp.arange(P)[None, :]
+    return segment_load(vals, keys, cfg.n_hosts * P).reshape(
+        cfg.n_hosts, P)
+
+
+def _pair_rate_sum(cfg: JxConfig, fabric_rate: jnp.ndarray,
+                   pair_idx: jnp.ndarray,
+                   aggs: "_AggPerms") -> jnp.ndarray:
+    """(P, L, L) offered rate summed by (src-leaf, dst-leaf) pair."""
+    P, L = cfg.n_planes, cfg.n_leaves
+    if cfg.agg_mode != "sparse":
+        return _seg_sum(fabric_rate, aggs.pair).T.reshape(P, L, L)
+    keys = jnp.arange(P)[None, :] * (L * L) + pair_idx[:, None]
+    return segment_load(fabric_rate, keys, P * L * L).reshape(P, L, L)
+
+
 def _route_pair(cfg: JxConfig, carry: SimCarry, fabric_rate: jnp.ndarray,
                 up: jnp.ndarray, down: jnp.ndarray, aggs: _AggPerms,
                 pair_idx: jnp.ndarray, use_war):
@@ -470,7 +601,7 @@ def _route_pair(cfg: JxConfig, carry: SimCarry, fabric_rate: jnp.ndarray,
     else:
         rw = jnp.where(use_war, rw_arr, jnp.ones_like(down))
     pair = _pair_fractions(cfg, carry.q_up, carry.q_down, up, down, rw)
-    rate_pair = _seg_sum(fabric_rate, aggs.pair).T.reshape(P, L, L)
+    rate_pair = _pair_rate_sum(cfg, fabric_rate, pair_idx, aggs)
     load_up = jnp.einsum("plm,plms->pls", rate_pair, pair)
     load_down = jnp.einsum("plm,plms->psm", rate_pair, pair)
     f_up, f_down = _bottleneck(cfg, up, down, load_up, load_down)
@@ -498,14 +629,28 @@ def _route_ecmp(cfg: JxConfig, carry: SimCarry, fabric_rate: jnp.ndarray,
     P, L, S = cfg.n_planes, cfg.n_leaves, cfg.n_spines
     assign = assign_segments[seg]                         # (F, P)
     p_iota = jnp.arange(P)[None, :].repeat(fabric_rate.shape[0], 0)
-    padT = jnp.concatenate(
-        [fabric_rate, jnp.zeros((1, P), fabric_rate.dtype)], 0).T
-    pidx = jnp.arange(P)[:, None, None]
-    g = padT[pidx, load_fn(seg)]                          # (P, LS+SL, C)
-    loads = _ordered_bucket_sum(g)
-    load_up = loads[:, :L * S].reshape(P, L, S)
-    load_down = loads[:, L * S:].reshape(P, S, L)
-    f_up, f_down = _bottleneck(cfg, up, down, load_up, load_down)
+    if cfg.agg_mode == "sparse":
+        pk = jnp.arange(P)[None, :]
+        k_up = pk * (L * S) + fb.src_leaf[:, None] * S + assign
+        k_dn = pk * (S * L) + assign * L + fb.dst_leaf[:, None]
+        load_up = segment_load(fabric_rate, k_up,
+                               P * L * S).reshape(P, L, S)
+        load_down = segment_load(fabric_rate, k_dn,
+                                 P * S * L).reshape(P, S, L)
+        f_up, f_down = _bottleneck(cfg, up, down, load_up, load_down)
+    else:
+        padT = jnp.concatenate(
+            [fabric_rate, jnp.zeros((1, P), fabric_rate.dtype)], 0).T
+        pidx = jnp.arange(P)[:, None, None]
+        g = padT[pidx, load_fn(seg)]                      # (P, LS+SL, C)
+        cap = jnp.concatenate(
+            [up.reshape(P, L * S), down.reshape(P, S * L)], 1)
+        loads, fracs = bucket_load_bottleneck(
+            g, cap, eps=_EPS, use_pallas=cfg.use_pallas)
+        load_up = loads[:, :L * S].reshape(P, L, S)
+        load_down = loads[:, L * S:].reshape(P, S, L)
+        f_up = fracs[:, :L * S].reshape(P, L, S)
+        f_down = fracs[:, L * S:].reshape(P, S, L)
     scale_f = jnp.minimum(
         f_up[p_iota, fb.src_leaf[:, None], assign],
         f_down[p_iota, assign, fb.dst_leaf[:, None]])
@@ -561,7 +706,7 @@ def _route_pair_ft(cfg: JxConfig, carry: SimCarry,
     pair = _k_pair_fractions(q, cap, w, nbins=cfg.jsq_bins,
                              temperature=cfg.ar_temperature, qmax=8.0,
                              use_pallas=cfg.use_pallas)
-    rate_pair = _seg_sum(fabric_rate, aggs.pair).T.reshape(P, L, L)
+    rate_pair = _pair_rate_sum(cfg, fabric_rate, pair_idx, aggs)
     loadJ_up = jnp.einsum("plm,plmj->plj", rate_pair, pair)
     loadJ_dn = jnp.einsum("plm,plmj->pmj", rate_pair, pair)
     loadA_up = loadJ_up.reshape(P, L, A, cpa).sum(-1)     # (P, L, A)
@@ -604,19 +749,46 @@ def _route_ecmp_ft(cfg: JxConfig, carry: SimCarry,
     pod_d = fb.dst_leaf // lpp
     cross = (pod_s != pod_d)[:, None]                     # (F, 1)
     p_iota = jnp.arange(P)[None, :].repeat(fabric_rate.shape[0], 0)
-    padT = jnp.concatenate(
-        [fabric_rate, jnp.zeros((1, P), fabric_rate.dtype)], 0).T
-    pidx = jnp.arange(P)[:, None, None]
-    g = padT[pidx, load_fn(seg)]            # (P, LA+AL+2*pods*J, C)
-    loads = _ordered_bucket_sum(g)
-    o1, o2 = L * A, L * A + A * L
-    o3 = o2 + pods * J
-    loadA_up = loads[:, :o1].reshape(P, L, A)
-    loadA_dn = loads[:, o1:o2].reshape(P, A, L)
-    loadB_up = loads[:, o2:o3].reshape(P, pods, J)
-    loadB_dn = loads[:, o3:].reshape(P, pods, J)
-    fA_up, fA_dn = _bottleneck(cfg, up, down, loadA_up, loadA_dn)
-    fB_up, fB_dn = _bottleneck(cfg, up2, down2, loadB_up, loadB_dn)
+    if cfg.agg_mode == "sparse":
+        pk = jnp.arange(P)[None, :]
+        kAu = pk * (L * A) + fb.src_leaf[:, None] * A + a_of
+        kAd = pk * (A * L) + a_of * L + fb.dst_leaf[:, None]
+        kBu = pk * (pods * J) + pod_s[:, None] * J + assign
+        kBd = pk * (pods * J) + pod_d[:, None] * J + assign
+        # intra-pod flows add exact 0.0 to the stage-B buckets — the
+        # NumPy engine does the same, so this is bit-equivalent to the
+        # dense plan's masked exclusion
+        vB = jnp.where(cross, fabric_rate, 0.0)
+        loadA_up = segment_load(fabric_rate, kAu,
+                                P * L * A).reshape(P, L, A)
+        loadA_dn = segment_load(fabric_rate, kAd,
+                                P * A * L).reshape(P, A, L)
+        loadB_up = segment_load(vB, kBu,
+                                P * pods * J).reshape(P, pods, J)
+        loadB_dn = segment_load(vB, kBd,
+                                P * pods * J).reshape(P, pods, J)
+        fA_up, fA_dn = _bottleneck(cfg, up, down, loadA_up, loadA_dn)
+        fB_up, fB_dn = _bottleneck(cfg, up2, down2, loadB_up, loadB_dn)
+    else:
+        padT = jnp.concatenate(
+            [fabric_rate, jnp.zeros((1, P), fabric_rate.dtype)], 0).T
+        pidx = jnp.arange(P)[:, None, None]
+        g = padT[pidx, load_fn(seg)]        # (P, LA+AL+2*pods*J, C)
+        o1, o2 = L * A, L * A + A * L
+        o3 = o2 + pods * J
+        cap = jnp.concatenate(
+            [up.reshape(P, o1), down.reshape(P, o2 - o1),
+             up2.reshape(P, pods * J), down2.reshape(P, pods * J)], 1)
+        loads, fracs = bucket_load_bottleneck(
+            g, cap, eps=_EPS, use_pallas=cfg.use_pallas)
+        loadA_up = loads[:, :o1].reshape(P, L, A)
+        loadA_dn = loads[:, o1:o2].reshape(P, A, L)
+        loadB_up = loads[:, o2:o3].reshape(P, pods, J)
+        loadB_dn = loads[:, o3:].reshape(P, pods, J)
+        fA_up = fracs[:, :o1].reshape(P, L, A)
+        fA_dn = fracs[:, o1:o2].reshape(P, A, L)
+        fB_up = fracs[:, o2:o3].reshape(P, pods, J)
+        fB_dn = fracs[:, o3:].reshape(P, pods, J)
     sA = jnp.minimum(fA_up[p_iota, fb.src_leaf[:, None], a_of],
                      fA_dn[p_iota, a_of, fb.dst_leaf[:, None]])
     sB = jnp.minimum(fB_up[p_iota, pod_s[:, None], assign],
@@ -629,20 +801,6 @@ def _route_ecmp_ft(cfg: JxConfig, carry: SimCarry,
           carry.q2_down[p_iota, pod_d[:, None], assign])
     qmean = qA + jnp.where(cross, qB, 0.0)
     return loadA_up, loadA_dn, loadB_up, loadB_dn, through, qmean
-
-
-def _ordered_bucket_sum(g: jnp.ndarray) -> jnp.ndarray:
-    """Sum the trailing bucket-width axis of a gathered (P, rows, C)
-    plan.  Float64 (parity mode) accumulates strictly left-to-right in
-    flow order — see `_AggPerms` — float32 takes the fast tree
-    reduction."""
-    if g.dtype == jnp.float64:
-        return jax.lax.fori_loop(
-            1, g.shape[2],
-            lambda c, acc: acc + jax.lax.dynamic_index_in_dim(
-                g, c, 2, keepdims=False),
-            g[:, :, 0])
-    return g.sum(-1)
 
 
 def _slot_step(cfg: JxConfig, fb: FlowBatch, pair_idx: jnp.ndarray,
@@ -700,13 +858,15 @@ def _slot_step(cfg: JxConfig, fb: FlowBatch, pair_idx: jnp.ndarray,
     else:
         load_up, load_down, through, qmean = routed
 
-    load_acc_tx = _seg_sum(offered, aggs.src)             # (H, P)
-    load_acc_rx = _seg_sum(offered, aggs.dst)
+    load_acc_tx = _host_sum(cfg, offered, fb.src, aggs.src)  # (H, P)
+    load_acc_rx = _host_sum(cfg, offered, fb.dst, aggs.dst)
 
     # ---- bottleneck scaling (access; fabric scaling lives in the
     # routing branches) ----
-    f_acc_tx = jnp.minimum(1.0, acc / jnp.maximum(load_acc_tx, _EPS))
-    f_acc_rx = jnp.minimum(1.0, acc / jnp.maximum(load_acc_rx, _EPS))
+    f_acc_tx = _k_bottleneck(acc, load_acc_tx, eps=_EPS,
+                             use_pallas=cfg.use_pallas)
+    f_acc_rx = _k_bottleneck(acc, load_acc_rx, eps=_EPS,
+                             use_pallas=cfg.use_pallas)
     up_alive_tx = acc[fb.src] > _EPS                      # (F, P)
     up_alive_rx = acc[fb.dst] > _EPS
 
@@ -715,34 +875,31 @@ def _slot_step(cfg: JxConfig, fb: FlowBatch, pair_idx: jnp.ndarray,
     achieved_pp = (through + local) * acc_scale
     achieved_pp = jnp.where(up_alive_tx & up_alive_rx, achieved_pp, 0.0)
     qmean = jnp.where(fb.same_leaf[:, None], 0.0, qmean)
-    rtt = cfg.base_rtt_us + qmean * cfg.slot_us * 0.5
-    ecn = jnp.where(qmean > cfg.ecn_queue_thresh,
-                    jnp.minimum(1.0, qmean / (4 * cfg.ecn_queue_thresh)),
-                    0.0)
 
     # ---- queue evolution (stage B only exists on fat_tree; the kind
     # is static, so leaf_spine programs carry the placeholders through
     # untouched) ----
-    q_up = jnp.clip(carry.q_up + (load_up - up) / jnp.maximum(up, _EPS),
-                    0.0, cfg.q_cap)
-    q_up = jnp.where(up <= _EPS, 0.0, q_up)
-    q_down = jnp.clip(carry.q_down + (load_down - down) /
-                      jnp.maximum(down, _EPS), 0.0, cfg.q_cap)
-    q_down = jnp.where(down <= _EPS, 0.0, q_down)
+    q_up, util = _k_queue_update(carry.q_up, load_up, up,
+                                 q_cap=cfg.q_cap, eps=_EPS,
+                                 use_pallas=cfg.use_pallas)
+    q_down, _ = _k_queue_update(carry.q_down, load_down, down,
+                                q_cap=cfg.q_cap, eps=_EPS,
+                                use_pallas=cfg.use_pallas)
     if cfg.kind == "fat_tree":
-        q2_up = jnp.clip(carry.q2_up + (loadB_up - up2) /
-                         jnp.maximum(up2, _EPS), 0.0, cfg.q_cap)
-        q2_up = jnp.where(up2 <= _EPS, 0.0, q2_up)
-        q2_down = jnp.clip(carry.q2_down + (loadB_dn - down2) /
-                           jnp.maximum(down2, _EPS), 0.0, cfg.q_cap)
-        q2_down = jnp.where(down2 <= _EPS, 0.0, q2_down)
+        q2_up, _ = _k_queue_update(carry.q2_up, loadB_up, up2,
+                                   q_cap=cfg.q_cap, eps=_EPS,
+                                   use_pallas=cfg.use_pallas)
+        q2_down, _ = _k_queue_update(carry.q2_down, loadB_dn, down2,
+                                     q_cap=cfg.q_cap, eps=_EPS,
+                                     use_pallas=cfg.use_pallas)
     else:
         q2_up, q2_down = carry.q2_up, carry.q2_down
-    util = load_up / jnp.maximum(up, _EPS)
 
-    # ---- NIC control update (pre-stall rates, as in run_sim) ----
+    # ---- NIC control update (pre-stall rates, as in run_sim; rtt/ecn
+    # derive from qmean inside the fused kernel) ----
     probe_ok = (acc[fb.src] > _EPS) & (acc[fb.dst] > _EPS)
-    nic = _nic_update(cfg, carry.nic, rtt, ecn, probe_ok, t, stack)
+    nic, rtt, ecn = _nic_update(cfg, carry.nic, qmean, probe_ok, t,
+                                stack)
 
     # ---- packet-loss stall + completion ----
     stalled = ((offered > 1e-9) & (achieved_pp <= 1e-9)).any(1)
@@ -780,8 +937,9 @@ def _slot_step(cfg: JxConfig, fb: FlowBatch, pair_idx: jnp.ndarray,
     # zero, so their host_bw contribution is exactly zero and the
     # megabatch finalizer only strips the flow-axis fields.
     sig = {
-        "host_bw": lambda: _seg_sum(
-            jnp.where(stalled[:, None], 0.0, achieved_pp), aggs.src),
+        "host_bw": lambda: _host_sum(
+            cfg, jnp.where(stalled[:, None], 0.0, achieved_pp), fb.src,
+            aggs.src),
         "util": lambda: util,
         "queue": lambda: q_up,
         "ecn": lambda: ecn,
@@ -918,18 +1076,52 @@ def _jitted_mb(cfg: JxConfig, n_shards: int = 1,
 # entry points
 # ---------------------------------------------------------------------------
 
+_F32_WARNED: set = set()
+_F32_OVERFLOWS: List[Dict] = []
+
+
+def strict_f32() -> bool:
+    """`REPRO_JX_STRICT_F32=1` turns the float32 bytes_total overflow
+    warning into a hard error."""
+    return bool(_env_flag("REPRO_JX_STRICT_F32"))
+
+
+def f32_overflow_log() -> Tuple[Dict, ...]:
+    """Every float32 bytes_total overflow condition seen this process,
+    in detection order — `{"spec": name, "max_bytes": float}` each.
+    Executors slice this by length to attach the overflows of one run
+    to its flight record."""
+    with _STATS_LOCK:
+        return tuple(dict(d) for d in _F32_OVERFLOWS)
+
+
 def _warn_f32_bytes(name: str, fa: FlowArrays, stacklevel: int = 3
                     ) -> None:
-    if not jax.config.jax_enable_x64:
-        finite = fa.bytes_total[np.isfinite(fa.bytes_total)]
-        if finite.size and finite.max() > 2 ** 24:
-            import warnings
-            warnings.warn(
-                f"{name}: bytes_total up to {finite.max():.3g} "
-                "exceeds float32 integer resolution (2^24); remaining-"
-                "bytes tracking will stall and transfers may never "
-                "complete — enable x64 (JAX_ENABLE_X64=1) or rescale "
-                "bytes_total", stacklevel=stacklevel)
+    if jax.config.jax_enable_x64:
+        return
+    finite = fa.bytes_total[np.isfinite(fa.bytes_total)]
+    if not (finite.size and finite.max() > 2 ** 24):
+        return
+    msg = (f"{name}: bytes_total up to {finite.max():.3g} "
+           "exceeds float32 integer resolution (2^24); remaining-"
+           "bytes tracking will stall and transfers may never "
+           "complete — enable x64 (JAX_ENABLE_X64=1) or rescale "
+           "bytes_total")
+    with _STATS_LOCK:
+        _F32_OVERFLOWS.append(
+            {"spec": name, "max_bytes": float(finite.max())})
+        first = name not in _F32_WARNED
+        _F32_WARNED.add(name)
+    if strict_f32():
+        raise ValueError(msg)
+    if first:
+        # stdlib warnings dedup by (message, category, module, lineno) —
+        # i.e. by *call site* — so a second spec tripping the same
+        # condition would be silently swallowed under the default
+        # filter.  Dedup per spec name ourselves and always register
+        # the condition in `f32_overflow_log` above.
+        import warnings
+        warnings.warn(msg, stacklevel=stacklevel)
 
 
 def _prepared(compiled) -> Tuple[JxConfig, FlowArrays, FaultTimeline]:
@@ -1023,6 +1215,12 @@ def _agg_widths(cfg: JxConfig, fa: FlowArrays,
                 assign: np.ndarray) -> Tuple[int, ...]:
     """Max bucket sizes for each aggregation axis (shared across a batch
     so the padded perm matrices stack)."""
+    if cfg.agg_mode == "sparse":
+        # sparse aggregation never materializes the gather plans, so
+        # their widths are irrelevant (and the bincount sweep over every
+        # (segment, plane) column would dominate prep time at scale)
+        return (1, 1, 1, 1)
+
     def w(keys, n, mask=None):
         if mask is not None:
             keys = keys[mask]
@@ -1079,6 +1277,13 @@ def _aggs_for(cfg: JxConfig, fa: FlowArrays, assign: np.ndarray,
     ws, wd, wp, wu = widths
     H, L, P = cfg.n_hosts, cfg.n_leaves, cfg.n_planes
     F = len(fa) if pad is None else pad
+    if cfg.agg_mode == "sparse":
+        # sparse mode aggregates by (plane, link) keys computed from the
+        # flow batch inside the traced program; the gather plans are
+        # never indexed, so ship inert minimal placeholders
+        z = np.zeros((1, 1), np.int32)
+        return _AggPerms(src=z, dst=z, pair=z,
+                         ecmp_load=np.zeros((1, P, 1, 1), np.int32))
     if cfg.routing == "ecmp":
         load = _ecmp_load_plan(cfg, fa, assign, wu, F)
     else:

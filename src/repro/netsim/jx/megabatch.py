@@ -175,7 +175,7 @@ def _carry0(B: int, F_b: int, cfg: JxConfig,
             remaining: np.ndarray) -> engine.SimCarry:
     """Batched initial scan carry (the donated argument), mirroring
     `state.init_carry`'s dtypes under the active x64 setting."""
-    from .state import NicCarry, SimCarry, stage_shapes
+    from .state import NicCarry, SimCarry, probe_miss_dtype, stage_shapes
     x64 = bool(jax.config.jax_enable_x64)
     fdt = np.float64 if x64 else np.float32
     idt = np.int64 if x64 else np.int32
@@ -183,7 +183,8 @@ def _carry0(B: int, F_b: int, cfg: JxConfig,
     nic = NicCarry(
         rate=np.ones((B, F_b, P), fdt),
         alpha=np.zeros((B, F_b, P), fdt),
-        probe_miss=np.zeros((B, F_b, P), idt),
+        probe_miss=np.zeros((B, F_b, P),
+                            np.dtype(probe_miss_dtype(cfg, fdt))),
         eligible=np.ones((B, F_b, P), bool),
         pending_fail=np.zeros((B, F_b, P), idt))
     return SimCarry(
@@ -218,10 +219,14 @@ def _dispatch_group(cfg: JxConfig, pts: List[_Point], caches: Dict):
                    map(max, zip(*(p.widths for p in pts))))
     wu = widths[3]
     P = cfg.n_planes
+    sparse = cfg.agg_mode == "sparse"
 
     # deduplicated ECMP plan table; uid 0 = the inert all-pad plan that
-    # pair-routed elements point at (its gathers read the zero row)
+    # pair-routed elements point at (its gathers read the zero row).
+    # Sparse groups never gather a plan, so the table shrinks to one
+    # inert cell.
     rows: List[np.ndarray] = [
+        np.zeros((1, P, 1, 1), np.int32) if sparse else
         np.full((seg_b, P, engine._plan_rows(cfg), wu), F_b, np.int32)]
     row_uid: Dict[Tuple, int] = {}
     zero_assign = np.zeros((seg_b, F_b, P), np.int32)
@@ -240,12 +245,13 @@ def _dispatch_group(cfg: JxConfig, pts: List[_Point], caches: Dict):
         uid = 0
         assign = zero_assign
         if p.routing == "ecmp":
-            tkey = (p.assign_key, seg_b, wu, F_b)
-            uid = row_uid.get(tkey)
-            if uid is None:
-                uid = row_uid[tkey] = len(rows)
-                rows.append(_ecmp_plan(cfg, p.fa, p.assign, wu, F_b,
-                                       seg_b))
+            if not sparse:
+                tkey = (p.assign_key, seg_b, wu, F_b)
+                uid = row_uid.get(tkey)
+                if uid is None:
+                    uid = row_uid[tkey] = len(rows)
+                    rows.append(_ecmp_plan(cfg, p.fa, p.assign, wu, F_b,
+                                           seg_b))
             assign = _pad_segs(p.assign, seg_b)
             if len(p.fa) < F_b:
                 assign = np.concatenate(

@@ -91,6 +91,17 @@ def stage_shapes(cfg) -> Tuple[Tuple[int, int, int], Tuple[int, int, int]]:
     return (P, L, cfg.n_spines), (P, 1, 1)
 
 
+def probe_miss_dtype(cfg, float_dtype) -> jnp.dtype:
+    """int8 under the compact carry (float32 runs only — the probe
+    counter saturates at `probe_timeout`, far inside int8 range); the
+    default integer width otherwise.  Shared by `init_carry` and the
+    megabatch host-side carry builder."""
+    if (getattr(cfg, "compact_carry", False)
+            and jnp.dtype(float_dtype) == jnp.float32):
+        return jnp.dtype(jnp.int8)
+    return jnp.asarray(np.int64(0)).dtype
+
+
 def init_carry(fb: FlowBatch, cfg) -> SimCarry:
     F = fb.src.shape[0]
     (P, L, U), b_shape = stage_shapes(cfg)
@@ -99,7 +110,7 @@ def init_carry(fb: FlowBatch, cfg) -> SimCarry:
     nic = NicCarry(
         rate=jnp.ones((F, P), dtype),
         alpha=jnp.zeros((F, P), dtype),
-        probe_miss=jnp.zeros((F, P), itype),
+        probe_miss=jnp.zeros((F, P), probe_miss_dtype(cfg, dtype)),
         eligible=jnp.ones((F, P), bool),
         pending_fail=jnp.zeros((F, P), itype))
     return SimCarry(

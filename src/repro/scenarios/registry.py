@@ -396,3 +396,29 @@ def allreduce_under_random_failures() -> ScenarioSpec:
         workloads=(WorkloadSpec("allreduce", bytes_total=220.0),),
         faults=(FaultSpec("random_fail", start_slot=100, frac=0.10),),
         sim=SimSpec(slots=400, seed=15, routing="war"))
+
+
+@register
+def giga_fabric_storage() -> ScenarioSpec:
+    """The large-scale acceptance shape for the kernelized engine: a
+    4096-host / 102,400-flow multiplane leaf-spine point in the style of
+    Fig 14's giga-scale resiliency sweeps.  At this size the dense
+    (leaves x leaves x paths x planes) load matrices are the memory
+    bottleneck, so `agg_mode_default` flips the JAX engine to the
+    sparse segment-summed path — `benchmarks/backend_bench.py --large`
+    and `benchmarks/fig14_large_scale.py --giga` both time it."""
+    return ScenarioSpec(
+        name="giga_fabric_storage",
+        description="Giga-scale point: 256 leaves x 16 hosts, 2 planes, "
+                    "102,400 storage flows (fanout 25), 8 random fabric "
+                    "link kills mid-run (Fig 14a-style concurrent "
+                    "failures at scale).",
+        topo=TopologySpec(n_leaves=256, n_spines=16, hosts_per_leaf=16,
+                          n_planes=2),
+        tenants=(TenantSpec("main"),),
+        workloads=(WorkloadSpec("storage", demand=0.3, fanout=25),),
+        faults=(FaultSpec("random_fail", start_slot=30, count=8,
+                          frac=1.0, plane=-1),),
+        # numpy default keeps the golden snapshot f64-deterministic;
+        # the benchmarks dispatch it through backend="jax" explicitly
+        sim=SimSpec(slots=60, seed=21, routing="ecmp", nic="spx"))

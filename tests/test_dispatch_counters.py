@@ -1,0 +1,133 @@
+"""Regression tests for the executor bookkeeping bugs fixed in the
+kernelization PR:
+
+* `dispatch_stats()` was a pair of module globals mutated without
+  synchronization — two sweeps on different threads corrupted each
+  other's deltas.  Launch attribution is now per-collector
+  (`collect_dispatch`) with the global counters behind a lock.
+* `_warn_f32_bytes` used `warnings.warn`, whose once-per-call-site
+  dedup meant the SECOND spec to overflow float32 byte counters never
+  warned.  It now dedups per spec name, logs every occurrence to the
+  flight recorder, and can raise under `REPRO_JX_STRICT_F32`.
+"""
+import itertools
+import threading
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.netsim.jx import engine
+
+# the seen-program set is process-lifetime (it mirrors jax's executable
+# caches), so every test mints fresh tags to get deterministic compile
+# counts even if the module runs twice in one process
+_uniq = itertools.count()
+
+
+def _launch(program, shape):
+    engine._record_launch(program, None, [np.zeros(shape, np.float32)])
+
+
+def test_collect_dispatch_threaded_attribution():
+    """Two concurrent collectors each see exactly their own launches;
+    the global counters see the union."""
+    engine.reset_dispatch_stats()
+    run = next(_uniq)
+    barrier = threading.Barrier(2)
+    snaps = {}
+
+    def sweep(name, n):
+        with engine.collect_dispatch() as counter:
+            barrier.wait()
+            for i in range(n):
+                _launch(f"prog_{run}_{name}", (4 + i, 4))
+            snaps[name] = counter.snapshot()
+
+    t1 = threading.Thread(target=sweep, args=("a", 7))
+    t2 = threading.Thread(target=sweep, args=("b", 11))
+    t1.start(); t2.start(); t1.join(); t2.join()
+
+    assert snaps["a"] == {"dispatches": 7, "compiles": 7}
+    assert snaps["b"] == {"dispatches": 11, "compiles": 11}
+    g = engine.dispatch_stats()
+    assert g["dispatches"] == 18
+    assert g["compiles"] == 18
+
+
+def test_collect_dispatch_nested_and_warm():
+    run = next(_uniq)
+    with engine.collect_dispatch() as outer:
+        _launch(f"p0_{run}", (8, 8))
+        with engine.collect_dispatch() as inner:
+            _launch(f"p0_{run}", (8, 8))   # warm: same program+shape
+        _launch(f"p1_{run}", (8, 8))
+    assert inner.snapshot() == {"dispatches": 1, "compiles": 0}
+    assert outer.snapshot() == {"dispatches": 3, "compiles": 2}
+    # collector popped: further launches touch only the globals
+    _launch(f"p2_{run}", (2, 2))
+    assert outer.snapshot()["dispatches"] == 3
+
+
+def test_execute_points_flight_has_dispatch_stats():
+    from repro.experiments.execute import execute_points
+    from repro.scenarios.registry import get_scenario
+
+    spec = get_scenario("fig9_single_all2all").with_sim(
+        slots=20, backend="jax")
+    flight = {}
+    out = execute_points([spec, spec.with_sim(seed=1)], flight=flight)
+    assert len(out) == 2
+    stats = flight["dispatch_stats"]
+    assert stats["dispatches"] >= 1
+    assert stats["compiles"] >= 0
+    assert isinstance(flight["f32_overflows"], list)
+
+
+def _overflowing(max_bytes=1e9):
+    # finite bytes_total above 2^24: float32 integer resolution loss
+    return SimpleNamespace(bytes_total=np.array([1.0, max_bytes, np.inf]))
+
+
+@pytest.fixture
+def f32_mode():
+    prev = jax.config.read("jax_enable_x64")
+    jax.config.update("jax_enable_x64", False)
+    try:
+        yield
+    finally:
+        jax.config.update("jax_enable_x64", prev)
+
+
+def test_warn_f32_bytes_once_per_spec(f32_mode, recwarn, monkeypatch):
+    monkeypatch.delenv("REPRO_JX_STRICT_F32", raising=False)
+    n0 = len(engine.f32_overflow_log())
+    fa = _overflowing()
+    engine._warn_f32_bytes("spec-once-A", fa)
+    engine._warn_f32_bytes("spec-once-A", fa)
+    warned = [w for w in recwarn.list
+              if "spec-once-A" in str(w.message)]
+    assert len(warned) == 1, "must warn exactly once per spec name"
+    # ... but every overflow occurrence reaches the flight recorder
+    log = engine.f32_overflow_log()[n0:]
+    assert [e["spec"] for e in log] == ["spec-once-A", "spec-once-A"]
+    assert all(e["max_bytes"] > 2 ** 24 for e in log)
+    # a DIFFERENT spec warns again (the stdlib-warnings dedup regression:
+    # one call site, so the second spec used to be silently swallowed)
+    engine._warn_f32_bytes("spec-once-B", fa)
+    assert any("spec-once-B" in str(w.message) for w in recwarn.list)
+
+
+def test_warn_f32_bytes_strict_raises(f32_mode, monkeypatch):
+    monkeypatch.setenv("REPRO_JX_STRICT_F32", "1")
+    with pytest.raises(ValueError, match="spec-strict"):
+        engine._warn_f32_bytes("spec-strict", _overflowing())
+
+
+def test_warn_f32_bytes_silent_when_safe(f32_mode, recwarn):
+    n0 = len(engine.f32_overflow_log())
+    fa = SimpleNamespace(bytes_total=np.array([1.0, np.inf, 1e6]))
+    engine._warn_f32_bytes("spec-safe", fa)
+    assert not [w for w in recwarn.list if "spec-safe" in str(w.message)]
+    assert len(engine.f32_overflow_log()) == n0
