@@ -1,0 +1,23 @@
+"""Collective-schedule co-simulation: compile a real training step's
+parallelism plan (DP/TP/PP/EP over a `repro.configs` model) into the
+fabric simulator's flow + demand-timeline representation.
+
+Pipeline:
+  `ScheduleSpec` (pure data, `scenarios.spec`)
+    -> `plan_schedule`  (byte accounting + static step skeleton, here)
+    -> `lower_schedule` (flows + (T, K) phase-multiplier timeline +
+                         `TrainSchedule` step metadata, `comms.lower`)
+    -> both netsim backends, via `WorkloadSpec(kind='schedule')`.
+
+This package imports JAX (parameter pytrees come from `jax.eval_shape`),
+so the scenario compiler pulls it in lazily — NumPy pool workers stay
+JAX-free unless a schedule workload is actually present.
+"""
+from .schedule import (LANES_PER_SCHEDULE, Phase, SchedulePlan,
+                       TrainSchedule, plan_schedule, sim_bytes)
+from .lower import lower_schedule
+
+__all__ = [
+    "LANES_PER_SCHEDULE", "Phase", "SchedulePlan", "TrainSchedule",
+    "plan_schedule", "sim_bytes", "lower_schedule",
+]

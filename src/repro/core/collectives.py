@@ -145,12 +145,16 @@ def stream_report(grads, cfg: PlaneConfig,
     sizes = []
     for leaf in jax.tree.leaves(grads):
         shape = getattr(leaf, "shape", ())
+        dt = getattr(leaf, "dtype", None)
+        # shape-only leaves (e.g. jax.eval_shape structs without a dtype)
+        # fall back to f32's 4 bytes/element
+        itemsize = np.dtype(dt).itemsize if dt is not None else 4
         if len(shape) == 0 or int(np.prod(shape)) <= cfg.microchunks:
-            sizes.append(int(np.prod(shape)) * 4)
+            sizes.append(int(np.prod(shape)) * itemsize)
             continue
         per = int(np.prod(shape[1:])) if len(shape) > 1 else 1
         for (lo, hi) in _chunk_bounds(shape[0], cfg.microchunks):
-            sizes.append((hi - lo) * per * 4)
+            sizes.append((hi - lo) * per * itemsize)
     chunk_bytes = np.asarray(sizes, np.float64)
     assignment = greedy_assign(chunk_bytes, np.asarray(weights))
     bpp = np.zeros(cfg.n_planes)

@@ -94,6 +94,26 @@ def fig12_metrics(spec: ScenarioSpec, c, res) -> Dict[str, float]:
             "pre_fail": float(g[fail_slot - 5])}
 
 
+def train_comms_metrics(spec: ScenarioSpec, c, res) -> Dict:
+    """Per-step completion times from the compiled training schedule:
+    each step's time is its last closed collective (DP sync / EP a2a)
+    completion minus the scheduled step start (`comms.TrainSchedule`).
+    Works on both backends — only `completion_slot` is read.  The
+    in-run baseline is the fastest step, so a single faulted run yields
+    its own inflation and recovery ratios."""
+    scheds = getattr(c, "schedules", ())
+    comp = getattr(res, "completion_slot", None)
+    if not scheds or comp is None:
+        return {}
+    sched = scheds[0]
+    st = sched.step_times(np.asarray(comp), spec.sim.slots)
+    ref = max(float(np.nanmin(st)), 1e-9)
+    return {"step_time_slots": [float(x) for x in st],
+            "step_period": int(sched.step_period),
+            "step_inflation": float(np.nanmax(st) / ref),
+            "last_step_ratio": float(st[-1] / ref)}
+
+
 def fig14a_metrics(spec: ScenarioSpec, c, res) -> Dict[str, float]:
     gp = np.maximum(res.mean_goodput, 1e-3)
     return {"p99_cct": float(1.0 / np.quantile(gp, 0.01))}
@@ -346,6 +366,24 @@ def topo_kind_resiliency() -> Experiment:
         description="§3.1/§6.4: flat multiplane vs 3-tier fat-tree "
                     "post-failure bisection throughput, kind x routing "
                     "x fault-frac.")
+
+
+@register_experiment
+def train_comms_resiliency() -> Experiment:
+    """Training co-simulation: collective schedules compiled from real
+    `ModelConfig`s (dense llama3-8b and MoE phi3.5, reduced) run through
+    the fabric, with a plane flap pinned to step 1's gradient-sync
+    window.  Expected signature (both backends, exact): the flapped
+    step's time inflates >= 1.2x the in-run baseline step and the final
+    step recovers to <= 1.1x after the heal."""
+    return Experiment(
+        name="train_comms_resiliency",
+        axes=Axis("scenario", ("train_step_baseline", "train_step_flap",
+                               "train_step_flap_moe")),
+        derive=train_comms_metrics,
+        description="Collective-schedule co-simulation: plane flap "
+                    "during DP sync -> step-time inflation -> recovery "
+                    "(dense + MoE schedules, both backends).")
 
 
 @register_experiment

@@ -42,6 +42,7 @@ class Flow:
     bytes_total: float = np.inf  # in rate*slot units (CCT workloads)
     group: str = "main"
     start_slot: int = 0
+    phase: int = 0               # demand-timeline lane (0 = always-on)
 
 
 @dataclass
@@ -55,6 +56,7 @@ class FlowArrays:
     group: np.ndarray            # int-coded
     groups: List[str]
     start_slot: np.ndarray = None
+    phase: np.ndarray = None     # demand-timeline lane per flow
 
     @classmethod
     def build(cls, flows: List[Flow], t) -> "FlowArrays":
@@ -71,7 +73,8 @@ class FlowArrays:
             bytes_total=np.array([f.bytes_total for f in flows]),
             group=np.array([gmap[f.group] for f in flows], np.int64),
             groups=names,
-            start_slot=np.array([f.start_slot for f in flows], np.int64))
+            start_slot=np.array([f.start_slot for f in flows], np.int64),
+            phase=np.array([f.phase for f in flows], np.int64))
 
     def __len__(self) -> int:
         return self.src.shape[0]

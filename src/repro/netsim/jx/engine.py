@@ -59,7 +59,7 @@ from __future__ import annotations
 import os
 import threading
 from contextlib import contextmanager
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from functools import partial
 from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
 
@@ -163,6 +163,10 @@ class JxConfig:
     agg_mode: str = "dense"
     # float32 runs only: int8 probe counters in the scan carry
     compact_carry: bool = False
+    # Schedule workloads: number of demand-multiplier lanes in the
+    # per-segment phase timeline (0 = no timeline; the multiply is
+    # compiled out and program identity matches pre-schedule HLO).
+    n_phases: int = 0
     # Participates in every jit-cache key / launch fingerprint, so the
     # default (disabled) spec leaves program identity — and the HLO —
     # exactly as if tracing did not exist.
@@ -807,7 +811,8 @@ def _slot_step(cfg: JxConfig, fb: FlowBatch, pair_idx: jnp.ndarray,
                aggs: _AggPerms, assign_segments: jnp.ndarray,
                seg_up: jnp.ndarray, seg_down: jnp.ndarray,
                seg_acc: jnp.ndarray, seg_up2: jnp.ndarray,
-               seg_down2: jnp.ndarray, stack: Optional[StackIdx],
+               seg_down2: jnp.ndarray, seg_dem: jnp.ndarray,
+               stack: Optional[StackIdx],
                load_fn: Callable, carry: SimCarry, xs):
     # timelines are piecewise-constant, so the scan carries only the
     # (n_seg, ...) boundary snapshots and gathers the current segment
@@ -819,6 +824,11 @@ def _slot_step(cfg: JxConfig, fb: FlowBatch, pair_idx: jnp.ndarray,
     down2 = seg_down2[seg] * cfg.core_cap
 
     demand = jnp.where(carry.done | (t < fb.start_slot), 0.0, fb.demand)
+    if cfg.n_phases:
+        # schedule workloads: piecewise-constant per-phase demand
+        # multipliers, gathered per segment exactly like the capacity
+        # snapshots above (lane 0 is the always-1.0 lane)
+        demand = demand * seg_dem[seg][fb.phase]
     offered = _plane_split(cfg, carry.nic, demand, stack)  # (F, P)
     fabric_rate = jnp.where(fb.same_leaf[:, None], 0.0, offered)
 
@@ -950,7 +960,7 @@ def _slot_step(cfg: JxConfig, fb: FlowBatch, pair_idx: jnp.ndarray,
 
 
 def _simulate(cfg: JxConfig, fb: FlowBatch, seg_up, seg_down, seg_acc,
-              seg_up2, seg_down2, assign_segments, aggs, seg_id,
+              seg_up2, seg_down2, seg_dem, assign_segments, aggs, seg_id,
               stack=None, carry0=None, ecmp_table=None, uid=None):
     if carry0 is None:
         carry0 = init_carry(fb, cfg)
@@ -966,7 +976,8 @@ def _simulate(cfg: JxConfig, fb: FlowBatch, seg_up, seg_down, seg_acc,
     step = partial(_slot_step, cfg, fb, pair_idx, aggs, assign_segments,
                    jnp.asarray(seg_up), jnp.asarray(seg_down),
                    jnp.asarray(seg_acc), jnp.asarray(seg_up2),
-                   jnp.asarray(seg_down2), stack, load_fn)
+                   jnp.asarray(seg_down2), jnp.asarray(seg_dem),
+                   stack, load_fn)
     carry, ys = jax.lax.scan(step, carry0, xs)
     if cfg.trace.enabled:
         # strided slice inside the jitted program: slot set matches the
@@ -984,13 +995,13 @@ def _simulate(cfg: JxConfig, fb: FlowBatch, seg_up, seg_down, seg_acc,
 
 def _simulate_mb(cfg: JxConfig, stack: StackIdx, carry0: SimCarry,
                  fb: FlowBatch, seg_up, seg_down, seg_acc, seg_up2,
-                 seg_down2, assign_segments, aggs, uid, seg_id,
+                 seg_down2, seg_dem, assign_segments, aggs, uid, seg_id,
                  ecmp_table):
     """Megabatch element: traced branch dispatch + donated carry.  Every
     argument between `stack` and `seg_id` (inclusive) is vmapped;
     `ecmp_table` is batch-constant (the deduplicated ECMP plan table)."""
     return _simulate(cfg, fb, seg_up, seg_down, seg_acc, seg_up2,
-                     seg_down2, assign_segments, aggs, seg_id,
+                     seg_down2, seg_dem, assign_segments, aggs, seg_id,
                      stack=stack, carry0=carry0, ecmp_table=ecmp_table,
                      uid=uid)
 
@@ -1008,7 +1019,7 @@ def _jitted(cfg: JxConfig, batched: bool, n_shards: int = 1):
     if not batched:
         fn = jax.jit(fn)
     else:
-        fn = jax.vmap(fn, in_axes=(0,) * 8 + (None,))
+        fn = jax.vmap(fn, in_axes=(0,) * 9 + (None,))
         if n_shards == 1:
             fn = jax.jit(fn)
         else:
@@ -1017,7 +1028,7 @@ def _jitted(cfg: JxConfig, batched: bool, n_shards: int = 1):
             # launch runs its per-device shards on parallel threads —
             # the single-process equivalent of the NumPy backend's
             # process pool
-            fn = jax.pmap(fn, in_axes=(0,) * 8 + (None,))
+            fn = jax.pmap(fn, in_axes=(0,) * 9 + (None,))
     _JIT_CACHE[key] = fn
     return fn
 
@@ -1041,15 +1052,15 @@ def _jitted_mb(cfg: JxConfig, n_shards: int = 1,
         return fn
     if lanes is None:
         body = jax.vmap(partial(_simulate_mb, cfg),
-                        in_axes=(0,) * 12 + (None,))
+                        in_axes=(0,) * 13 + (None,))
     else:
         stack_axes = StackIdx(route=None, is_war=0, nic=0, is_esr=0)
         v = jax.vmap(partial(_simulate_mb, cfg),
-                     in_axes=(stack_axes,) + (0,) * 11 + (None,))
+                     in_axes=(stack_axes,) + (0,) * 12 + (None,))
         tm = jax.tree_util.tree_map
 
-        def body(stack, carry0, fb, up, down, acc, up2, down2, assign,
-                 aggs, uid, seg_id, table):
+        def body(stack, carry0, fb, up, down, acc, up2, down2, dem,
+                 assign, aggs, uid, seg_id, table):
             outs, off = [], 0
             for route, n in lanes:
                 def cut(x, off=off, n=n):
@@ -1057,8 +1068,8 @@ def _jitted_mb(cfg: JxConfig, n_shards: int = 1,
                 st = tm(cut, stack)._replace(route=route)
                 outs.append(v(st, tm(cut, carry0), tm(cut, fb), cut(up),
                               cut(down), cut(acc), cut(up2), cut(down2),
-                              cut(assign), tm(cut, aggs), cut(uid),
-                              cut(seg_id), table))
+                              cut(dem), cut(assign), tm(cut, aggs),
+                              cut(uid), cut(seg_id), table))
                 off += n
             return tuple(jnp.concatenate(parts, 0)
                          for parts in zip(*outs))
@@ -1066,7 +1077,7 @@ def _jitted_mb(cfg: JxConfig, n_shards: int = 1,
     if n_shards == 1:
         fn = jax.jit(body, donate_argnums=(1,))
     else:
-        fn = jax.pmap(body, in_axes=(0,) * 12 + (None,),
+        fn = jax.pmap(body, in_axes=(0,) * 13 + (None,),
                       donate_argnums=(1,))
     _JIT_CACHE[key] = fn
     return fn
@@ -1124,12 +1135,39 @@ def _warn_f32_bytes(name: str, fa: FlowArrays, stacklevel: int = 3
         warnings.warn(msg, stacklevel=stacklevel)
 
 
-def _prepared(compiled) -> Tuple[JxConfig, FlowArrays, FaultTimeline]:
+def _prepared(compiled
+              ) -> Tuple[JxConfig, FlowArrays, FaultTimeline,
+                         Optional[np.ndarray]]:
     spec = compiled.spec
     cfg = JxConfig.from_sim(compiled.cfg, spec.topo)
     fa = FlowArrays.build(compiled.flows, compiled.topo)
     _warn_f32_bytes(spec.name, fa, stacklevel=4)
-    return cfg, fa, compile_fault_timeline(spec)
+    pm = getattr(compiled, "phase_mult", None)
+    if pm is not None:
+        cfg = replace(cfg, n_phases=int(pm.shape[1]))
+    return cfg, fa, compile_fault_timeline(spec), pm
+
+
+def phase_boundaries(pm: Optional[np.ndarray]) -> List[int]:
+    """Slots where any phase-multiplier lane changes value ([0] always
+    included) — unioned with the fault timeline's `change_slots()` so
+    the piecewise-constant segment machinery covers both.  Phase changes
+    never alter path capacity, so the ECMP re-hash replay draws no extra
+    RNG at these boundaries and numpy↔jax parity is preserved."""
+    if pm is None:
+        return [0]
+    diff = np.any(pm[1:] != pm[:-1], axis=1)
+    return [0] + (np.flatnonzero(diff) + 1).tolist()
+
+
+def _seg_dem(pm: Optional[np.ndarray], boundaries) -> np.ndarray:
+    """(n_seg, K) demand-multiplier snapshots; a (n_seg, 1) ones
+    placeholder when no schedule is present (cfg.n_phases == 0 compiles
+    the gather away — the operand is dead)."""
+    b = list(boundaries)
+    if pm is None:
+        return np.ones((len(b), 1))
+    return np.asarray(pm)[b]
 
 
 def _seg_id(boundaries, slots: int) -> np.ndarray:
@@ -1315,13 +1353,15 @@ def run_compiled(compiled) -> JxSimResult:
     """Simulate one `CompiledScenario` on the JAX backend."""
     global _BACKEND_USED
     _BACKEND_USED = True
-    cfg, fa, tl = _prepared(compiled)
-    boundaries = tuple(tl.change_slots())
+    cfg, fa, tl, pm = _prepared(compiled)
+    boundaries = tuple(sorted(set(tl.change_slots())
+                              | set(phase_boundaries(pm))))
     segs = _assign_for(cfg, fa, tl, compiled.cfg.seed, boundaries)
     aggs = _aggs_for(cfg, fa, segs, _agg_widths(cfg, fa, segs))
     up, down, acc, up2, down2 = _seg_caps(tl, boundaries)
-    args = (FlowBatch.from_arrays(fa), up, down, acc, up2, down2, segs,
-            aggs, _seg_id(boundaries, cfg.slots))
+    args = (FlowBatch.from_arrays(fa), up, down, acc, up2, down2,
+            _seg_dem(pm, boundaries), segs, aggs,
+            _seg_id(boundaries, cfg.slots))
     _record_launch("group", (cfg, False, 1), args)
     out = _jitted(cfg, False)(*args)
     return _wrap(cfg, fa, out)
@@ -1342,29 +1382,35 @@ def dispatch_compiled_batch(points: List):
     prepared = [_prepared(c) for c in points]
     cfg = prepared[0][0]
     F = len(prepared[0][1])
-    for c, (cfg_i, fa_i, _) in zip(points, prepared):
+    for c, (cfg_i, fa_i, _, _) in zip(points, prepared):
         if cfg_i != cfg or len(fa_i) != F:
             raise ValueError(
                 "batched points must be structurally identical "
                 f"(got {cfg_i} with {len(fa_i)} flows vs {cfg} with {F}); "
                 "group grid points by (scenario, routing, nic) first")
-    # shared segment boundaries: union of capacity-change slots, so every
-    # element's ECMP re-hash replay sees each change exactly once
-    boundaries = tuple(sorted({b for _, _, tl in prepared
-                               for b in tl.change_slots()}))
+    # shared segment boundaries: union of capacity-change AND
+    # phase-change slots, so every element's ECMP re-hash replay sees
+    # each capacity change exactly once and the demand timeline is
+    # piecewise-constant per segment
+    boundaries = tuple(sorted(
+        {b for _, _, tl, _ in prepared for b in tl.change_slots()}
+        | {b for _, _, _, pm in prepared for b in phase_boundaries(pm)}))
     assigns = [_assign_for(cfg, fa, tl, c.cfg.seed, boundaries)
-               for c, (_, fa, tl) in zip(points, prepared)]
+               for c, (_, fa, tl, _) in zip(points, prepared)]
     widths = tuple(map(max, zip(*(
         _agg_widths(cfg, fa, a)
-        for (_, fa, _), a in zip(prepared, assigns)))))
+        for (_, fa, _, _), a in zip(prepared, assigns)))))
     aggs = [_aggs_for(cfg, fa, a, widths)
-            for (_, fa, _), a in zip(prepared, assigns)]
-    fb = FlowBatch.stack([fa for _, fa, _ in prepared])
-    caps = [_seg_caps(tl, boundaries) for _, _, tl in prepared]
+            for (_, fa, _, _), a in zip(prepared, assigns)]
+    fb = FlowBatch.stack([fa for _, fa, _, _ in prepared])
+    caps = [_seg_caps(tl, boundaries) for _, _, tl, _ in prepared]
     up, down, acc, up2, down2 = (np.stack(col) for col in zip(*caps))
+    dem = np.stack([_seg_dem(pm, boundaries)
+                    for _, _, _, pm in prepared])
     seg_id = _seg_id(boundaries, cfg.slots)
     aggs_b = _AggPerms(*(np.stack(col) for col in zip(*aggs)))
-    args = [fb, up, down, acc, up2, down2, np.stack(assigns), aggs_b]
+    args = [fb, up, down, acc, up2, down2, dem, np.stack(assigns),
+            aggs_b]
     B = len(points)
     n_dev = len(jax.devices())
     shards = min(B, n_dev) if n_dev > 1 and B > 1 else 1
@@ -1385,7 +1431,7 @@ def dispatch_compiled_batch(points: List):
     # keep only what finalize needs — dropping the dense per-point
     # timelines here frees O(B*T*fabric) host memory while the batch
     # computes
-    return cfg, [fa for _, fa, _ in prepared], shards, out
+    return cfg, [fa for _, fa, _, _ in prepared], shards, out
 
 
 def finalize_batch(handle) -> List[JxSimResult]:

@@ -75,17 +75,24 @@ class _Point:
     caps: Tuple[np.ndarray, np.ndarray, np.ndarray]  # (n_seg, ...) each
     assign: Optional[np.ndarray]  # (n_seg, F, P), ECMP points only
     widths: Tuple[int, ...]
+    dem: np.ndarray = None        # (n_seg, K) phase-demand snapshots
 
 
 def _struct_cfg(compiled) -> JxConfig:
     """`JxConfig` with routing/nic lifted out of the static key.  The
     swlb reaction delay is resolved unconditionally (SimConfig returns 0
     for non-swlb NICs, but here swlb is one traced branch of every
-    program and only swlb elements ever read it)."""
+    program and only swlb elements ever read it).  Schedule points set
+    `n_phases` to the pow2 bucket of their lane count, so schedule and
+    non-schedule points split into separate structural groups (each
+    still one compile per bucket)."""
     sim = compiled.cfg
     base = JxConfig.from_sim(sim, compiled.spec.topo)
     delay = int(sim.sw_lb_delay_ms * 1000 / sim.slot_us)
-    return replace(base, routing="*", nic="*", sw_lb_delay_slots=delay)
+    pm = getattr(compiled, "phase_mult", None)
+    n_phases = _bucket(pm.shape[1]) if pm is not None else 0
+    return replace(base, routing="*", nic="*", sw_lb_delay_slots=delay,
+                   n_phases=n_phases)
 
 
 def _prepare(index: int, compiled, caches: Dict) -> _Point:
@@ -97,11 +104,17 @@ def _prepare(index: int, compiled, caches: Dict) -> _Point:
         fa = FlowArrays.build(compiled.flows, compiled.topo)
         engine._warn_f32_bytes(spec.name, fa, stacklevel=5)
         caches[("fa", fa_key)] = fa
-    tl_key = (spec.faults, spec.sim.slots, spec.topo, spec.workload_seed)
+    pm = getattr(compiled, "phase_mult", None)
+    # phase-change slots join the segment boundaries, so the timeline
+    # memo key folds them in ((0,) for every non-schedule point —
+    # existing sharing is untouched)
+    pb = tuple(engine.phase_boundaries(pm))
+    tl_key = (spec.faults, spec.sim.slots, spec.topo, spec.workload_seed,
+              pb)
     cached = caches.get(("tl", tl_key))
     if cached is None:
         tl = compile_fault_timeline(spec)
-        boundaries = tuple(tl.change_slots())
+        boundaries = tuple(sorted(set(tl.change_slots()) | set(pb)))
         cached = (tl, boundaries, engine._seg_caps(tl, boundaries))
         caches[("tl", tl_key)] = cached
     tl, boundaries, caps = cached
@@ -126,7 +139,7 @@ def _prepare(index: int, compiled, caches: Dict) -> _Point:
     return _Point(index=index, cfg=cfg, routing=routing, nic=nic,
                   fa_key=fa_key, tl_key=tl_key, assign_key=assign_key,
                   fa=fa, boundaries=boundaries, caps=caps, assign=assign,
-                  widths=widths)
+                  widths=widths, dem=engine._seg_dem(pm, boundaries))
 
 
 def _pad_segs(a: np.ndarray, seg_b: int) -> np.ndarray:
@@ -158,6 +171,7 @@ def _padded_flow_cols(fa: FlowArrays, F_b: int, slots: int
         "bytes_total": p(fa.bytes_total, np.inf),
         "start_slot": p(fa.start_slot, slots),
         "same_leaf": p(fa.src_leaf == fa.dst_leaf, True),
+        "phase": p(fa.phase, 0),
     }
 
 
@@ -266,9 +280,19 @@ def _dispatch_group(cfg: JxConfig, pts: List[_Point], caches: Dict):
                 _pad_segs(ac, seg_b), _pad_segs(u2, seg_b),
                 _pad_segs(d2, seg_b),
                 engine._seg_id(p.boundaries, cfg.slots))
+        # phase-demand snapshots: segment-padded like the capacity
+        # snapshots, lane-padded with 1.0 to the group's phase bucket
+        # (no flow carries a padded phase id)
+        K_b = max(cfg.n_phases, 1)
+        dem = _pad_segs(p.dem, seg_b)
+        if dem.shape[1] < K_b:
+            dem = np.concatenate(
+                [dem, np.ones((seg_b, K_b - dem.shape[1]), dem.dtype)],
+                axis=1)
         return {"index": p.index, "fa": p.fa, "cols": cols,
                 "perms": perms, "uid": uid, "assign": assign,
-                "caps": padded, "stack": stack_idx_for(p.routing, p.nic)}
+                "caps": padded, "dem": dem,
+                "stack": stack_idx_for(p.routing, p.nic)}
 
     n_dev = len(jax.devices())
     shards = min(len(pts), n_dev) if n_dev > 1 and len(pts) > 1 else 1
@@ -313,6 +337,7 @@ def _dispatch_group(cfg: JxConfig, pts: List[_Point], caches: Dict):
               np.stack([e["caps"][2] for e in seq]),
               np.stack([e["caps"][3] for e in seq]),
               np.stack([e["caps"][4] for e in seq]),
+              np.stack([e["dem"] for e in seq]),
               np.stack([e["assign"] for e in seq]), aggs,
               np.array([e["uid"] for e in seq], np.int32),
               np.stack([e["caps"][5] for e in seq]))

@@ -26,6 +26,7 @@ class FlowBatch(NamedTuple):
     bytes_total: jnp.ndarray   # (F,) float (inf = open-loop)
     start_slot: jnp.ndarray    # (F,) int
     same_leaf: jnp.ndarray     # (F,) bool
+    phase: jnp.ndarray         # (F,) int demand-timeline lane
 
     @classmethod
     def from_arrays(cls, fa: FlowArrays) -> "FlowBatch":
@@ -36,7 +37,8 @@ class FlowBatch(NamedTuple):
             demand=jnp.asarray(fa.demand),
             bytes_total=jnp.asarray(fa.bytes_total),
             start_slot=jnp.asarray(fa.start_slot),
-            same_leaf=jnp.asarray(fa.src_leaf == fa.dst_leaf))
+            same_leaf=jnp.asarray(fa.src_leaf == fa.dst_leaf),
+            phase=jnp.asarray(fa.phase))
 
     @classmethod
     def stack(cls, fas: List[FlowArrays]) -> "FlowBatch":
@@ -51,6 +53,7 @@ class FlowBatch(NamedTuple):
             "bytes_total": [fa.bytes_total for fa in fas],
             "start_slot": [fa.start_slot for fa in fas],
             "same_leaf": [fa.src_leaf == fa.dst_leaf for fa in fas],
+            "phase": [fa.phase for fa in fas],
         }
         return cls(**{k: jnp.asarray(np.stack(v))
                       for k, v in cols.items()})

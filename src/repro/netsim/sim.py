@@ -86,7 +86,12 @@ def rehash_dead_assign(alive: np.ndarray, assign: np.ndarray,
 
 def run_sim(topo: Fabric, flows: List[Flow], cfg: SimConfig,
             events: Optional[Callable[[int, Fabric], None]] = None,
+            phase_mult: Optional[np.ndarray] = None,
             ) -> SimResult:
+    """`phase_mult`: optional (slots, K) demand-multiplier timeline; each
+    flow's offered demand is scaled by `phase_mult[t, flow.phase]` — the
+    schedule-workload lane (lane 0 is the always-1.0 lane by
+    convention)."""
     rng = np.random.default_rng(cfg.seed)
     fa = FlowArrays.build(flows, topo)
     F, P, J = len(fa), topo.n_planes, topo.n_paths
@@ -122,6 +127,8 @@ def run_sim(topo: Fabric, flows: List[Flow], cfg: SimConfig,
         if events is not None:
             events(t, topo)
         demand = np.where(done | (t < fa.start_slot), 0.0, fa.demand)
+        if phase_mult is not None:
+            demand = demand * phase_mult[t, fa.phase]
         offered = nic.plane_split(demand)
         pair = None
         if cfg.routing == "ecmp":

@@ -39,9 +39,6 @@ def all2all(t: LeafSpine, hosts: Sequence[int], group: str = "main",
     hosts = list(hosts)
     n = len(hosts)
     flows = []
-    for i, a in enumerate(hosts):
-        for b in hosts[i + 1:]:
-            pass
     # ordered pairs; per-flow demand = line_rate / (n-1)
     d = 1.0 / max(n - 1, 1)
     for a in hosts:

@@ -35,6 +35,10 @@ class CompiledScenario:
     events: Callable[[int, Fabric], None]
     tenants: Dict[str, List[int]]
     fault_slots: Tuple[Tuple[int, str], ...]   # (slot, label), sorted
+    # schedule workloads only: (slots, K) demand-multiplier timeline
+    # (lane 0 always 1.0) + per-schedule `comms.TrainSchedule` metadata
+    phase_mult: Optional[np.ndarray] = None
+    schedules: Tuple = ()
 
     def run(self, backend: Optional[str] = None):
         """Simulate.  `backend` overrides the spec's `sim.backend`;
@@ -47,7 +51,8 @@ class CompiledScenario:
         if backend != "numpy":
             raise ValueError(
                 f"unknown backend {backend!r}; expected 'numpy' or 'jax'")
-        return run_sim(self.topo, self.flows, self.cfg, events=self.events)
+        return run_sim(self.topo, self.flows, self.cfg, events=self.events,
+                       phase_mult=self.phase_mult)
 
 
 # ---------------------------------------------------------------------------
@@ -166,16 +171,38 @@ def _build_workload(w: WorkloadSpec, topo: LeafSpine, hosts: List[int],
 
 def build_flows(spec: ScenarioSpec, topo: LeafSpine,
                 tenants: Dict[str, List[int]],
-                rng: np.random.Generator) -> List[Flow]:
+                rng: np.random.Generator
+                ) -> Tuple[List[Flow], Optional[np.ndarray], Tuple]:
+    """Lower every workload.  Returns `(flows, phase_mult, schedules)`:
+    `phase_mult` is the (slots, K) demand-multiplier timeline (None when
+    no schedule workload is present) and `schedules` the matching
+    `comms.TrainSchedule` metadata, flow indices already rebased onto
+    the global flow list.  Multiple schedule workloads stack their lanes
+    column-wise; lane 0 stays the shared always-1.0 lane."""
     flows: List[Flow] = []
+    pm: Optional[np.ndarray] = None
+    schedules: List = []
     for w in spec.workloads:
         group = w.group or w.tenant
+        if w.kind == "schedule":
+            # Lazy import: `repro.comms` pulls in JAX for parameter
+            # pytrees; NumPy pool workers stay JAX-free otherwise.
+            from repro.comms import lower_schedule
+            lane_off = 0 if pm is None else pm.shape[1] - 1
+            fl, wpm, sched = lower_schedule(
+                w, tenants[w.tenant], spec.topo, spec.sim, group,
+                lane_offset=lane_off)
+            schedules.append(sched.shifted(len(flows)))
+            pm = wpm if pm is None else np.concatenate(
+                [pm, wpm[:, 1:]], axis=1)
+            flows += fl          # start slots are schedule-internal
+            continue
         fl = _build_workload(w, topo, tenants[w.tenant], rng, group)
         if w.start_slot:
             for f in fl:
                 f.start_slot = w.start_slot
         flows += fl
-    return flows
+    return flows, pm, tuple(schedules)
 
 
 # ---------------------------------------------------------------------------
@@ -337,7 +364,7 @@ def compile_scenario(spec: ScenarioSpec) -> CompiledScenario:
     topo = build_topology(spec.topo)
     rng = np.random.default_rng(spec.workload_seed)
     tenants = resolve_tenants(spec, rng)
-    flows = build_flows(spec, topo, tenants, rng)
+    flows, phase_mult, schedules = build_flows(spec, topo, tenants, rng)
     if not flows:
         raise ValueError(f"{spec.name}: scenario compiled to zero flows")
     events, fault_slots = make_events(spec)
@@ -351,7 +378,8 @@ def compile_scenario(spec: ScenarioSpec) -> CompiledScenario:
         backend=spec.sim.backend, trace=spec.sim.trace)
     return CompiledScenario(spec=spec, topo=topo, flows=flows, cfg=cfg,
                             events=events, tenants=tenants,
-                            fault_slots=fault_slots)
+                            fault_slots=fault_slots,
+                            phase_mult=phase_mult, schedules=schedules)
 
 
 def run_scenario(spec: ScenarioSpec) -> SimResult:

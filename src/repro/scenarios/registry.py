@@ -10,8 +10,8 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List
 
-from .spec import (FaultSpec, ScenarioSpec, SimSpec, TenantSpec,
-                   TopologySpec, WorkloadSpec)
+from .spec import (FaultSpec, ScenarioSpec, ScheduleSpec, SimSpec,
+                   TenantSpec, TopologySpec, WorkloadSpec)
 
 SCENARIOS: Dict[str, Callable[[], ScenarioSpec]] = {}
 
@@ -396,6 +396,81 @@ def allreduce_under_random_failures() -> ScenarioSpec:
         workloads=(WorkloadSpec("allreduce", bytes_total=220.0),),
         faults=(FaultSpec("random_fail", start_slot=100, frac=0.10),),
         sim=SimSpec(slots=400, seed=15, routing="war"))
+
+
+# ---------------------------------------------------------------------------
+# training-step co-simulation (repro.comms): real collective schedules
+# compiled into the fabric
+# ---------------------------------------------------------------------------
+#
+# 8 ranks on a fig12-style 4-plane fabric (access 0.25 x line per
+# plane).  Two hosts per leaf puts every other DP ring hop and every PP
+# edge on the fabric, so both access-plane and fabric events shape the
+# schedule.  line_rate_gbps calibrates the reduced() model's byte
+# volumes so one DP sync stream spans tens of slots — wide enough that
+# a mid-sync plane flap visibly inflates derived step time.
+_TRAIN_TOPO = TopologySpec(n_leaves=4, n_spines=2, hosts_per_leaf=2,
+                           n_planes=4, access_cap=0.25)
+
+# dense: llama3-8b (reduced), dp=4 x pp=2.  Compiled windows are
+# deterministic: w_fwd=11, w_bwd=22, w_sync=28, period 63, steps at
+# slots 0/63/126 — step 1's gradient-sync window is [96, 124).
+_TRAIN_DENSE = ScheduleSpec(model="llama3-8b", dp=4, tp=1, pp=2, steps=3,
+                            microbatches=4, tokens_per_rank=1024,
+                            line_rate_gbps=1.0, ckpt_every=2)
+
+# MoE: phi3.5-moe (reduced), dp=4 x tp=2 — adds per-step EP all2all
+# dispatch (capacity math) and TP streams.  Windows: w_fwd=27, w_bwd=54,
+# w_sync=40, period 123, steps at 0/123/246 — step 1 sync = [204, 244).
+_TRAIN_MOE = ScheduleSpec(model="phi3.5-moe-42b-a6.6b", dp=4, tp=2, pp=1,
+                          steps=3, microbatches=4, tokens_per_rank=512,
+                          line_rate_gbps=1.0)
+
+
+@register
+def train_step_baseline() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="train_step_baseline",
+        description="Training co-simulation baseline: 3 steps of a dense "
+                    "llama3-8b (reduced) dp=4 x pp=2 schedule — DP ring "
+                    "sync + pipeline edges phased by the demand-"
+                    "multiplier timeline, checkpoint write after step 2.",
+        topo=_TRAIN_TOPO,
+        tenants=(TenantSpec("main"),),
+        workloads=(WorkloadSpec("schedule", schedule=_TRAIN_DENSE),),
+        sim=SimSpec(slots=260, slot_us=100.0, seed=22))
+
+
+@register
+def train_step_flap() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="train_step_flap",
+        description="Plane flap during training: rank 0 loses NIC plane "
+                    "1 for exactly step 1's gradient-sync window "
+                    "(slots 96-126) — fabric slowdown -> step-time "
+                    "inflation -> recovery by step 2.",
+        topo=_TRAIN_TOPO,
+        tenants=(TenantSpec("main"),),
+        workloads=(WorkloadSpec("schedule", schedule=_TRAIN_DENSE),),
+        faults=(FaultSpec("access_kill", start_slot=96, stop_slot=126,
+                          plane=1, host=0),),
+        sim=SimSpec(slots=260, slot_us=100.0, seed=22))
+
+
+@register
+def train_step_flap_moe() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="train_step_flap_moe",
+        description="MoE variant: phi3.5-moe (reduced) dp=4 x tp=2 "
+                    "schedule with per-step EP all2all dispatch; the "
+                    "same plane flap covers step 1's sync window "
+                    "(slots 204-246).",
+        topo=_TRAIN_TOPO,
+        tenants=(TenantSpec("main"),),
+        workloads=(WorkloadSpec("schedule", schedule=_TRAIN_MOE),),
+        faults=(FaultSpec("access_kill", start_slot=204, stop_slot=246,
+                          plane=1, host=0),),
+        sim=SimSpec(slots=420, slot_us=100.0, seed=23))
 
 
 @register

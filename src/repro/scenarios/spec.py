@@ -16,7 +16,8 @@ from typing import Optional, Tuple
 from repro.trace import TraceSpec
 
 WORKLOAD_KINDS = ("bisection", "all2all", "allreduce", "incast",
-                  "permutation", "storage", "pairs", "one2many")
+                  "permutation", "storage", "pairs", "one2many",
+                  "schedule")
 FAULT_KINDS = ("link_kill", "link_flap", "access_kill", "access_flap",
                "cascade", "straggler", "leaf_trim", "random_fail",
                "core_kill")
@@ -137,6 +138,65 @@ class TenantSpec:
 
 
 @dataclass(frozen=True)
+class ScheduleSpec:
+    """A training-step collective schedule to co-simulate (kind='schedule').
+
+    Pure data: `model` names an entry in `repro.configs.ARCHS`; byte
+    volumes are derived at compile time by `repro.comms` from the model's
+    parameter pytree (dtype-aware micro-chunk streams), MoE capacity math,
+    and pipeline activation sizes — nothing heavy happens at spec time.
+
+    Rank layout over the tenant's hosts is tp-fastest:
+    ``rank = t + tp * (d + dp * p)`` for tp-coordinate `t`, dp-coordinate
+    `d`, pp-stage `p`; the tenant must own at least ``dp * tp * pp`` hosts.
+
+    `reduced` swaps in `ModelConfig.reduced()` (same family, tiny dims) so
+    registry scenarios stay numpy-fast for golden snapshots; production
+    sweeps set it False.  `line_rate_gbps` calibrates real bytes to
+    simulator units: 1.0 capacity = one slot at line rate, i.e.
+    ``sim_bytes = real_bytes / (line_rate_gbps * 125 * slot_us)``.
+    `ckpt_every` > 0 adds background checkpoint-write flows after every
+    k-th step (group 'ckpt').
+    """
+    model: str = "llama3-8b"
+    dp: int = 2
+    tp: int = 1
+    pp: int = 1
+    steps: int = 2
+    microbatches: int = 4
+    tokens_per_rank: int = 2048
+    line_rate_gbps: float = 400.0
+    ckpt_every: int = 0
+    reduced: bool = True
+
+    @property
+    def n_ranks(self) -> int:
+        return self.dp * self.tp * self.pp
+
+    def validate(self, name: str) -> "ScheduleSpec":
+        for f in ("dp", "tp", "pp", "steps", "microbatches",
+                  "tokens_per_rank"):
+            if getattr(self, f) < 1:
+                raise ValueError(
+                    f"{name}: schedule.{f} must be >= 1, got "
+                    f"{getattr(self, f)}")
+        if self.line_rate_gbps <= 0:
+            raise ValueError(
+                f"{name}: schedule.line_rate_gbps must be > 0, got "
+                f"{self.line_rate_gbps}")
+        if self.ckpt_every < 0:
+            raise ValueError(
+                f"{name}: schedule.ckpt_every must be >= 0, got "
+                f"{self.ckpt_every}")
+        if self.dp < 2:
+            raise ValueError(
+                f"{name}: schedule requires dp >= 2 (got {self.dp}) — "
+                "the per-step DP gradient sync is what defines step "
+                "completion")
+        return self
+
+
+@dataclass(frozen=True)
 class WorkloadSpec:
     """One traffic pattern bound to a tenant.
 
@@ -152,6 +212,11 @@ class WorkloadSpec:
       'one2many'    — the tenant's first `srcs` hosts each stream to
                       every remaining host, per-flow demand
                       `demand / n_dsts` (Fig 15's burst pattern).
+      'schedule'    — a compiled training-step collective schedule
+                      (`schedule` field): DP ring allreduce streams, MoE
+                      all2all dispatch, PP send/recv edges, and optional
+                      checkpoint writes, phased over time via the
+                      demand-multiplier timeline (`repro.comms`).
 
     `demand` scales the builder's native per-flow rate ('incast',
     'permutation', 'storage', 'pairs' use it directly as the per-flow
@@ -169,6 +234,11 @@ class WorkloadSpec:
     srcs: int = 1                        # one2many
     pairs: Tuple[Tuple[int, int], ...] = ()
     group: Optional[str] = None          # metric group; default = tenant
+    schedule: Optional[ScheduleSpec] = None   # kind='schedule' only
+
+    # `schedule` elides from content hashes at its default so every
+    # pre-existing spec keeps its cache key across this schema extension.
+    HASH_ELIDE_DEFAULTS = ("schedule",)
 
 
 @dataclass(frozen=True)
@@ -303,6 +373,21 @@ class ScenarioSpec:
                     raise ValueError(
                         f"{self.name}: pairs endpoints outside "
                         f"[0, {self.topo.n_hosts}): {bad}")
+            if w.kind == "schedule":
+                if w.schedule is None:
+                    raise ValueError(
+                        f"{self.name}: schedule workload requires the "
+                        "schedule field")
+                w.schedule.validate(self.name)
+                if w.schedule.n_ranks > self.topo.n_hosts:
+                    raise ValueError(
+                        f"{self.name}: schedule needs "
+                        f"{w.schedule.n_ranks} ranks but the topology "
+                        f"has only {self.topo.n_hosts} hosts")
+            elif w.schedule is not None:
+                raise ValueError(
+                    f"{self.name}: schedule field set on a "
+                    f"{w.kind!r} workload (only kind='schedule' uses it)")
         for f in self.faults:
             if f.kind not in FAULT_KINDS:
                 raise ValueError(f"{self.name}: unknown fault {f.kind!r}")

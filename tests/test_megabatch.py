@@ -201,13 +201,22 @@ def test_stack_idx_covers_every_routing_nic():
 def test_megabatch_registry_wide_row_identity(routing, nic):
     """Registry-wide: every scenario (mixed flow buckets, timelines,
     finite transfers) through one executor call per (routing, nic),
-    megabatch vs per-group."""
-    scenarios = tuple(n for n in list_scenarios())
+    megabatch vs per-group.  Schedule scenarios pin their own horizon
+    (the compiler rejects a sim too short for every training step), so
+    they keep their registry slots instead of the 150-slot shrink."""
+    from repro.scenarios import get_scenario
+    sched = tuple(n for n in list_scenarios() if any(
+        w.kind == "schedule" for w in get_scenario(n).workloads))
+    rest = tuple(n for n in list_scenarios() if n not in sched)
     points = _grid_points(None, [
-        Axis("scenario", scenarios),
+        Axis("scenario", rest),
         Axis("sim.routing", (routing,)),
         Axis("sim.nic", (nic,)),
         Axis("sim.slots", (150,)),
+    ]) + _grid_points(None, [
+        Axis("scenario", sched),
+        Axis("sim.routing", (routing,)),
+        Axis("sim.nic", (nic,)),
     ])
     group, mega = _run_both(points)
     _assert_rows_identical(points, group, mega)
