@@ -1,0 +1,36 @@
+"""Failure-reaction policies — detection latency and reroute speed.
+
+The `reroute_reaction` experiment sweeps reaction mode (precomputed
+backup-path failover vs post-detection ECMP re-randomization) x topology
+kind x failure fraction x detection latency on the §6.4 10%-failure
+operating point.  Emitted per row: the worst blackhole window converted
+to microseconds (the paper's "<3 ms hardware failover vs ~1 s software
+LB" axis), total blackholed bytes, and the p50 completion slot (for the
+"7% inflation at 10% failures" check against the frac=0 rows)."""
+from __future__ import annotations
+
+from repro.experiments import get_experiment, run_experiment
+from repro.scenarios import get_scenario
+
+from .common import emit
+
+
+def run() -> None:
+    rs = run_experiment(get_experiment("reroute_reaction"))
+    slot_us = {n: get_scenario(n).sim.slot_us
+               for n in ("reroute_random_failures",
+                         "reroute_random_failures_ft")}
+    for row in rs.rows():
+        name = row["axis.scenario"]
+        kind = "ft" if name.endswith("_ft") else "ls"
+        label = (f"reroute.{kind}.{row['axis.reaction.mode']}"
+                 f".frac{row['axis.faults[0].frac']:g}"
+                 f".det{row['axis.reaction.detect_slots']}")
+        emit(label, row["reaction_slots"] * slot_us[name],
+             f"blackholed={row['blackholed_bytes']:.1f},"
+             f"p50_completion={row['extra']['p50_completion']:g},"
+             f"goodput={row['mean_goodput']:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -12,8 +12,9 @@ def main() -> None:
     from . import (fig1a_latency_all2all, fig1b_lb_delay_queue,
                    fig1c_maxflow_failures, fig8_bisection, fig9_isolation,
                    fig11_static_resiliency, fig12_flap_recovery,
-                   fig14_large_scale, fig15_plane_lb, fig_train_comms,
-                   kernels_bench, roofline, scenario_sweep)
+                   fig14_large_scale, fig15_plane_lb, fig_reroute_reaction,
+                   fig_train_comms, kernels_bench, roofline,
+                   scenario_sweep)
     print("name,us_per_call,derived")
     modules = [
         ("fig1a", fig1a_latency_all2all),
@@ -26,6 +27,7 @@ def main() -> None:
         ("fig14", fig14_large_scale),
         ("fig15", fig15_plane_lb),
         ("train_comms", fig_train_comms),
+        ("reroute", fig_reroute_reaction),
         ("kernels", kernels_bench),
         ("roofline", roofline),
         ("scenarios", scenario_sweep),

@@ -386,6 +386,39 @@ def train_comms_resiliency() -> Experiment:
                     "(dense + MoE schedules, both backends).")
 
 
+def reroute_metrics(spec: ScenarioSpec, c, res) -> Dict[str, float]:
+    """Reaction-policy comparison columns: the p50 completion slot (for
+    the §6.4 '7% at 10% failures' inflation check against the frac=0.0
+    rows) — blackholed bytes and worst reaction window are standard
+    `ScenarioMetrics` columns already."""
+    comp = res.completion_slot[res.completion_slot >= 0]
+    return {"p50_completion": (float(np.median(comp)) if comp.size
+                               else float("nan"))}
+
+
+@register_experiment
+def reroute_reaction() -> Experiment:
+    """The failure-reaction policy sweep: precomputed backup failover
+    (hardware PLB-style) vs post-detection ECMP re-randomization
+    (software LB-style) across topology kind, failure fraction, and
+    detection latency.  Expected signatures: backup's blackhole window
+    closes within detect_slots of the fault while rehash stays dark for
+    detect+converge (>= 10x longer at the registry defaults), and
+    backup's p50 completion at 10% failures inflates <= 1.10x over the
+    frac=0 rows."""
+    return Experiment(
+        name="reroute_reaction",
+        axes=(Axis("scenario", ("reroute_random_failures",
+                                "reroute_random_failures_ft")),
+              Axis("reaction.mode", ("backup", "rehash")),
+              Axis("faults[0].frac", (0.0, 0.10)),
+              Axis("reaction.detect_slots", (1, 4))),
+        derive=reroute_metrics,
+        description="§6.4: reroute-policy grid — mode x topology kind x "
+                    "fault-frac x detection latency; blackhole windows "
+                    "and completion inflation per policy.")
+
+
 @register_experiment
 def resiliency_fault_planes() -> Experiment:
     return Experiment(

@@ -112,8 +112,14 @@ class FluidFabric:
                  slot_us: float = 10.0,
                  ecn_queue_thresh: float = ECN_QUEUE_THRESH,
                  ar_temperature: float = AR_TEMPERATURE,
-                 jsq_bins: int = JSQ_BINS, q_cap: float = Q_CAP):
+                 jsq_bins: int = JSQ_BINS, q_cap: float = Q_CAP,
+                 route_topo: Optional[Fabric] = None):
+        """`route_topo` is the *routing-visible* fabric (failure-reaction
+        lowering): fractions and remote weights read its capacities while
+        delivery, queues, and bottlenecks stay on the physical `topo`.
+        `None` routes against the physical fabric (instant detection)."""
         self.t = topo
+        self.rt = topo if route_topo is None else route_topo
         self.state = FabricState.zeros(topo)
         self.base_rtt = base_rtt_us
         self.slot_us = slot_us
@@ -143,7 +149,7 @@ class FluidFabric:
         J = spines (leaf_spine) or cores (fat_tree).  mode: 'ar' | 'war'.
         (ECMP is per-flow — see ecmp_fractions.)  `remote_weights` is
         (P, J, L): healthy-capacity weight of path j toward dst leaf."""
-        t = self.t
+        t = self.rt
         if t.kind == "fat_tree":
             return self._pair_fractions_fat_tree(mode, remote_weights)
         cap = np.minimum(t.up[:, :, None, :],                 # (P,L,1,S)
@@ -161,7 +167,7 @@ class FluidFabric:
         """Fat-tree pair split: per-path capacity/queue compose stage A
         (leaf↔agg, via the path→agg map) with stage B (pod↔core) for
         cross-pod pairs; intra-pod pairs see stage A only."""
-        t, st = self.t, self.state
+        t, st = self.rt, self.state
         aj = t.agg_of_path                                   # (J,)
         pol = t.pod_of_leaf                                  # (L,)
         cross = (pol[:, None] != pol[None, :])[None, :, :, None]
@@ -187,7 +193,7 @@ class FluidFabric:
         capacity of path j toward dst leaf, normalized per leaf.  On
         fat_tree the weight composes the agg→leaf link with the
         core→agg hop serving the leaf's pod."""
-        t = self.t
+        t = self.rt
         if t.kind == "fat_tree":
             aj, pol = t.agg_of_path, t.pod_of_leaf
             eff = np.minimum(t.down[:, aj, :],

@@ -84,7 +84,7 @@ from repro.netsim.sim import SimConfig
 from repro.trace import TraceSpec
 
 from .events import (FaultTimeline, compile_fault_timeline,
-                     ecmp_assign_segments)
+                     ecmp_assign_segments, lagged_timeline)
 from .state import FlowBatch, NicCarry, SimCarry, init_carry
 
 _EPS = 1e-12
@@ -167,6 +167,15 @@ class JxConfig:
     # per-segment phase timeline (0 = no timeline; the multiply is
     # compiled out and program identity matches pre-schedule HLO).
     n_phases: int = 0
+    # Failure reaction (spec.reaction enabled): routing steers against
+    # the four extra *visible*-capacity operands (the lagged timeline)
+    # and every slot additionally emits the blackholed-byte total.
+    # False leaves those operands dead ones-dummies and the scan ys a
+    # raw scalar — the traced program is the pre-reaction one.  The
+    # detect/converge depths and the reroute mode stay host-side (they
+    # only shape the operand *values*), so a mode × detect sweep shares
+    # one compiled program per bucket.
+    react: bool = False
     # Participates in every jit-cache key / launch fingerprint, so the
     # default (disabled) spec leaves program identity — and the HLO —
     # exactly as if tracing did not exist.
@@ -233,6 +242,9 @@ class JxSimResult:
     group_of: np.ndarray
     slot_us: float
     trace: Optional[Dict[str, np.ndarray]] = None
+    # failure reaction only: full-rate (T,) per-slot bytes offered onto
+    # physically dead paths (None when spec.reaction is off)
+    blackhole_timeline: Optional[np.ndarray] = None
 
     def group_mean(self, group: str) -> float:
         gi = self.groups.index(group)
@@ -592,19 +604,24 @@ def _pair_rate_sum(cfg: JxConfig, fabric_rate: jnp.ndarray,
 
 
 def _route_pair(cfg: JxConfig, carry: SimCarry, fabric_rate: jnp.ndarray,
-                up: jnp.ndarray, down: jnp.ndarray, aggs: _AggPerms,
+                up: jnp.ndarray, down: jnp.ndarray, upv: jnp.ndarray,
+                downv: jnp.ndarray, aggs: _AggPerms,
                 pair_idx: jnp.ndarray, use_war):
     """AR / weighted-AR: leaf-pair spine fractions.  `use_war` is a
     Python bool on the static path or a traced bool under switch — the
     traced form multiplies weights by exactly 1.0 for plain AR, which is
-    bit-identical to not multiplying."""
+    bit-identical to not multiplying.  `upv`/`downv` are the routing-
+    *visible* capacities (the reaction-lagged view; the physical arrays
+    themselves when reaction is off): fractions and remote weights steer
+    against them, while loads/bottlenecks/queues stay physical — exactly
+    `FluidFabric`'s `route_topo` split."""
     P, L = cfg.n_planes, cfg.n_leaves
-    rw_arr = down / jnp.maximum(down.max(axis=1, keepdims=True), 1e-9)
+    rw_arr = downv / jnp.maximum(downv.max(axis=1, keepdims=True), 1e-9)
     if isinstance(use_war, bool):
         rw = rw_arr if use_war else None
     else:
-        rw = jnp.where(use_war, rw_arr, jnp.ones_like(down))
-    pair = _pair_fractions(cfg, carry.q_up, carry.q_down, up, down, rw)
+        rw = jnp.where(use_war, rw_arr, jnp.ones_like(downv))
+    pair = _pair_fractions(cfg, carry.q_up, carry.q_down, upv, downv, rw)
     rate_pair = _pair_rate_sum(cfg, fabric_rate, pair_idx, aggs)
     load_up = jnp.einsum("plm,plms->pls", rate_pair, pair)
     load_down = jnp.einsum("plm,plms->psm", rate_pair, pair)
@@ -617,7 +634,14 @@ def _route_pair(cfg: JxConfig, carry: SimCarry, fabric_rate: jnp.ndarray,
     q_pair = (carry.q_up[:, :, None, :] +
               carry.q_down.transpose(0, 2, 1)[:, None, :, :])
     qmean = (pair * q_pair).sum(-1).reshape(P, L * L)[:, pair_idx].T
-    return load_up, load_down, through, qmean
+    if not cfg.react:
+        return load_up, load_down, through, qmean
+    # blackholed bytes: offered rate steered (by the lagged view) onto
+    # physically dead paths — pair-aggregated, so no (F, P, J) tensor
+    cap = jnp.minimum(up[:, :, None, :],
+                      jnp.swapaxes(down, 1, 2)[:, None, :, :])
+    bh = (rate_pair[..., None] * pair * (cap <= _EPS)).sum()
+    return load_up, load_down, through, qmean, bh
 
 
 def _route_ecmp(cfg: JxConfig, carry: SimCarry, fabric_rate: jnp.ndarray,
@@ -661,7 +685,14 @@ def _route_ecmp(cfg: JxConfig, carry: SimCarry, fabric_rate: jnp.ndarray,
     through = fabric_rate * scale_f
     qmean = (carry.q_up[p_iota, fb.src_leaf[:, None], assign] +
              carry.q_down[p_iota, assign, fb.dst_leaf[:, None]])
-    return load_up, load_down, through, qmean
+    if not cfg.react:
+        return load_up, load_down, through, qmean
+    # blackholed bytes: the one-hot assignment (already steered by the
+    # lagged view on the host) landing on a physically dead path
+    capF = jnp.minimum(up[p_iota, fb.src_leaf[:, None], assign],
+                       down[p_iota, assign, fb.dst_leaf[:, None]])
+    bh = (fabric_rate * (capF <= _EPS)).sum()
+    return load_up, load_down, through, qmean, bh
 
 
 def _ft_maps(cfg: JxConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -674,24 +705,28 @@ def _ft_maps(cfg: JxConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
 def _route_pair_ft(cfg: JxConfig, carry: SimCarry,
                    fabric_rate: jnp.ndarray, up: jnp.ndarray,
                    down: jnp.ndarray, up2: jnp.ndarray,
-                   down2: jnp.ndarray, aggs: _AggPerms,
+                   down2: jnp.ndarray, upv: jnp.ndarray,
+                   downv: jnp.ndarray, up2v: jnp.ndarray,
+                   down2v: jnp.ndarray, aggs: _AggPerms,
                    pair_idx: jnp.ndarray, use_war):
     """Fat-tree AR / weighted-AR: the pair split runs over the path
     (= core) axis; capacity/queue per path compose stage A (leaf↔agg,
     via the path→agg map) with stage B (pod↔core) for cross-pod pairs.
     Mirrors `FluidFabric._pair_fractions_fat_tree` + `_step_fat_tree`
-    operation for operation."""
+    operation for operation; the `*v` operands are the routing-visible
+    (reaction-lagged) capacities — JSQ scores, weights, and remote
+    weights come from them while delivery stays physical."""
     P, L, A = cfg.n_planes, cfg.n_leaves, cfg.n_aggs
     J, cpa = cfg.n_paths, cfg.cores_per_agg
     pods, lpp = cfg.n_pods, cfg.leaves_per_pod
     aj, pol = _ft_maps(cfg)
     cross = (pol[:, None] != pol[None, :])[None, :, :, None]
-    upJ = up[:, :, aj]                                    # (P, L, J)
-    dnJ = down[:, aj, :]                                  # (P, J, L)
+    upJ = upv[:, :, aj]                                   # (P, L, J)
+    dnJ = downv[:, aj, :]                                 # (P, J, L)
     capA = jnp.minimum(upJ[:, :, None, :],
                        dnJ.transpose(0, 2, 1)[:, None, :, :])
-    up2L = up2[:, pol, :]                                 # (P, L, J)
-    dn2L = down2[:, pol, :]
+    up2L = up2v[:, pol, :]                                # (P, L, J)
+    dn2L = down2v[:, pol, :]
     capB = jnp.minimum(up2L[:, :, None, :], dn2L[:, None, :, :])
     cap = jnp.where(cross, jnp.minimum(capA, capB), capA)
     qA = (carry.q_up[:, :, aj][:, :, None, :] +
@@ -731,7 +766,18 @@ def _route_pair_ft(cfg: JxConfig, carry: SimCarry,
     path_scale = (pair * scale_pair).sum(-1).reshape(P, L * L)
     through = fabric_rate * path_scale[:, pair_idx].T
     qmean = (pair * q).sum(-1).reshape(P, L * L)[:, pair_idx].T
-    return loadA_up, loadA_dn, loadB_up, loadB_dn, through, qmean
+    if not cfg.react:
+        return loadA_up, loadA_dn, loadB_up, loadB_dn, through, qmean
+    # physical per-pair path capacity (the visible `cap` above steered
+    # the split; a dead *physical* path blackholes what landed on it)
+    capA_p = jnp.minimum(
+        up[:, :, aj][:, :, None, :],
+        down[:, aj, :].transpose(0, 2, 1)[:, None, :, :])
+    capB_p = jnp.minimum(up2[:, pol, :][:, :, None, :],
+                         down2[:, pol, :][:, None, :, :])
+    cap_p = jnp.where(cross, jnp.minimum(capA_p, capB_p), capA_p)
+    bh = (rate_pair[..., None] * pair * (cap_p <= _EPS)).sum()
+    return loadA_up, loadA_dn, loadB_up, loadB_dn, through, qmean, bh
 
 
 def _route_ecmp_ft(cfg: JxConfig, carry: SimCarry,
@@ -804,7 +850,15 @@ def _route_ecmp_ft(cfg: JxConfig, carry: SimCarry,
     qB = (carry.q2_up[p_iota, pod_s[:, None], assign] +
           carry.q2_down[p_iota, pod_d[:, None], assign])
     qmean = qA + jnp.where(cross, qB, 0.0)
-    return loadA_up, loadA_dn, loadB_up, loadB_dn, through, qmean
+    if not cfg.react:
+        return loadA_up, loadA_dn, loadB_up, loadB_dn, through, qmean
+    capAf = jnp.minimum(up[p_iota, fb.src_leaf[:, None], a_of],
+                        down[p_iota, a_of, fb.dst_leaf[:, None]])
+    capBf = jnp.minimum(up2[p_iota, pod_s[:, None], assign],
+                        down2[p_iota, pod_d[:, None], assign])
+    capF = jnp.where(cross, jnp.minimum(capAf, capBf), capAf)
+    bh = (fabric_rate * (capF <= _EPS)).sum()
+    return loadA_up, loadA_dn, loadB_up, loadB_dn, through, qmean, bh
 
 
 def _slot_step(cfg: JxConfig, fb: FlowBatch, pair_idx: jnp.ndarray,
@@ -812,6 +866,8 @@ def _slot_step(cfg: JxConfig, fb: FlowBatch, pair_idx: jnp.ndarray,
                seg_up: jnp.ndarray, seg_down: jnp.ndarray,
                seg_acc: jnp.ndarray, seg_up2: jnp.ndarray,
                seg_down2: jnp.ndarray, seg_dem: jnp.ndarray,
+               seg_vup: jnp.ndarray, seg_vdown: jnp.ndarray,
+               seg_vup2: jnp.ndarray, seg_vdown2: jnp.ndarray,
                stack: Optional[StackIdx],
                load_fn: Callable, carry: SimCarry, xs):
     # timelines are piecewise-constant, so the scan carries only the
@@ -822,6 +878,17 @@ def _slot_step(cfg: JxConfig, fb: FlowBatch, pair_idx: jnp.ndarray,
     acc = (seg_acc[seg] * cfg.access_cap).T               # (H, P)
     up2 = seg_up2[seg] * cfg.core_cap                     # (P, pods, C)
     down2 = seg_down2[seg] * cfg.core_cap
+    if cfg.react:
+        # routing-visible (detection-lagged) fabric view; access never
+        # lags (NIC probes see host faults directly)
+        upv = seg_vup[seg] * cfg.uplink_cap
+        downv = seg_vdown[seg] * cfg.uplink_cap
+        up2v = seg_vup2[seg] * cfg.core_cap
+        down2v = seg_vdown2[seg] * cfg.core_cap
+    else:
+        # dead operands: routing sees physical truth, the traced
+        # program is identical to the pre-reaction engine
+        upv, downv, up2v, down2v = up, down, up2, down2
 
     demand = jnp.where(carry.done | (t < fb.start_slot), 0.0, fb.demand)
     if cfg.n_phases:
@@ -845,13 +912,14 @@ def _slot_step(cfg: JxConfig, fb: FlowBatch, pair_idx: jnp.ndarray,
     if cfg.kind == "fat_tree":
         branches = [
             partial(_route_pair_ft, cfg, carry, fabric_rate, up, down,
-                    up2, down2, aggs, pair_idx, use_war),
+                    up2, down2, upv, downv, up2v, down2v, aggs,
+                    pair_idx, use_war),
             partial(_route_ecmp_ft, cfg, carry, fabric_rate, up, down,
                     up2, down2, fb, assign_segments, load_fn, seg)]
     else:
         branches = [
             partial(_route_pair, cfg, carry, fabric_rate, up, down,
-                    aggs, pair_idx, use_war),
+                    upv, downv, aggs, pair_idx, use_war),
             partial(_route_ecmp, cfg, carry, fabric_rate, up, down,
                     fb, assign_segments, load_fn, seg)]
     if stack is None:
@@ -863,6 +931,8 @@ def _slot_step(cfg: JxConfig, fb: FlowBatch, pair_idx: jnp.ndarray,
         routed = branches[stack.route]()
     else:
         routed = jax.lax.switch(stack.route, branches)
+    bh = routed[-1] if cfg.react else None
+    routed = routed[:-1] if cfg.react else routed
     if cfg.kind == "fat_tree":
         load_up, load_down, loadB_up, loadB_dn, through, qmean = routed
     else:
@@ -940,8 +1010,11 @@ def _slot_step(cfg: JxConfig, fb: FlowBatch, pair_idx: jnp.ndarray,
         q_up=q_up, q_down=q_down, q2_up=q2_up, q2_down=q2_down,
         nic=nic, remaining=remaining, done=done, completion=completion,
         goodput_sum=goodput_sum, util_up=util)
+    extras = (bh,) if cfg.react else ()
     if not cfg.trace.enabled:
-        return new_carry, achieved.sum()
+        if not cfg.react:
+            return new_carry, achieved.sum()
+        return new_carry, (achieved.sum(),) + extras
     # Trace outputs ride the scan's stacked ys (never the donated
     # carry); decimation happens in `_simulate`.  Padded flows offer
     # zero, so their host_bw contribution is exactly zero and the
@@ -955,12 +1028,13 @@ def _slot_step(cfg: JxConfig, fb: FlowBatch, pair_idx: jnp.ndarray,
         "ecn": lambda: ecn,
         "eligible": lambda: nic.eligible,
     }
-    return new_carry, ((achieved.sum(),) +
+    return new_carry, ((achieved.sum(),) + extras +
                        tuple(sig[f]() for f in cfg.trace.active_fields()))
 
 
 def _simulate(cfg: JxConfig, fb: FlowBatch, seg_up, seg_down, seg_acc,
-              seg_up2, seg_down2, seg_dem, assign_segments, aggs, seg_id,
+              seg_up2, seg_down2, seg_dem, seg_vup, seg_vdown, seg_vup2,
+              seg_vdown2, assign_segments, aggs, seg_id,
               stack=None, carry0=None, ecmp_table=None, uid=None):
     if carry0 is None:
         carry0 = init_carry(fb, cfg)
@@ -977,12 +1051,21 @@ def _simulate(cfg: JxConfig, fb: FlowBatch, seg_up, seg_down, seg_acc,
                    jnp.asarray(seg_up), jnp.asarray(seg_down),
                    jnp.asarray(seg_acc), jnp.asarray(seg_up2),
                    jnp.asarray(seg_down2), jnp.asarray(seg_dem),
+                   jnp.asarray(seg_vup), jnp.asarray(seg_vdown),
+                   jnp.asarray(seg_vup2), jnp.asarray(seg_vdown2),
                    stack, load_fn)
     carry, ys = jax.lax.scan(step, carry0, xs)
-    if cfg.trace.enabled:
-        # strided slice inside the jitted program: slot set matches the
-        # numpy loop's `t % every == 0`
-        totals, tail = ys[0], tuple(y[::cfg.trace.every] for y in ys[1:])
+    # ys layout: raw scalar (no trace, no react) | tuple of
+    # (total, [blackhole], *trace-fields) — blackhole stays full-rate
+    # (T,), trace fields decimate by trace.every
+    bh = ()
+    if cfg.trace.enabled or cfg.react:
+        totals = ys[0]
+        rest = ys[1:]
+        if cfg.react:
+            bh = (rest[0],)
+            rest = rest[1:]
+        tail = tuple(y[::cfg.trace.every] for y in rest)
     else:
         totals, tail = ys, ()
     r = cfg.record_every
@@ -990,18 +1073,20 @@ def _simulate(cfg: JxConfig, fb: FlowBatch, seg_up, seg_down, seg_acc,
     w0 = int(n_rec * cfg.warmup_frac)
     frames = (n_rec - w0) if n_rec > w0 else n_rec
     return (carry.goodput_sum / frames, carry.completion, totals,
-            carry.util_up) + tail
+            carry.util_up) + bh + tail
 
 
 def _simulate_mb(cfg: JxConfig, stack: StackIdx, carry0: SimCarry,
                  fb: FlowBatch, seg_up, seg_down, seg_acc, seg_up2,
-                 seg_down2, seg_dem, assign_segments, aggs, uid, seg_id,
+                 seg_down2, seg_dem, seg_vup, seg_vdown, seg_vup2,
+                 seg_vdown2, assign_segments, aggs, uid, seg_id,
                  ecmp_table):
     """Megabatch element: traced branch dispatch + donated carry.  Every
     argument between `stack` and `seg_id` (inclusive) is vmapped;
     `ecmp_table` is batch-constant (the deduplicated ECMP plan table)."""
     return _simulate(cfg, fb, seg_up, seg_down, seg_acc, seg_up2,
-                     seg_down2, seg_dem, assign_segments, aggs, seg_id,
+                     seg_down2, seg_dem, seg_vup, seg_vdown, seg_vup2,
+                     seg_vdown2, assign_segments, aggs, seg_id,
                      stack=stack, carry0=carry0, ecmp_table=ecmp_table,
                      uid=uid)
 
@@ -1019,7 +1104,7 @@ def _jitted(cfg: JxConfig, batched: bool, n_shards: int = 1):
     if not batched:
         fn = jax.jit(fn)
     else:
-        fn = jax.vmap(fn, in_axes=(0,) * 9 + (None,))
+        fn = jax.vmap(fn, in_axes=(0,) * 13 + (None,))
         if n_shards == 1:
             fn = jax.jit(fn)
         else:
@@ -1028,7 +1113,7 @@ def _jitted(cfg: JxConfig, batched: bool, n_shards: int = 1):
             # launch runs its per-device shards on parallel threads —
             # the single-process equivalent of the NumPy backend's
             # process pool
-            fn = jax.pmap(fn, in_axes=(0,) * 9 + (None,))
+            fn = jax.pmap(fn, in_axes=(0,) * 13 + (None,))
     _JIT_CACHE[key] = fn
     return fn
 
@@ -1052,15 +1137,16 @@ def _jitted_mb(cfg: JxConfig, n_shards: int = 1,
         return fn
     if lanes is None:
         body = jax.vmap(partial(_simulate_mb, cfg),
-                        in_axes=(0,) * 13 + (None,))
+                        in_axes=(0,) * 17 + (None,))
     else:
         stack_axes = StackIdx(route=None, is_war=0, nic=0, is_esr=0)
         v = jax.vmap(partial(_simulate_mb, cfg),
-                     in_axes=(stack_axes,) + (0,) * 12 + (None,))
+                     in_axes=(stack_axes,) + (0,) * 16 + (None,))
         tm = jax.tree_util.tree_map
 
         def body(stack, carry0, fb, up, down, acc, up2, down2, dem,
-                 assign, aggs, uid, seg_id, table):
+                 vup, vdown, vup2, vdown2, assign, aggs, uid, seg_id,
+                 table):
             outs, off = [], 0
             for route, n in lanes:
                 def cut(x, off=off, n=n):
@@ -1068,7 +1154,8 @@ def _jitted_mb(cfg: JxConfig, n_shards: int = 1,
                 st = tm(cut, stack)._replace(route=route)
                 outs.append(v(st, tm(cut, carry0), tm(cut, fb), cut(up),
                               cut(down), cut(acc), cut(up2), cut(down2),
-                              cut(dem), cut(assign), tm(cut, aggs),
+                              cut(dem), cut(vup), cut(vdown), cut(vup2),
+                              cut(vdown2), cut(assign), tm(cut, aggs),
                               cut(uid), cut(seg_id), table))
                 off += n
             return tuple(jnp.concatenate(parts, 0)
@@ -1077,7 +1164,7 @@ def _jitted_mb(cfg: JxConfig, n_shards: int = 1,
     if n_shards == 1:
         fn = jax.jit(body, donate_argnums=(1,))
     else:
-        fn = jax.pmap(body, in_axes=(0,) * 13 + (None,),
+        fn = jax.pmap(body, in_axes=(0,) * 17 + (None,),
                       donate_argnums=(1,))
     _JIT_CACHE[key] = fn
     return fn
@@ -1137,7 +1224,13 @@ def _warn_f32_bytes(name: str, fa: FlowArrays, stacklevel: int = 3
 
 def _prepared(compiled
               ) -> Tuple[JxConfig, FlowArrays, FaultTimeline,
-                         Optional[np.ndarray]]:
+                         Optional[np.ndarray],
+                         Optional[FaultTimeline]]:
+    """Returns `(cfg, flow arrays, physical timeline, phase mult,
+    visible timeline)` — the visible timeline is the reaction-lagged
+    view (None when reaction is off, or the physical timeline itself
+    when the reaction's total lag is zero)."""
+    from repro.scenarios.spec import reaction_lag
     spec = compiled.spec
     cfg = JxConfig.from_sim(compiled.cfg, spec.topo)
     fa = FlowArrays.build(compiled.flows, compiled.topo)
@@ -1145,7 +1238,14 @@ def _prepared(compiled
     pm = getattr(compiled, "phase_mult", None)
     if pm is not None:
         cfg = replace(cfg, n_phases=int(pm.shape[1]))
-    return cfg, fa, compile_fault_timeline(spec), pm
+    tl = compile_fault_timeline(spec)
+    vtl = None
+    r = spec.reaction
+    if r is not None and r.enabled:
+        cfg = replace(cfg, react=True)
+        lag = reaction_lag(r, spec.sim.routing)
+        vtl = lagged_timeline(tl, lag) if lag > 0 else tl
+    return cfg, fa, tl, pm, vtl
 
 
 def phase_boundaries(pm: Optional[np.ndarray]) -> List[int]:
@@ -1178,13 +1278,17 @@ def _seg_id(boundaries, slots: int) -> np.ndarray:
 
 
 def _assign_for(cfg: JxConfig, fa: FlowArrays, tl: FaultTimeline,
-                seed: int, boundaries) -> np.ndarray:
+                seed: int, boundaries,
+                vtl: Optional[FaultTimeline] = None,
+                mode: str = "instant",
+                backup: Optional[np.ndarray] = None) -> np.ndarray:
     if cfg.routing == "ecmp":
         return ecmp_assign_segments(
             fa.src_leaf, fa.dst_leaf, tl, seed, cfg.n_paths, boundaries,
             uplink_cap=cfg.uplink_cap, core_cap=cfg.core_cap,
             cores_per_agg=cfg.cores_per_agg,
-            leaves_per_pod=cfg.leaves_per_pod)
+            leaves_per_pod=cfg.leaves_per_pod,
+            vis_timeline=vtl, mode=mode, backup=backup)
     return np.zeros((1, len(fa), cfg.n_planes), np.int32)
 
 
@@ -1201,6 +1305,21 @@ def _seg_caps(tl: FaultTimeline, boundaries
     P = tl.up.shape[1]
     dummy = np.ones((len(b), P, 1, 1))
     return tl.up[b], tl.down[b], tl.access[b], dummy, dummy
+
+
+def _vis_seg_caps(vtl: Optional[FaultTimeline], boundaries,
+                  n_planes: int) -> Tuple[np.ndarray, ...]:
+    """The four routing-visible fabric snapshots (up, down, up2, down2);
+    inert `(n_seg, P, 1, 1)` ones when reaction is off (`cfg.react=False`
+    never reads them — the operands are dead)."""
+    b = list(boundaries)
+    if vtl is None:
+        dummy = np.ones((len(b), n_planes, 1, 1))
+        return dummy, dummy, dummy, dummy
+    if vtl.up2 is not None:
+        return vtl.up[b], vtl.down[b], vtl.up2[b], vtl.down2[b]
+    dummy = np.ones((len(b), n_planes, 1, 1))
+    return vtl.up[b], vtl.down[b], dummy, dummy
 
 
 def _masked_perm_matrix(keys: np.ndarray, mask: np.ndarray,
@@ -1336,32 +1455,44 @@ def _aggs_for(cfg: JxConfig, fa: FlowArrays, assign: np.ndarray,
 def _wrap(cfg: JxConfig, fa: FlowArrays, out) -> JxSimResult:
     mean_goodput, completion, totals, util = \
         (np.asarray(o) for o in out[:4])
+    idx = 4
+    bh = None
+    if cfg.react:
+        bh = np.asarray(out[idx])
+        idx += 1
     trace = None
     if cfg.trace.enabled:
         trace = {"slot": cfg.trace.recorded_slots(cfg.slots)}
         trace.update((name, np.asarray(arr)) for name, arr
-                     in zip(cfg.trace.active_fields(), out[4:]))
+                     in zip(cfg.trace.active_fields(), out[idx:]))
     return JxSimResult(
         mean_goodput=mean_goodput,
         completion_slot=completion.astype(np.int64),
         total_goodput=totals[::cfg.record_every],
         util_up_last=util, groups=fa.groups, group_of=fa.group,
-        slot_us=cfg.slot_us, trace=trace)
+        slot_us=cfg.slot_us, trace=trace, blackhole_timeline=bh)
 
 
 def run_compiled(compiled) -> JxSimResult:
     """Simulate one `CompiledScenario` on the JAX backend."""
     global _BACKEND_USED
     _BACKEND_USED = True
-    cfg, fa, tl, pm = _prepared(compiled)
-    boundaries = tuple(sorted(set(tl.change_slots())
-                              | set(phase_boundaries(pm))))
-    segs = _assign_for(cfg, fa, tl, compiled.cfg.seed, boundaries)
+    cfg, fa, tl, pm, vtl = _prepared(compiled)
+    boundaries = set(tl.change_slots()) | set(phase_boundaries(pm))
+    if vtl is not None:
+        boundaries |= set(vtl.change_slots())
+    boundaries = tuple(sorted(boundaries))
+    r = compiled.spec.reaction
+    segs = _assign_for(cfg, fa, tl, compiled.cfg.seed, boundaries,
+                       vtl=vtl, mode=r.mode if cfg.react else "instant",
+                       backup=getattr(compiled, "backup", None))
     aggs = _aggs_for(cfg, fa, segs, _agg_widths(cfg, fa, segs))
     up, down, acc, up2, down2 = _seg_caps(tl, boundaries)
+    vup, vdown, vup2, vdown2 = _vis_seg_caps(
+        vtl if cfg.react else None, boundaries, cfg.n_planes)
     args = (FlowBatch.from_arrays(fa), up, down, acc, up2, down2,
-            _seg_dem(pm, boundaries), segs, aggs,
-            _seg_id(boundaries, cfg.slots))
+            _seg_dem(pm, boundaries), vup, vdown, vup2, vdown2, segs,
+            aggs, _seg_id(boundaries, cfg.slots))
     _record_launch("group", (cfg, False, 1), args)
     out = _jitted(cfg, False)(*args)
     return _wrap(cfg, fa, out)
@@ -1382,35 +1513,47 @@ def dispatch_compiled_batch(points: List):
     prepared = [_prepared(c) for c in points]
     cfg = prepared[0][0]
     F = len(prepared[0][1])
-    for c, (cfg_i, fa_i, _, _) in zip(points, prepared):
+    for c, (cfg_i, fa_i, _, _, _) in zip(points, prepared):
         if cfg_i != cfg or len(fa_i) != F:
             raise ValueError(
                 "batched points must be structurally identical "
                 f"(got {cfg_i} with {len(fa_i)} flows vs {cfg} with {F}); "
                 "group grid points by (scenario, routing, nic) first")
     # shared segment boundaries: union of capacity-change AND
-    # phase-change slots, so every element's ECMP re-hash replay sees
-    # each capacity change exactly once and the demand timeline is
-    # piecewise-constant per segment
+    # phase-change slots (and visible-capacity changes under reaction),
+    # so every element's ECMP re-hash replay sees each capacity change
+    # exactly once and the demand timeline is piecewise-constant per
+    # segment
     boundaries = tuple(sorted(
-        {b for _, _, tl, _ in prepared for b in tl.change_slots()}
-        | {b for _, _, _, pm in prepared for b in phase_boundaries(pm)}))
-    assigns = [_assign_for(cfg, fa, tl, c.cfg.seed, boundaries)
-               for c, (_, fa, tl, _) in zip(points, prepared)]
+        {b for _, _, tl, _, _ in prepared for b in tl.change_slots()}
+        | {b for _, _, _, pm, _ in prepared
+           for b in phase_boundaries(pm)}
+        | {b for _, _, _, _, vtl in prepared if vtl is not None
+           for b in vtl.change_slots()}))
+    assigns = [
+        _assign_for(
+            cfg, fa, tl, c.cfg.seed, boundaries, vtl=vtl,
+            mode=(c.spec.reaction.mode if cfg.react else "instant"),
+            backup=getattr(c, "backup", None))
+        for c, (_, fa, tl, _, vtl) in zip(points, prepared)]
     widths = tuple(map(max, zip(*(
         _agg_widths(cfg, fa, a)
-        for (_, fa, _, _), a in zip(prepared, assigns)))))
+        for (_, fa, _, _, _), a in zip(prepared, assigns)))))
     aggs = [_aggs_for(cfg, fa, a, widths)
-            for (_, fa, _, _), a in zip(prepared, assigns)]
-    fb = FlowBatch.stack([fa for _, fa, _, _ in prepared])
-    caps = [_seg_caps(tl, boundaries) for _, _, tl, _ in prepared]
+            for (_, fa, _, _, _), a in zip(prepared, assigns)]
+    fb = FlowBatch.stack([fa for _, fa, _, _, _ in prepared])
+    caps = [_seg_caps(tl, boundaries) for _, _, tl, _, _ in prepared]
     up, down, acc, up2, down2 = (np.stack(col) for col in zip(*caps))
+    vcaps = [_vis_seg_caps(vtl if cfg.react else None, boundaries,
+                           cfg.n_planes)
+             for _, _, _, _, vtl in prepared]
+    vup, vdown, vup2, vdown2 = (np.stack(col) for col in zip(*vcaps))
     dem = np.stack([_seg_dem(pm, boundaries)
-                    for _, _, _, pm in prepared])
+                    for _, _, _, pm, _ in prepared])
     seg_id = _seg_id(boundaries, cfg.slots)
     aggs_b = _AggPerms(*(np.stack(col) for col in zip(*aggs)))
-    args = [fb, up, down, acc, up2, down2, dem, np.stack(assigns),
-            aggs_b]
+    args = [fb, up, down, acc, up2, down2, dem, vup, vdown, vup2,
+            vdown2, np.stack(assigns), aggs_b]
     B = len(points)
     n_dev = len(jax.devices())
     shards = min(B, n_dev) if n_dev > 1 and B > 1 else 1
@@ -1431,7 +1574,7 @@ def dispatch_compiled_batch(points: List):
     # keep only what finalize needs — dropping the dense per-point
     # timelines here frees O(B*T*fabric) host memory while the batch
     # computes
-    return cfg, [fa for _, fa, _, _ in prepared], shards, out
+    return cfg, [fa for _, fa, _, _, _ in prepared], shards, out
 
 
 def finalize_batch(handle) -> List[JxSimResult]:

@@ -70,7 +70,8 @@ def _apply_fault(t: int, i: int, f: FaultSpec, up: np.ndarray,
                  down: np.ndarray, access: np.ndarray,
                  unit_rel: float, workload_seed: int,
                  up2: Optional[np.ndarray] = None,
-                 down2: Optional[np.ndarray] = None) -> None:
+                 down2: Optional[np.ndarray] = None,
+                 sched: Sequence = ()) -> None:
     """Mutate multiplier arrays in place with fault `f`'s slot-`t` effect.
     `unit_rel` is one discrete stage-A link as a multiplier
     (link_cap/uplink_cap); stage-B core links are whole (unit 1.0).
@@ -186,6 +187,41 @@ def _apply_fault(t: int, i: int, f: FaultSpec, up: np.ndarray,
             for p in fault_planes(f, P):
                 up2[p, f.pod, f.core] = 1.0
                 down2[p, f.pod, f.core] = 1.0
+    elif f.kind == "poisson_flap":
+        # `sched` is the precomputed (down, up, plane, link) table from
+        # `scenarios.compile.poisson_flap_schedule` — mutation for
+        # mutation with `apply_poisson_flap`: restores first (full-cap
+        # reset), then kills multiply
+        L, A = up.shape[1], up.shape[2]
+        n_stage_a = L * A
+        C = up2.shape[2] if up2 is not None else 0
+
+        def place(link):
+            if up2 is None or link < n_stage_a:
+                return "a", link // A, link % A
+            rem = link - n_stage_a
+            return "b", rem // C, rem % C
+
+        for dn, upslot, p, link in sched:
+            if t != upslot:
+                continue
+            stage, x, y = place(link)
+            if stage == "a":
+                up[p, x, y] = 1.0
+                down[p, y, x] = 1.0
+            else:
+                up2[p, x, y] = 1.0
+                down2[p, x, y] = 1.0
+        for dn, upslot, p, link in sched:
+            if t != dn:
+                continue
+            stage, x, y = place(link)
+            if stage == "a":
+                up[p, x, y] *= (1.0 - f.frac)
+                down[p, y, x] *= (1.0 - f.frac)
+            else:
+                up2[p, x, y] *= (1.0 - f.frac)
+                down2[p, x, y] *= (1.0 - f.frac)
     else:                                            # pragma: no cover
         raise ValueError(f"unknown fault kind {f.kind!r}")
 
@@ -210,6 +246,15 @@ def compile_fault_timeline(spec: ScenarioSpec) -> FaultTimeline:
     up2 = np.ones((P, topo.n_pods, topo.n_cores)) if fat else None
     down2 = np.ones((P, topo.n_pods, topo.n_cores)) if fat else None
     unit_rel = topo.link_cap / topo.uplink_cap    # one discrete link
+    # deterministic rebuild of each poisson_flap schedule (same derived
+    # seed as the events-closure path); lazy import keeps the module
+    # free of a scenarios.compile dependency at import time
+    scheds = {}
+    if any(f.kind == "poisson_flap" for f in spec.faults):
+        from repro.scenarios.compile import poisson_flap_schedule
+        scheds = {i: poisson_flap_schedule(spec, i)
+                  for i, f in enumerate(spec.faults)
+                  if f.kind == "poisson_flap"}
     out_up = np.empty((T, P, L, S))
     out_down = np.empty((T, P, S, L))
     out_access = np.empty((T, P, H))
@@ -218,7 +263,8 @@ def compile_fault_timeline(spec: ScenarioSpec) -> FaultTimeline:
     for t in range(T):
         for i, f in enumerate(spec.faults):
             _apply_fault(t, i, f, up, down, access, unit_rel,
-                         spec.workload_seed, up2=up2, down2=down2)
+                         spec.workload_seed, up2=up2, down2=down2,
+                         sched=scheds.get(i, ()))
         out_up[t] = up
         out_down[t] = down
         out_access[t] = access
@@ -227,6 +273,26 @@ def compile_fault_timeline(spec: ScenarioSpec) -> FaultTimeline:
             out_down2[t] = down2
     return FaultTimeline(up=out_up, down=out_down, access=out_access,
                          up2=out_up2, down2=out_down2)
+
+
+def lagged_timeline(tl: FaultTimeline, lag: int) -> FaultTimeline:
+    """The routing-*visible* twin of a physical timeline under a failure
+    reaction with `lag` slots of detection (+convergence) delay: fabric
+    stages shift right by `lag` (pristine 1.0 for t < lag); access stays
+    all-ones because NIC probes observe host access directly — reaction
+    lag applies to fabric reroute only, and an all-ones access lane keeps
+    `change_slots()` boundaries purely fabric-driven."""
+
+    def shift(a):
+        if a is None:
+            return None
+        out = np.ones_like(a)
+        out[lag:] = a[:a.shape[0] - lag]
+        return out
+
+    return FaultTimeline(up=shift(tl.up), down=shift(tl.down),
+                         access=np.ones_like(tl.access),
+                         up2=shift(tl.up2), down2=shift(tl.down2))
 
 
 # ---------------------------------------------------------------------------
@@ -270,7 +336,11 @@ def ecmp_assign_segments(src_leaf: np.ndarray, dst_leaf: np.ndarray,
                          uplink_cap: float = 1.0,
                          core_cap: float = 1.0,
                          cores_per_agg: int = 1,
-                         leaves_per_pod: int = 0) -> np.ndarray:
+                         leaves_per_pod: int = 0,
+                         vis_timeline: Optional[FaultTimeline] = None,
+                         mode: str = "instant",
+                         backup: Optional[np.ndarray] = None
+                         ) -> np.ndarray:
     """Replay `run_sim`'s ECMP path assignment (initial hash + dead-path
     re-hash) against the static capacity timeline.
 
@@ -280,9 +350,18 @@ def ecmp_assign_segments(src_leaf: np.ndarray, dst_leaf: np.ndarray,
     Replaying the check at each capacity-change boundary therefore
     consumes the RNG identically and yields the exact per-slot assignment
     as a step function over the boundary segments: (n_seg, F, P) int.
-    """
-    from repro.netsim.sim import rehash_dead_assign
 
+    Failure reaction: `vis_timeline` (the `lagged_timeline` view) makes
+    the dead-path check steer against what the control plane has
+    *detected* rather than physical truth — boundaries where only the
+    physical fabric changed leave the visible caps (and hence the RNG)
+    untouched, so the per-boundary replay still matches the per-slot
+    check exactly.  `mode='backup'` swaps the re-randomizing rehash for
+    the RNG-free precomputed `backup` successor walk (the initial hash
+    draw is still consumed, matching `run_sim`)."""
+    from repro.netsim.sim import backup_reassign, rehash_dead_assign
+
+    check_tl = timeline if vis_timeline is None else vis_timeline
     F = src_leaf.shape[0]
     P = timeline.up.shape[1]
     rng = np.random.default_rng(seed)
@@ -290,9 +369,12 @@ def ecmp_assign_segments(src_leaf: np.ndarray, dst_leaf: np.ndarray,
     segments = []
     for b in boundaries:
         cap = timeline_path_capacity(
-            timeline, b, src_leaf, dst_leaf, uplink_cap=uplink_cap,
+            check_tl, b, src_leaf, dst_leaf, uplink_cap=uplink_cap,
             core_cap=core_cap, cores_per_agg=cores_per_agg,
             leaves_per_pod=leaves_per_pod)
-        assign = rehash_dead_assign(cap > 1e-12, assign, rng, n_paths)
-        segments.append(assign.copy())
+        if mode == "backup":
+            assign = backup_reassign(cap > 1e-12, assign, backup)
+        else:
+            assign = rehash_dead_assign(cap > 1e-12, assign, rng, n_paths)
+        segments.append(np.asarray(assign).copy())
     return np.stack(segments).astype(np.int32)

@@ -44,9 +44,11 @@ import numpy as np
 from repro.netsim.fabric import FlowArrays
 from repro.trace import FLOW_AXIS_FIELDS
 
+from repro.scenarios.spec import reaction_lag
+
 from . import engine
 from .engine import JxConfig, JxSimResult, StackIdx, stack_idx_for
-from .events import compile_fault_timeline
+from .events import compile_fault_timeline, lagged_timeline
 
 
 def _bucket(n: int, lo: int = 1) -> int:
@@ -76,6 +78,9 @@ class _Point:
     assign: Optional[np.ndarray]  # (n_seg, F, P), ECMP points only
     widths: Tuple[int, ...]
     dem: np.ndarray = None        # (n_seg, K) phase-demand snapshots
+    # routing-visible capacity snapshots (4 arrays; inert ones-dummies
+    # when the point's reaction is off)
+    vcaps: Tuple[np.ndarray, ...] = ()
 
 
 def _struct_cfg(compiled) -> JxConfig:
@@ -91,8 +96,10 @@ def _struct_cfg(compiled) -> JxConfig:
     delay = int(sim.sw_lb_delay_ms * 1000 / sim.slot_us)
     pm = getattr(compiled, "phase_mult", None)
     n_phases = _bucket(pm.shape[1]) if pm is not None else 0
+    r = compiled.spec.reaction
+    react = r is not None and r.enabled
     return replace(base, routing="*", nic="*", sw_lb_delay_slots=delay,
-                   n_phases=n_phases)
+                   n_phases=n_phases, react=react)
 
 
 def _prepare(index: int, compiled, caches: Dict) -> _Point:
@@ -109,24 +116,40 @@ def _prepare(index: int, compiled, caches: Dict) -> _Point:
     # memo key folds them in ((0,) for every non-schedule point —
     # existing sharing is untouched)
     pb = tuple(engine.phase_boundaries(pm))
+    r = spec.reaction
+    react = cfg.react
+    lag = reaction_lag(r, spec.sim.routing) if react else None
+    # the reaction lag shapes both the visible snapshots and the
+    # boundary set, so it joins the timeline memo key (None when the
+    # reaction is off — existing sharing untouched)
     tl_key = (spec.faults, spec.sim.slots, spec.topo, spec.workload_seed,
-              pb)
+              pb, lag)
     cached = caches.get(("tl", tl_key))
     if cached is None:
         tl = compile_fault_timeline(spec)
-        boundaries = tuple(sorted(set(tl.change_slots()) | set(pb)))
-        cached = (tl, boundaries, engine._seg_caps(tl, boundaries))
+        vtl = None
+        if react:
+            vtl = lagged_timeline(tl, lag) if lag > 0 else tl
+        boundaries = set(tl.change_slots()) | set(pb)
+        if vtl is not None:
+            boundaries |= set(vtl.change_slots())
+        boundaries = tuple(sorted(boundaries))
+        cached = (tl, boundaries, engine._seg_caps(tl, boundaries),
+                  engine._vis_seg_caps(vtl, boundaries, cfg.n_planes),
+                  vtl)
         caches[("tl", tl_key)] = cached
-    tl, boundaries, caps = cached
+    tl, boundaries, caps, vcaps, vtl = cached
     routing, nic = spec.sim.routing, spec.sim.nic
+    mode = r.mode if react else "instant"
     assign_key = assign = None
     if routing == "ecmp":
-        assign_key = (fa_key, tl_key, compiled.cfg.seed)
+        assign_key = (fa_key, tl_key, compiled.cfg.seed, mode)
         assign = caches.get(("assign", assign_key))
         if assign is None:
             assign = engine._assign_for(
                 replace(cfg, routing="ecmp"), fa, tl, compiled.cfg.seed,
-                boundaries)
+                boundaries, vtl=vtl, mode=mode,
+                backup=getattr(compiled, "backup", None))
             caches[("assign", assign_key)] = assign
     wkey = ("widths", fa_key, assign_key)
     widths = caches.get(wkey)
@@ -139,7 +162,8 @@ def _prepare(index: int, compiled, caches: Dict) -> _Point:
     return _Point(index=index, cfg=cfg, routing=routing, nic=nic,
                   fa_key=fa_key, tl_key=tl_key, assign_key=assign_key,
                   fa=fa, boundaries=boundaries, caps=caps, assign=assign,
-                  widths=widths, dem=engine._seg_dem(pm, boundaries))
+                  widths=widths, dem=engine._seg_dem(pm, boundaries),
+                  vcaps=vcaps)
 
 
 def _pad_segs(a: np.ndarray, seg_b: int) -> np.ndarray:
@@ -279,6 +303,7 @@ def _dispatch_group(cfg: JxConfig, pts: List[_Point], caches: Dict):
                 _pad_segs(u, seg_b), _pad_segs(d, seg_b),
                 _pad_segs(ac, seg_b), _pad_segs(u2, seg_b),
                 _pad_segs(d2, seg_b),
+                tuple(_pad_segs(v, seg_b) for v in p.vcaps),
                 engine._seg_id(p.boundaries, cfg.slots))
         # phase-demand snapshots: segment-padded like the capacity
         # snapshots, lane-padded with 1.0 to the group's phase bucket
@@ -338,9 +363,13 @@ def _dispatch_group(cfg: JxConfig, pts: List[_Point], caches: Dict):
               np.stack([e["caps"][3] for e in seq]),
               np.stack([e["caps"][4] for e in seq]),
               np.stack([e["dem"] for e in seq]),
+              np.stack([e["caps"][5][0] for e in seq]),
+              np.stack([e["caps"][5][1] for e in seq]),
+              np.stack([e["caps"][5][2] for e in seq]),
+              np.stack([e["caps"][5][3] for e in seq]),
               np.stack([e["assign"] for e in seq]), aggs,
               np.array([e["uid"] for e in seq], np.int32),
-              np.stack([e["caps"][5] for e in seq]))
+              np.stack([e["caps"][6] for e in seq]))
     if shards > 1:
         mapped = jax.tree_util.tree_map(
             lambda a: np.asarray(a).reshape(
@@ -401,10 +430,14 @@ def finalize_group(handle) -> List[JxSimResult]:
         row = [o[b] for o in outs]
         mean_goodput, completion, totals, util = row[:4]
         point_out = [mean_goodput[:F], completion[:F], totals, util]
+        tail = 4
+        if cfg.react:
+            point_out.append(row[tail])       # blackhole timeline (T,)
+            tail += 1
         # trace tail: flow-axis fields carry the bucket padding on axis 1
         # (after time); pad flows are inert, so slicing recovers the
         # unpadded capture exactly
-        for name, arr in zip(cfg.trace.active_fields(), row[4:]):
+        for name, arr in zip(cfg.trace.active_fields(), row[tail:]):
             point_out.append(arr[:, :F] if name in FLOW_AXIS_FIELDS
                              else arr)
         by_index[index] = engine._wrap(cfg, fa, point_out)

@@ -45,6 +45,10 @@ class SimResult:
     group_of: np.ndarray
     slot_us: float
     trace: Optional[Dict[str, np.ndarray]] = None
+    # (slots,) bytes/slot offered onto physically-dead fabric paths —
+    # populated only when a failure-reaction spec is active (None keeps
+    # no-reaction runs byte-identical to the pre-reaction engine)
+    blackhole_timeline: Optional[np.ndarray] = None
 
     def group_mean(self, group: str) -> float:
         gi = self.groups.index(group)
@@ -84,19 +88,63 @@ def rehash_dead_assign(alive: np.ndarray, assign: np.ndarray,
     return assign
 
 
+def backup_reassign(alive: np.ndarray, assign: np.ndarray,
+                    backup: np.ndarray) -> np.ndarray:
+    """Fast-reroute: walk each dead assignment down the precomputed
+    backup chain (`backup[j]` = successor path of j, a single J-cycle —
+    see `topology.backup_path_table`) to the first alive path.  RNG-free
+    and deterministic, so the JAX backend's host-side boundary replay
+    shares this function exactly like `rehash_dead_assign`.
+
+    `alive`: (F, P, J) path liveness as *routing* sees it; `assign`:
+    (F, P).  Entries whose whole path axis is dead keep their
+    assignment (same contract as the re-hash)."""
+    cur = np.take_along_axis(alive, assign[:, :, None], axis=2)[:, :, 0]
+    bad = ~cur & alive.any(-1)
+    if not bad.any():
+        return assign
+    new = assign.copy()
+    for _ in range(alive.shape[-1] - 1):
+        dead_now = ~np.take_along_axis(alive, new[:, :, None],
+                                       axis=2)[:, :, 0]
+        step = bad & dead_now
+        if not step.any():
+            break
+        new = np.where(step, backup[new], new)
+    return np.where(bad, new, assign)
+
+
 def run_sim(topo: Fabric, flows: List[Flow], cfg: SimConfig,
             events: Optional[Callable[[int, Fabric], None]] = None,
             phase_mult: Optional[np.ndarray] = None,
+            reaction=None, vis_topo: Optional[Fabric] = None,
+            vis_events: Optional[Callable[[int, Fabric], None]] = None,
+            backup: Optional[np.ndarray] = None,
             ) -> SimResult:
     """`phase_mult`: optional (slots, K) demand-multiplier timeline; each
     flow's offered demand is scaled by `phase_mult[t, flow.phase]` — the
     schedule-workload lane (lane 0 is the always-1.0 lane by
-    convention)."""
+    convention).
+
+    Failure reaction (`reaction` = a `scenarios.spec.ReactionSpec`):
+    routing steers against `vis_topo`, a second pristine fabric copy
+    that replays `vis_events` lagged by `reaction_lag` slots — so a dead
+    link keeps attracting traffic (tracked per slot in
+    `blackhole_timeline`) until detection (+ convergence, mode='rehash')
+    fires.  ECMP mode='backup' swaps the seeded re-hash for the RNG-free
+    `backup_reassign` chain walk over `backup`.  `reaction=None` leaves
+    every code path bit-identical to the pre-reaction engine."""
+    from repro.scenarios.spec import reaction_lag
     rng = np.random.default_rng(cfg.seed)
     fa = FlowArrays.build(flows, topo)
     F, P, J = len(fa), topo.n_planes, topo.n_paths
+    react = reaction is not None and reaction.enabled
+    lag = reaction_lag(reaction, cfg.routing) if react else 0
+    rt = vis_topo if (react and lag > 0 and vis_topo is not None) \
+        else topo
     fabric = FluidFabric(topo, base_rtt_us=cfg.base_rtt_us,
-                         slot_us=cfg.slot_us)
+                         slot_us=cfg.slot_us,
+                         route_topo=rt if rt is not topo else None)
     nic = NicState(
         mode=cfg.nic, n_flows=F, n_planes=P,
         sw_lb_delay_slots=cfg.sw_lb_delay_slots())
@@ -111,7 +159,11 @@ def run_sim(topo: Fabric, flows: List[Flow], cfg: SimConfig,
     assign = rng.integers(0, J, size=(F, P))
 
     def _rehash_dead(assign):
-        cap = topo.path_capacity(fa.src_leaf, fa.dst_leaf)    # (F, P, J)
+        # liveness as *routing* sees it (rt lags physical under a
+        # reaction spec; identical to physical otherwise)
+        cap = rt.path_capacity(fa.src_leaf, fa.dst_leaf)      # (F, P, J)
+        if react and reaction.mode == "backup":
+            return backup_reassign(cap > 1e-12, assign, backup)
         return rehash_dead_assign(cap > 1e-12, assign, rng, J)
     remaining = fa.bytes_total.copy()
     done = np.zeros(F, bool)
@@ -122,10 +174,15 @@ def run_sim(topo: Fabric, flows: List[Flow], cfg: SimConfig,
                                if tr.enabled else {})
     n_hosts = topo.access.shape[1]
 
+    bh_tl = np.zeros(cfg.slots) if react else None
     rec_g, rec_r = [], []
     for t in range(cfg.slots):
         if events is not None:
             events(t, topo)
+        if rt is not topo and t >= lag and vis_events is not None:
+            # the visible fabric replays the same (pure, seeded) event
+            # closures `lag` slots late
+            vis_events(t - lag, rt)
         demand = np.where(done | (t < fa.start_slot), 0.0, fa.demand)
         if phase_mult is not None:
             demand = demand * phase_mult[t, fa.phase]
@@ -143,6 +200,14 @@ def run_sim(topo: Fabric, flows: List[Flow], cfg: SimConfig,
             pair = fabric.pair_fractions("war" if rw is not None else "ar",
                                          rw)
             frac = pair[:, fa.src_leaf, fa.dst_leaf, :].transpose(1, 0, 2)
+        if react:
+            # black-holed bytes: fabric traffic routed onto paths that
+            # are physically dead (routing hasn't seen the failure yet)
+            dead = topo.path_capacity(fa.src_leaf,
+                                      fa.dst_leaf) <= 1e-12    # (F, P, J)
+            fr = np.where((fa.src_leaf == fa.dst_leaf)[:, None],
+                          0.0, offered)
+            bh_tl[t] = (fr[:, :, None] * frac * dead).sum()
         res = fabric.step(fa, offered, frac, pair=pair)
         # RTT probes: a plane is reachable iff both endpoints' access links
         # on that plane are up (probes run independently of data traffic)
@@ -201,4 +266,5 @@ def run_sim(topo: Fabric, flows: List[Flow], cfg: SimConfig,
         slot_us=cfg.slot_us,
         trace=({"slot": tr.recorded_slots(cfg.slots),
                 **{k: np.asarray(v) for k, v in rec_tr.items()}}
-               if tr.enabled else None))
+               if tr.enabled else None),
+        blackhole_timeline=bh_tl)

@@ -281,6 +281,34 @@ class FatTree:
 Fabric = Union[LeafSpine, FatTree]
 
 
+def backup_path_table(kind: str, n_paths: int,
+                      cores_per_agg: int = 1) -> np.ndarray:
+    """(J,) precomputed fast-reroute successor per path index — the
+    MRC/SRv6-style backup table derived from the topology shape alone
+    (no runtime state), so it compiles once per `Fabric` kind.
+
+    The successor chain must be a single cycle over all J paths:
+    `backup_reassign` walks it until the first alive path, so a chain
+    that partitions into sub-cycles could starve even when alive paths
+    exist elsewhere.
+
+    leaf_spine: next spine, `(j + 1) % S` — any failed (leaf, spine)
+    uplink falls over to the neighboring plane-local spine.
+
+    fat_tree: next agg first.  Core j is served by agg `j // cpa`; a
+    stage-A (leaf, agg) failure takes out that agg's whole core bundle
+    at once, so the useful fallback is a core under the *next* agg
+    (`j + cpa`), preserving the within-agg offset.  The last agg wraps
+    to agg 0 while stepping the offset (`(j % cpa + 1) % cpa`), which
+    stitches the A sub-chains into one full J-cycle."""
+    if kind == "leaf_spine":
+        return ((np.arange(n_paths) + 1) % n_paths).astype(np.int32)
+    j = np.arange(n_paths)
+    cpa = cores_per_agg
+    wrap = j >= n_paths - cpa                 # cores under the last agg
+    return np.where(wrap, (j % cpa + 1) % cpa, j + cpa).astype(np.int32)
+
+
 # ---------------------------------------------------------------------------
 # max-flow as min-cut across stages
 # ---------------------------------------------------------------------------

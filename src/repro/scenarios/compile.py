@@ -14,14 +14,17 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.fault_tolerance import poisson_flaps
 from repro.netsim.fabric import Flow
 from repro.netsim.sim import SimConfig, SimResult, run_sim
-from repro.netsim.topology import Fabric, FatTree, LeafSpine
+from repro.netsim.topology import (Fabric, FatTree, LeafSpine,
+                                   backup_path_table)
 from repro.netsim.workloads import (all2all, bisection_pairs, one_to_many,
                                     ring_neighbors)
 
 from .spec import (FaultSpec, ScenarioSpec, TenantSpec, WorkloadSpec,
-                   fault_planes, fault_transition_slots, flap_phase)
+                   fault_planes, fault_transition_slots, flap_phase,
+                   reaction_lag)
 
 
 @dataclass
@@ -39,6 +42,12 @@ class CompiledScenario:
     # (lane 0 always 1.0) + per-schedule `comms.TrainSchedule` metadata
     phase_mult: Optional[np.ndarray] = None
     schedules: Tuple = ()
+    # failure-reaction lowering (spec.reaction with a non-zero lag):
+    # a second pristine fabric the event closures replay into `lag`
+    # slots late — routing steers against it.  `backup` is the
+    # precomputed fast-reroute successor table (mode='backup').
+    vis_topo: Optional[Fabric] = None
+    backup: Optional[np.ndarray] = None
 
     def run(self, backend: Optional[str] = None):
         """Simulate.  `backend` overrides the spec's `sim.backend`;
@@ -51,8 +60,16 @@ class CompiledScenario:
         if backend != "numpy":
             raise ValueError(
                 f"unknown backend {backend!r}; expected 'numpy' or 'jax'")
-        return run_sim(self.topo, self.flows, self.cfg, events=self.events,
-                       phase_mult=self.phase_mult)
+        if self.spec.reaction is None:
+            # pre-reaction call shape, byte-identical
+            return run_sim(self.topo, self.flows, self.cfg,
+                           events=self.events, phase_mult=self.phase_mult)
+        return run_sim(
+            self.topo, self.flows, self.cfg, events=self.events,
+            phase_mult=self.phase_mult, reaction=self.spec.reaction,
+            vis_topo=self.vis_topo,
+            vis_events=self.events if self.vis_topo is not None else None,
+            backup=self.backup)
 
 
 # ---------------------------------------------------------------------------
@@ -245,6 +262,84 @@ def _flap(t: int, f: FaultSpec, fail, restore) -> None:
         restore()
 
 
+def poisson_flap_schedule(spec: ScenarioSpec, index: int
+                          ) -> Tuple[Tuple[int, int, int, int], ...]:
+    """Slot-level schedule for a kind='poisson_flap' fault: sorted
+    `(down_slot, up_slot, plane, link)` rows.  The §6.6 MTBF methodology
+    (`core.fault_tolerance.poisson_flaps`) draws per-link exponential
+    inter-arrivals so the *fleet* (every fabric link on every selected
+    plane) flaps `flaps_per_min` times per minute; draws are seeded by
+    `(workload_seed, 6007, fault_index)` so the event-closure path and
+    the JAX timeline compiler replay the identical schedule.
+
+    `link` indexes leaf–spine uplinks row-major on leaf_spine and, on
+    fat_tree, leaf–agg links followed by pod–core links (the same decode
+    as random_fail's exact-k draws).  `up_slot = down_slot + down_slots`
+    exactly — duration converts through whole slots, so no float
+    boundary can disagree between backends."""
+    f = spec.faults[index]
+    topo = spec.topo
+    planes = list(fault_planes(f, topo.n_planes))
+    if topo.kind == "fat_tree":
+        n_links = (topo.n_leaves * topo.n_aggs
+                   + topo.n_pods * topo.n_cores)
+    else:
+        n_links = topo.n_leaves * topo.n_spines
+    slot_s = spec.sim.slot_us * 1e-6
+    stop = spec.sim.slots if f.stop_slot is None \
+        else min(f.stop_slot, spec.sim.slots)
+    window = stop - f.start_slot
+    if window <= 0:
+        return ()
+    rng = np.random.default_rng((spec.workload_seed, 6007, index))
+    evs = poisson_flaps(rng, len(planes) * n_links, f.flaps_per_min,
+                        duration_s=f.down_slots * slot_s,
+                        horizon_s=window * slot_s)
+    out = []
+    for ev in evs:
+        dn = f.start_slot + int(ev.t_down // slot_s)
+        out.append((dn, dn + f.down_slots,
+                    planes[ev.link // n_links], ev.link % n_links))
+    return tuple(sorted(out))
+
+
+def apply_poisson_flap(t: int, f: FaultSpec, sched, topo: Fabric) -> None:
+    """Apply one slot of a poisson_flap schedule to a runtime fabric.
+    Restores run before kills so a back-to-back flap re-kills; schedule
+    order is fixed, so both backends mutate identically.  Restore sets
+    the link back to its full capacity (link_flap semantics) even if
+    outages overlapped."""
+    L = topo.n_leaves
+    A = topo.n_aggs if topo.kind == "fat_tree" else topo.n_spines
+    n_stage_a = L * A
+
+    def place(link):
+        if topo.kind != "fat_tree" or link < n_stage_a:
+            return "a", link // A, link % A
+        rem = link - n_stage_a
+        return "b", rem // topo.n_cores, rem % topo.n_cores
+
+    for dn, up, p, link in sched:
+        if t != up:
+            continue
+        stage, x, y = place(link)
+        if stage == "a":
+            cap = topo.link_cap * topo.parallel_links
+            topo.up[p, x, y] = cap
+            topo.down[p, y, x] = cap
+        else:
+            topo.up2[p, x, y] = topo.core_cap
+            topo.down2[p, x, y] = topo.core_cap
+    for dn, up, p, link in sched:
+        if t != dn:
+            continue
+        stage, x, y = place(link)
+        if stage == "a":
+            topo.fail_uplink(p, x, y, f.frac)
+        else:
+            topo.fail_core_link(p, x, y, f.frac)
+
+
 def make_events(spec: ScenarioSpec
                 ) -> Tuple[Callable[[int, Fabric], None],
                            Tuple[Tuple[int, str], ...]]:
@@ -255,6 +350,8 @@ def make_events(spec: ScenarioSpec
     # how many other faults exist or fire first
     fail_seeds = {i: (spec.workload_seed, 7919, i)
                   for i, f in enumerate(faults) if f.kind == "random_fail"}
+    scheds = {i: poisson_flap_schedule(spec, i)
+              for i, f in enumerate(faults) if f.kind == "poisson_flap"}
 
     def _restore_uplink(topo, p, leaf, spine):
         topo.up[p, leaf, spine] = cap_link
@@ -331,10 +428,13 @@ def make_events(spec: ScenarioSpec
                     for p in _planes(f, topo):
                         topo.up2[p, f.pod, f.core] = topo.core_cap
                         topo.down2[p, f.pod, f.core] = topo.core_cap
+            elif f.kind == "poisson_flap":
+                apply_poisson_flap(t, f, scheds[i], topo)
 
     slots = sorted(
-        {sl for f in faults
-         for sl in fault_transition_slots(f, spec.sim.slots)},
+        {sl for i, f in enumerate(faults)
+         for sl in fault_transition_slots(f, spec.sim.slots,
+                                          sched=scheds.get(i))},
         key=lambda x: (x[0], x[1]))
     return events, tuple(slots)
 
@@ -376,10 +476,22 @@ def compile_scenario(spec: ScenarioSpec) -> CompiledScenario:
         sw_lb_delay_ms=spec.sim.sw_lb_delay_ms,
         seed=spec.sim.seed, record_every=spec.sim.record_every,
         backend=spec.sim.backend, trace=spec.sim.trace)
+    vis_topo = backup = None
+    if spec.reaction is not None and spec.reaction.enabled:
+        if reaction_lag(spec.reaction, spec.sim.routing) > 0:
+            # pristine twin for the lagged routing view; the shared
+            # events closure replays into it `lag` slots late
+            vis_topo = build_topology(spec.topo)
+        if spec.reaction.mode == "backup":
+            cpa = (spec.topo.n_cores // spec.topo.n_aggs
+                   if spec.topo.kind == "fat_tree" else 1)
+            backup = backup_path_table(spec.topo.kind, spec.topo.n_paths,
+                                       cores_per_agg=cpa)
     return CompiledScenario(spec=spec, topo=topo, flows=flows, cfg=cfg,
                             events=events, tenants=tenants,
                             fault_slots=fault_slots,
-                            phase_mult=phase_mult, schedules=schedules)
+                            phase_mult=phase_mult, schedules=schedules,
+                            vis_topo=vis_topo, backup=backup)
 
 
 def run_scenario(spec: ScenarioSpec) -> SimResult:

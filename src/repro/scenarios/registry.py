@@ -10,8 +10,8 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List
 
-from .spec import (FaultSpec, ScenarioSpec, ScheduleSpec, SimSpec,
-                   TenantSpec, TopologySpec, WorkloadSpec)
+from .spec import (FaultSpec, ReactionSpec, ScenarioSpec, ScheduleSpec,
+                   SimSpec, TenantSpec, TopologySpec, WorkloadSpec)
 
 SCENARIOS: Dict[str, Callable[[], ScenarioSpec]] = {}
 
@@ -396,6 +396,76 @@ def allreduce_under_random_failures() -> ScenarioSpec:
         workloads=(WorkloadSpec("allreduce", bytes_total=220.0),),
         faults=(FaultSpec("random_fail", start_slot=100, frac=0.10),),
         sim=SimSpec(slots=400, seed=15, routing="war"))
+
+
+# ---------------------------------------------------------------------------
+# failure-reaction scenarios: detection latency + reroute policy (§6.4/§6.6)
+# ---------------------------------------------------------------------------
+#
+# Same 10%-failure operating point as `allreduce_under_random_failures`,
+# but routing no longer reacts instantly: for `detect_slots` after a
+# fault the dead paths keep attracting traffic (blackholed bytes), then
+# either the precomputed backup table kicks in (hardware PLB-style, §6.4
+# "<3 ms failover") or ECMP re-randomizes after a further
+# `converge_slots` (software LB-style, ~1 s).  ECMP routing so the
+# policies differ maximally — adaptive modes steer around residual
+# capacity and mask the contrast.
+
+_REROUTE_REACTION = ReactionSpec(detect_slots=2, mode="backup",
+                                 converge_slots=60)
+
+
+@register
+def reroute_random_failures() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="reroute_random_failures",
+        description="Ring allreduce over 64 hosts, 10% random fabric "
+                    "link failures at slot 100 under delayed detection "
+                    "(2 slots) with precomputed backup-path failover; "
+                    "sweep reaction.mode='rehash' for the software-LB "
+                    "contrast (§6.4).",
+        topo=_TESTBED,
+        tenants=(TenantSpec("main"),),
+        workloads=(WorkloadSpec("allreduce", bytes_total=220.0),),
+        faults=(FaultSpec("random_fail", start_slot=100, frac=0.10),),
+        reaction=_REROUTE_REACTION,
+        sim=SimSpec(slots=400, seed=15, routing="ecmp"))
+
+
+@register
+def reroute_random_failures_ft() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="reroute_random_failures_ft",
+        description="Fat-tree variant of reroute_random_failures: the "
+                    "backup table chains agg-then-core alternates, so "
+                    "failover shifts traffic across both stages.",
+        topo=_FT_TESTBED,
+        tenants=(TenantSpec("main"),),
+        workloads=(WorkloadSpec("allreduce", bytes_total=220.0),),
+        faults=(FaultSpec("random_fail", start_slot=100, frac=0.10),),
+        reaction=_REROUTE_REACTION,
+        sim=SimSpec(slots=400, seed=15, routing="ecmp"))
+
+
+@register
+def poisson_flap_storm() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="poisson_flap_storm",
+        description="Fleet-MTBF flap storm (§6.6): every fabric link "
+                    "flaps by Poisson arrival (the giga-fleet rate "
+                    "time-compressed into the 35 ms window — ~15 flaps, "
+                    "12-slot outages) under a 48-rank All2All with "
+                    "delayed detection and backup failover — survival "
+                    "means blackhole windows stay bounded by "
+                    "detect_slots per flap.",
+        topo=_TESTBED,
+        tenants=(TenantSpec("main", placement="block", n_hosts=48),),
+        workloads=(WorkloadSpec("all2all"),),
+        faults=(FaultSpec("poisson_flap", start_slot=50,
+                          flaps_per_min=24000.0, down_slots=12,
+                          frac=1.0),),
+        reaction=_REROUTE_REACTION,
+        sim=SimSpec(slots=400, slot_us=100.0, seed=19, routing="ecmp"))
 
 
 # ---------------------------------------------------------------------------

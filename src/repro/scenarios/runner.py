@@ -97,6 +97,8 @@ METRIC_FIELDS: Tuple[Tuple[str, str, Callable], ...] = (
     ("symmetry_uniform",     "bool",  lambda m: m.symmetry_uniform),
     ("hft_transient_drops",  "int",   lambda m: m.hft_transient_drops),
     ("bimodal_frac",         "float", lambda m: m.bimodal_frac),
+    ("blackholed_bytes",     "float", lambda m: m.blackholed_bytes),
+    ("reaction_slots",       "int",   lambda m: m.reaction_slots),
     ("tenant_mean",          "json",  lambda m: m.tenant_mean),
     ("tenant_p01",           "json",  lambda m: m.tenant_p01),
     ("tenant_p99",           "json",  lambda m: m.tenant_p99),
@@ -116,6 +118,8 @@ TRACE_METRIC_DEFAULTS: Dict[str, object] = {
     "hft_transient_drops": -1,
     "bimodal_frac": float("nan"),
     "straggler_ranks": (),
+    "blackholed_bytes": -1.0,
+    "reaction_slots": -1,
 }
 
 
@@ -171,6 +175,10 @@ class ScenarioMetrics:
     hft_transient_drops: int = -1
     bimodal_frac: float = float("nan")
     straggler_ranks: Tuple[int, ...] = ()
+    # failure-reaction columns — meaningful only when the spec carries an
+    # enabled `ReactionSpec`; the defaults mark "no reaction modeled"
+    blackholed_bytes: float = -1.0
+    reaction_slots: int = -1
 
     CSV_FIELDS = tuple(name for name, _ in _CSV_COLUMNS)
 
@@ -204,6 +212,8 @@ class ScenarioMetrics:
             "hft_transient_drops": int(self.hft_transient_drops),
             "bimodal_frac": float(self.bimodal_frac),
             "straggler_ranks": [int(r) for r in self.straggler_ranks],
+            "blackholed_bytes": float(self.blackholed_bytes),
+            "reaction_slots": int(self.reaction_slots),
         }
 
     @classmethod
@@ -230,7 +240,9 @@ class ScenarioMetrics:
             hft_transient_drops=int(d.get("hft_transient_drops", -1)),
             bimodal_frac=float(d.get("bimodal_frac", float("nan"))),
             straggler_ranks=tuple(
-                int(r) for r in d.get("straggler_ranks", ())))
+                int(r) for r in d.get("straggler_ranks", ())),
+            blackholed_bytes=float(d.get("blackholed_bytes", -1.0)),
+            reaction_slots=int(d.get("reaction_slots", -1)))
 
 
 # ---------------------------------------------------------------------------
@@ -242,6 +254,23 @@ def _jain(x: np.ndarray) -> float:
     if x.size == 0 or (x <= 0).all():
         return 1.0
     return float(x.sum() ** 2 / (x.size * (x ** 2).sum() + 1e-30))
+
+
+def _reaction_slots(bh: np.ndarray, fault_slots) -> int:
+    """Worst-case slots from a fault transition until its blackhole window
+    closes — first slot at or after the transition where blackholed bytes
+    go positive, then back to zero.  A window still open at the horizon
+    counts to the horizon; transitions that never blackhole contribute 0."""
+    worst = 0
+    for slot, _label in fault_slots:
+        seg = bh[slot:]
+        pos = np.flatnonzero(seg > 1e-12)
+        if pos.size == 0:
+            continue
+        closed = np.flatnonzero(seg[pos[0]:] <= 1e-12)
+        worst = max(worst, int(pos[0] + closed[0]) if closed.size
+                    else int(seg.size))
+    return worst
 
 
 def _recovery(total: np.ndarray, fault_slots, record_every: int,
@@ -320,6 +349,16 @@ def distill_metrics(spec: ScenarioSpec, c: CompiledScenario,
         uniform &= rep.uniform
         outliers += [(p, s) for s in rep.outliers]
 
+    # failure-reaction columns — present only when the run modeled
+    # detection latency (spec.reaction enabled on either backend)
+    bh = getattr(res, "blackhole_timeline", None)
+    if bh is not None:
+        bh = np.asarray(bh, np.float64)
+        blackholed = float(bh.sum())
+        react_slots = _reaction_slots(bh, c.fault_slots)
+    else:
+        blackholed, react_slots = -1.0, -1
+
     # §5.2/§5.3: trace-derived columns when the point captured one
     trace = getattr(res, "trace", None)
     extra: Dict = {}
@@ -342,7 +381,8 @@ def distill_metrics(spec: ScenarioSpec, c: CompiledScenario,
         symmetry_outliers=tuple(outliers), extra=extra,
         hft_transient_drops=int(summ["hft_transient_drops"]),
         bimodal_frac=float(summ["bimodal_frac"]),
-        straggler_ranks=tuple(summ["straggler_ranks"]))
+        straggler_ranks=tuple(summ["straggler_ranks"]),
+        blackholed_bytes=blackholed, reaction_slots=react_slots)
 
 
 # ---------------------------------------------------------------------------

@@ -20,7 +20,7 @@ WORKLOAD_KINDS = ("bisection", "all2all", "allreduce", "incast",
                   "schedule")
 FAULT_KINDS = ("link_kill", "link_flap", "access_kill", "access_flap",
                "cascade", "straggler", "leaf_trim", "random_fail",
-               "core_kill")
+               "core_kill", "poisson_flap")
 PLACEMENTS = ("block", "interleave", "random", "remainder", "explicit")
 ROUTINGS = ("ar", "war", "ecmp")
 NICS = ("spx", "dcqcn", "global", "esr", "swlb")
@@ -275,6 +275,14 @@ class FaultSpec:
                       core) stage-B link pair at `start_slot`; restore at
                       `stop_slot` if set (the tier the multiplane design
                       deletes — §3.1).
+      'poisson_flap'— fleet-MTBF flap storm (§6.6): every fabric link on
+                      the selected plane(s) flaps independently with
+                      exponential inter-arrivals so the *fleet-wide* rate
+                      is `flaps_per_min`; each flap multiplies the link
+                      by `1 - frac` for `down_slots` slots.  Arrival
+                      times come from `core.fault_tolerance.poisson_flaps`
+                      seeded by (workload_seed, fault index), so both
+                      backends replay the identical schedule.
 
     `plane` = -1 applies to every plane.  On fat_tree topologies `spine`
     addresses the pod-local agg index for link faults.  `validate()`
@@ -298,8 +306,65 @@ class FaultSpec:
     count: int = 0                       # random_fail: exact-k mode
     pod: int = 0                         # core_kill / fat_tree cascade
     core: int = 0                        # core_kill
+    flaps_per_min: float = 0.0           # poisson_flap: fleet-wide rate
+    down_slots: int = 0                  # poisson_flap: outage length
 
-    HASH_ELIDE_DEFAULTS = ("pod", "core")
+    HASH_ELIDE_DEFAULTS = ("pod", "core", "flaps_per_min", "down_slots")
+
+
+REACTION_MODES = ("instant", "rehash", "backup")
+
+
+@dataclass(frozen=True)
+class ReactionSpec:
+    """How routing *reacts* to fabric faults — the paper's <3 ms
+    hardware failover vs ~1 s software LB distinction (§6.4, and the
+    MRC/SRv6 precomputed-backup design point).
+
+    Without a reaction spec (the default), routing sees every capacity
+    change the same slot it happens — instantaneous, perfect detection.
+    With one, routing steers against a *visible* copy of the fabric that
+    lags physical state by `detect_slots`: a failed link keeps
+    attracting traffic (black-holed bytes) until detection fires.
+
+    mode:
+      'instant' — reproduce the no-reaction behavior bit-identically
+                  (requires both delays zero; useful as a sweep axis
+                  baseline).
+      'rehash'  — software-LB analog: after detection, the control
+                  plane takes a further `converge_slots` to push new
+                  state; ECMP flows on dead paths then re-hash onto
+                  survivors (the usual seeded draw).  Total lag =
+                  `detect_slots + converge_slots`.
+      'backup'  — hardware fast-reroute analog (MRC/SRv6): the slot
+                  detection fires, affected (flow, plane) entries switch
+                  to the next alive path in a backup table precomputed
+                  per fabric kind at compile time — no RNG, no extra
+                  convergence.  Total lag = `detect_slots`.
+
+    `converge_slots` is read by 'rehash' only; 'backup' ignores it (so a
+    sweep can hold it fixed while toggling the mode axis)."""
+    detect_slots: int = 0
+    mode: str = "instant"
+    converge_slots: int = 0
+
+    @property
+    def enabled(self) -> bool:
+        """True when the reaction layer changes behavior at all."""
+        return self.mode != "instant"
+
+
+def reaction_lag(reaction: Optional[ReactionSpec], routing: str) -> int:
+    """Slots by which the routing-visible fabric lags physical state.
+    One number per run — shared by both backends so the lowering cannot
+    drift.  `routing` is accepted for future mode/routing interplay;
+    today the lag is routing-independent."""
+    if reaction is None or not reaction.enabled:
+        return 0
+    lag = reaction.detect_slots
+    if reaction.mode == "rehash":
+        lag += reaction.converge_slots
+    return lag
 
 
 @dataclass(frozen=True)
@@ -334,6 +399,11 @@ class ScenarioSpec:
     sim: SimSpec = field(default_factory=SimSpec)
     workload_seed: int = 0
     description: str = ""
+    reaction: Optional[ReactionSpec] = None
+
+    # `reaction` elides from content hashes at its default so every
+    # pre-existing spec keeps its cache key across this schema extension.
+    HASH_ELIDE_DEFAULTS = ("reaction",)
 
     # ---- ergonomic copies -------------------------------------------------
     def with_sim(self, **kw) -> "ScenarioSpec":
@@ -394,9 +464,24 @@ class ScenarioSpec:
             if f.kind in ("link_flap", "access_flap", "cascade") \
                     and f.period <= 0:
                 raise ValueError(
-                    f"{self.name}: {f.kind} requires period > 0")
+                    f"{self.name}: {f.kind} requires period > 0, got "
+                    f"{f.period}")
             if f.kind == "cascade" and not f.spines:
                 raise ValueError(f"{self.name}: cascade requires spines")
+            if f.kind == "poisson_flap":
+                if f.flaps_per_min <= 0:
+                    raise ValueError(
+                        f"{self.name}: poisson_flap requires "
+                        f"flaps_per_min > 0, got {f.flaps_per_min}")
+                if f.down_slots <= 0:
+                    raise ValueError(
+                        f"{self.name}: poisson_flap requires "
+                        f"down_slots >= 1, got {f.down_slots}")
+            else:
+                if f.flaps_per_min or f.down_slots:
+                    raise ValueError(
+                        f"{self.name}: flaps_per_min/down_slots apply "
+                        f"only to poisson_flap, not {f.kind!r}")
             if f.count < 0:
                 raise ValueError(
                     f"{self.name}: fault count must be >= 0, got "
@@ -406,6 +491,34 @@ class ScenarioSpec:
                     f"{self.name}: count applies only to random_fail, "
                     f"not {f.kind!r}")
             _check_fault_bounds(self.name, f, self.topo)
+        if self.reaction is not None:
+            r = self.reaction
+            if r.mode not in REACTION_MODES:
+                raise ValueError(
+                    f"{self.name}: unknown reaction mode {r.mode!r}; "
+                    f"known: {REACTION_MODES}")
+            if r.detect_slots < 0 or r.converge_slots < 0:
+                raise ValueError(
+                    f"{self.name}: reaction delays must be >= 0, got "
+                    f"detect_slots={r.detect_slots} "
+                    f"converge_slots={r.converge_slots}")
+            if r.mode == "instant" and (r.detect_slots or
+                                        r.converge_slots):
+                raise ValueError(
+                    f"{self.name}: reaction mode 'instant' requires "
+                    "zero detect_slots/converge_slots (got "
+                    f"detect_slots={r.detect_slots} "
+                    f"converge_slots={r.converge_slots}); pick 'rehash' "
+                    "or 'backup' for a delayed reaction")
+            bad_kinds = sorted({f.kind for f in self.faults
+                                if f.kind == "straggler"})
+            if r.enabled and bad_kinds:
+                raise ValueError(
+                    f"{self.name}: reaction mode {r.mode!r} is "
+                    f"incompatible with fault kinds {bad_kinds} — a "
+                    "straggler degrades host access capacity, which NIC "
+                    "probes observe directly; fabric reroute reaction "
+                    "does not apply")
         if self.sim.routing not in ROUTINGS:
             raise ValueError(
                 f"{self.name}: unknown routing {self.sim.routing!r}")
@@ -489,12 +602,19 @@ def flap_phase(t: int, f: FaultSpec) -> str:
     return ""
 
 
-def fault_transition_slots(f: FaultSpec, horizon: int
+def fault_transition_slots(f: FaultSpec, horizon: int, sched=None
                            ) -> Tuple[Tuple[int, str], ...]:
     """Slots (< horizon) at which this fault *degrades* the fabric —
     the instants the runner measures recovery from.  Restores are not
-    transitions."""
+    transitions.  `sched` is the precomputed per-link slot schedule for
+    kind='poisson_flap' (see `scenarios.compile.poisson_flap_schedule`)
+    — arrival times are seeded draws, so the schedule must be computed
+    once and shared with the event/timeline lowering."""
     out = []
+    if f.kind == "poisson_flap":
+        return tuple(sorted({(int(t), "poisson_flap")
+                             for t, _, _, _ in (sched or ())
+                             if t < horizon}))
     if f.kind in ("link_kill", "access_kill", "straggler", "leaf_trim",
                   "random_fail", "core_kill"):
         if f.start_slot < horizon:

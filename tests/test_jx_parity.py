@@ -43,6 +43,15 @@ def _assert_parity(spec, ref, jres):
                                atol=TOL, rtol=TOL)
     assert jres.groups == ref.groups
     np.testing.assert_array_equal(jres.group_of, ref.group_of)
+    # failure-reaction observables: both backends must expose the same
+    # per-slot blackholed-byte series (or neither, when no reaction)
+    bh_r = getattr(ref, "blackhole_timeline", None)
+    bh_j = getattr(jres, "blackhole_timeline", None)
+    assert (bh_r is None) == (bh_j is None)
+    if bh_r is not None:
+        np.testing.assert_allclose(bh_j, bh_r,
+                                   atol=TOL * len(ref.mean_goodput),
+                                   rtol=TOL)
     c = compile_scenario(spec)
     m_ref = distill_metrics(spec, c, ref)
     m_jx = distill_metrics(spec, c, jres)
@@ -56,6 +65,7 @@ def _assert_parity(spec, ref, jres):
     assert m_jx.isolation_index == pytest.approx(m_ref.isolation_index,
                                                  abs=TOL)
     assert m_jx.recovery_slots == m_ref.recovery_slots
+    assert m_jx.reaction_slots == m_ref.reaction_slots
 
 
 def _assert_parity_chaotic(spec, ref, jres, fork_frac=0.05):
@@ -169,6 +179,28 @@ def test_parity_swlb_delayed_exclusion():
 def test_parity_representative(name, kw):
     spec = get_scenario(name).with_sim(**kw) if kw else get_scenario(name)
     ref, jres = _run_both(spec)
+    _assert_parity(spec, ref, jres)
+
+
+@pytest.mark.parametrize("routing", ["ecmp", "war"])
+@pytest.mark.parametrize("name,mode", [
+    ("reroute_random_failures", "backup"),      # leaf-spine backup table
+    ("reroute_random_failures", "rehash"),      # post-detect re-draw
+    ("reroute_random_failures_ft", "backup"),   # two-stage backup chain
+    ("poisson_flap_storm", "backup"),           # flap storm + reaction
+])
+def test_parity_reaction(name, mode, routing):
+    """Reaction-layer parity: the lagged visible-topology twin, the
+    blackhole accumulator, and the backup/rehash reassignments must all
+    agree across backends — including the new blackhole_timeline and
+    reaction_slots observables."""
+    from dataclasses import replace
+
+    spec = get_scenario(name)
+    spec = replace(spec, reaction=replace(spec.reaction, mode=mode))
+    spec = spec.with_sim(slots=200, routing=routing)
+    ref, jres = _run_both(spec)
+    assert ref.blackhole_timeline is not None
     _assert_parity(spec, ref, jres)
 
 

@@ -1,0 +1,254 @@
+"""Failure-reaction layer: detection latency, precomputed fast-reroute,
+and flap-storm behavior.
+
+Covers the reaction subsystem end to end:
+  * `ReactionSpec` validation — every named error message;
+  * `backup_path_table` is a single J-cycle on both fabric kinds (the
+    `backup_reassign` chain walk relies on it);
+  * the §6.6 Poisson flap schedule is seed-pinned (both backends replay
+    the identical event list, so the pin guards the draw order);
+  * `reaction=None` and `mode='instant'` reproduce the pre-reaction
+    engine bit-identically and share one compiled JAX program;
+  * the megabatch path fuses a whole mode x detect reaction grid into
+    one launch and one compile;
+  * the acceptance signature: backup failover closes its blackhole
+    window within detect_slots of the fault while rehash stays dark
+    >= 10x longer, at <= 1.10x p50 completion inflation (§6.4's "7%
+    at 10% failures" operating point).
+"""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.netsim.topology import backup_path_table
+from repro.scenarios import compile_scenario, get_scenario
+from repro.scenarios.spec import (FaultSpec, ReactionSpec, ScenarioSpec,
+                                  SimSpec, TenantSpec, TopologySpec,
+                                  WorkloadSpec, reaction_lag)
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+def _spec(**kw):
+    base = dict(
+        name="react_test",
+        topo=TopologySpec(n_leaves=4, n_spines=4, hosts_per_leaf=2,
+                          n_planes=1),
+        tenants=(TenantSpec("main"),),
+        workloads=(WorkloadSpec("allreduce", bytes_total=40.0),),
+        faults=(FaultSpec("random_fail", start_slot=40, frac=0.25),),
+        sim=SimSpec(slots=331, seed=3, routing="ecmp"))
+    base.update(kw)
+    return ScenarioSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# validation — every named error
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("reaction,msg", [
+    (ReactionSpec(mode="flood"), "unknown reaction mode"),
+    (ReactionSpec(detect_slots=-1), "reaction delays must be >= 0"),
+    (ReactionSpec(converge_slots=-2), "reaction delays must be >= 0"),
+    (ReactionSpec(detect_slots=3, mode="instant"),
+     "reaction mode 'instant' requires zero"),
+])
+def test_reaction_validation_errors(reaction, msg):
+    with pytest.raises(ValueError, match=msg):
+        _spec(reaction=reaction).validate()
+
+
+def test_reaction_rejects_straggler_faults():
+    spec = _spec(
+        faults=(FaultSpec("straggler", start_slot=10, stop_slot=50,
+                          host=1, frac=0.5, plane=-1),),
+        reaction=ReactionSpec(detect_slots=2, mode="backup"))
+    with pytest.raises(ValueError, match="incompatible with fault kinds"):
+        spec.validate()
+
+
+@pytest.mark.parametrize("fault,msg", [
+    (FaultSpec("poisson_flap", start_slot=0, flaps_per_min=0.0,
+               down_slots=4), "flaps_per_min > 0"),
+    (FaultSpec("poisson_flap", start_slot=0, flaps_per_min=100.0,
+               down_slots=0), "down_slots >= 1"),
+    (FaultSpec("link_kill", start_slot=0, leaf=0, spine=0,
+               flaps_per_min=5.0),
+     "apply only to poisson_flap"),
+])
+def test_poisson_flap_validation_errors(fault, msg):
+    with pytest.raises(ValueError, match=msg):
+        _spec(faults=(fault,)).validate()
+
+
+def test_reaction_lag_by_mode():
+    assert reaction_lag(None, "ecmp") == 0
+    assert reaction_lag(ReactionSpec(), "ecmp") == 0
+    assert reaction_lag(ReactionSpec(detect_slots=3, mode="backup",
+                                     converge_slots=60), "ecmp") == 3
+    assert reaction_lag(ReactionSpec(detect_slots=3, mode="rehash",
+                                     converge_slots=60), "war") == 63
+
+
+# ---------------------------------------------------------------------------
+# backup tables — one full J-cycle per fabric kind
+# ---------------------------------------------------------------------------
+
+def _cycle_len(table):
+    j, seen = 0, 0
+    while True:
+        j = int(table[j])
+        seen += 1
+        if j == 0:
+            return seen
+
+
+@pytest.mark.parametrize("n_paths", [2, 4, 8, 16])
+def test_leaf_spine_backup_table_is_full_cycle(n_paths):
+    t = backup_path_table("leaf_spine", n_paths)
+    assert sorted(t) == list(range(n_paths))       # permutation
+    assert _cycle_len(t) == n_paths                # single cycle
+
+
+@pytest.mark.parametrize("n_paths,cpa", [(8, 2), (8, 4), (12, 3), (6, 1)])
+def test_fat_tree_backup_table_is_full_cycle(n_paths, cpa):
+    t = backup_path_table("fat_tree", n_paths, cores_per_agg=cpa)
+    assert sorted(t) == list(range(n_paths))
+    assert _cycle_len(t) == n_paths
+    # next-agg-first: a non-wrapping core falls over to the core with
+    # the same offset under the next agg
+    assert t[0] == cpa % n_paths or n_paths <= cpa
+
+
+# ---------------------------------------------------------------------------
+# §6.6 Poisson flap schedule — seed-pinned replay
+# ---------------------------------------------------------------------------
+
+def test_poisson_flap_schedule_pinned():
+    from repro.scenarios.compile import poisson_flap_schedule
+    spec = get_scenario("poisson_flap_storm")
+    sched = poisson_flap_schedule(spec, 0)
+    assert len(sched) == 17
+    assert sched[:3] == ((60, 72, 0, 10), (60, 72, 0, 29),
+                         (67, 79, 0, 17))
+    for dn, up, plane, link in sched:
+        assert up - dn == spec.faults[0].down_slots
+        assert dn >= spec.faults[0].start_slot
+        assert 0 <= plane < spec.topo.n_planes
+        assert 0 <= link < spec.topo.n_leaves * spec.topo.n_spines
+
+
+def test_poisson_flap_schedule_respects_stop_slot():
+    from repro.scenarios.compile import poisson_flap_schedule
+    spec = get_scenario("poisson_flap_storm")
+    stopped = replace(
+        spec, faults=(replace(spec.faults[0], stop_slot=100),))
+    sched = poisson_flap_schedule(stopped, 0)
+    assert sched and all(dn < 100 for dn, _, _, _ in sched)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity + compile sharing: reaction=None == mode='instant'
+# ---------------------------------------------------------------------------
+
+def test_instant_is_bit_identical_and_shares_program():
+    from repro.netsim.jx.engine import collect_dispatch
+    none_spec = _spec()
+    inst_spec = _spec(reaction=ReactionSpec())
+    r_none = compile_scenario(none_spec).run(backend="jax")
+    with collect_dispatch() as ctr:
+        r_inst = compile_scenario(inst_spec).run(backend="jax")
+    # an instant reaction lowers to the exact same compiled program:
+    # 0 new compiles and byte-identical outputs
+    assert ctr.snapshot()["compiles"] == 0
+    np.testing.assert_array_equal(r_inst.mean_goodput, r_none.mean_goodput)
+    np.testing.assert_array_equal(r_inst.completion_slot,
+                                  r_none.completion_slot)
+    np.testing.assert_array_equal(r_inst.total_goodput,
+                                  r_none.total_goodput)
+    assert r_none.blackhole_timeline is None
+    assert r_inst.blackhole_timeline is None
+
+    # numpy backend: same bit-identity contract
+    n_none = compile_scenario(none_spec).run(backend="numpy")
+    n_inst = compile_scenario(inst_spec).run(backend="numpy")
+    np.testing.assert_array_equal(n_inst.mean_goodput, n_none.mean_goodput)
+    np.testing.assert_array_equal(n_inst.completion_slot,
+                                  n_none.completion_slot)
+
+
+# ---------------------------------------------------------------------------
+# megabatch: a reaction grid fuses into one launch + one compile
+# ---------------------------------------------------------------------------
+
+def test_megabatch_reaction_grid_single_launch():
+    from repro.netsim.jx.engine import collect_dispatch
+    from repro.netsim.jx.megabatch import run_megabatch
+    grid = [
+        _spec(name=f"mb-react-{mode}-{det}",
+              reaction=ReactionSpec(detect_slots=det, mode=mode,
+                                    converge_slots=12))
+        for mode in ("backup", "rehash") for det in (1, 3)]
+    pts = [compile_scenario(s) for s in grid]
+    with collect_dispatch() as ctr:
+        res = run_megabatch(pts)
+    stats = ctr.snapshot()
+    assert stats["dispatches"] == 1
+    assert stats["compiles"] <= 1          # 0 when another test warmed it
+    # rows match the per-scenario path, blackhole column included
+    for s, r in zip(grid, res):
+        ref = compile_scenario(s).run(backend="jax")
+        np.testing.assert_allclose(r.total_goodput, ref.total_goodput,
+                                   rtol=1e-5, atol=1e-8)
+        np.testing.assert_array_equal(r.completion_slot,
+                                      ref.completion_slot)
+        np.testing.assert_allclose(r.blackhole_timeline,
+                                   ref.blackhole_timeline,
+                                   rtol=1e-5, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# acceptance signature — backup vs rehash at the §6.4 operating point
+# ---------------------------------------------------------------------------
+
+def _registry_variant(mode, frac, detect=4, slots=280):
+    spec = get_scenario("reroute_random_failures").with_sim(slots=slots)
+    spec = replace(spec, faults=(replace(spec.faults[0], frac=frac),),
+                   reaction=replace(spec.reaction, mode=mode,
+                                    detect_slots=detect))
+    return spec
+
+
+def test_backup_beats_rehash_reaction_window():
+    from repro.scenarios.runner import distill_metrics
+    runs = {}
+    for mode in ("backup", "rehash"):
+        spec = _registry_variant(mode, frac=0.10)
+        c = compile_scenario(spec)
+        runs[mode] = (spec, c, c.run())
+    m_b = distill_metrics(*runs["backup"])
+    m_r = distill_metrics(*runs["rehash"])
+    det = runs["backup"][0].reaction.detect_slots
+    # backup recovers within detect_slots (+3 slack); rehash stays dark
+    # detect + converge — >= 10x slower at the registry defaults
+    assert 0 < m_b.reaction_slots <= det + 3
+    assert m_r.reaction_slots >= 10 * m_b.reaction_slots
+    assert m_r.blackholed_bytes > m_b.blackholed_bytes > 0
+
+
+def test_backup_completion_inflation_bounded():
+    def p50(spec):
+        res = compile_scenario(spec).run()
+        comp = res.completion_slot[res.completion_slot >= 0]
+        assert comp.size
+        return float(np.median(comp))
+
+    clean = p50(_registry_variant("backup", frac=0.0))
+    faulted = p50(_registry_variant("backup", frac=0.10))
+    # §6.4: ~7% completion inflation at 10% link failures — the backup
+    # policy keeps the p50 within 1.10x of the clean fabric
+    assert faulted <= 1.10 * clean
+    # and rehash completions never beat backup at the same detection
+    rehash = p50(_registry_variant("rehash", frac=0.10))
+    assert faulted <= rehash

@@ -140,6 +140,13 @@ def _fault_strategy(topo: TopologySpec, slots: int):
                   start_slot=start, plane=planes,
                   frac=st.sampled_from([0.5, 1.0]),
                   count=st.integers(1, 3)),
+        # fleet rate scaled to the tiny (<= 40-slot, 10 us) horizon so
+        # the Poisson draw actually lands a handful of flaps
+        st.builds(FaultSpec, kind=st.just("poisson_flap"),
+                  start_slot=start, plane=planes,
+                  flaps_per_min=st.sampled_from([2e5, 2e6]),
+                  down_slots=st.integers(1, 8),
+                  frac=st.sampled_from([0.5, 1.0])),
     )
 
 
@@ -196,6 +203,82 @@ def test_timeline_change_slots_are_sound(spec):
                        and np.array_equal(tl.down[t], tl.down[t - 1])
                        and np.array_equal(tl.access[t], tl.access[t - 1]))
         assert (t in changes) == changed
+
+
+# ---------------------------------------------------------------------------
+# failure-reaction invariants (numpy backend)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def _reaction_cases(draw):
+    """Small ECMP scenarios with exactly-k link kills (k < n_spines, so
+    the backup chain always reaches an alive path and no residual
+    blackholing survives the reaction — which makes the window algebra
+    below exact, not statistical)."""
+    topo = draw(st.builds(
+        TopologySpec,
+        n_leaves=st.integers(2, 3), n_spines=st.integers(3, 4),
+        hosts_per_leaf=st.just(2), n_planes=st.integers(1, 2)))
+    slots = draw(st.integers(40, 60))
+    start = draw(st.integers(8, 20))
+    fault = FaultSpec("random_fail", start_slot=start, frac=1.0,
+                      count=draw(st.integers(1, 2)), plane=-1)
+    detect = draw(st.integers(1, 4))
+    seed = draw(st.integers(0, 2 ** 10))
+    return topo, slots, fault, detect, seed
+
+
+def _run_reaction(topo, slots, fault, seed, reaction):
+    from repro.scenarios.spec import ReactionSpec  # noqa: F401
+    spec = ScenarioSpec(
+        name="prop_react", topo=topo,
+        workloads=(WorkloadSpec("all2all"),),
+        faults=(fault,), reaction=reaction,
+        sim=SimSpec(slots=slots, routing="ecmp", seed=seed),
+        workload_seed=seed).validate()
+    return compile_scenario(spec).run()
+
+
+@given(case=_reaction_cases())
+@settings(max_examples=10, deadline=None)
+def test_reaction_blackhole_invariants(case):
+    from repro.scenarios.spec import ReactionSpec
+    topo, slots, fault, detect, seed = case
+    args = (topo, slots, fault, seed)
+    none = _run_reaction(*args, None)
+    instant = _run_reaction(*args, ReactionSpec())
+    backup = _run_reaction(
+        *args, ReactionSpec(detect_slots=detect, mode="backup"))
+    backup_late = _run_reaction(
+        *args, ReactionSpec(detect_slots=detect + 2, mode="backup"))
+    rehash = _run_reaction(
+        *args, ReactionSpec(detect_slots=detect, mode="rehash",
+                            converge_slots=6))
+
+    # mode='instant' reproduces no-reaction bit-identically
+    np.testing.assert_array_equal(instant.mean_goodput, none.mean_goodput)
+    np.testing.assert_array_equal(instant.completion_slot,
+                                  none.completion_slot)
+
+    # no traffic is blackholed before the fault exists
+    for r in (backup, backup_late, rehash):
+        bh = np.asarray(r.blackhole_timeline)
+        assert (bh[:fault.start_slot] == 0).all()
+        assert (bh >= 0).all()
+
+    # slower detection can only blackhole more...
+    assert backup_late.blackhole_timeline.sum() \
+        >= backup.blackhole_timeline.sum()
+    # ...and rehash (detect + converge dark) at least as much as backup
+    # (dark only until detection) at the same detection latency
+    assert rehash.blackhole_timeline.sum() \
+        >= backup.blackhole_timeline.sum()
+    # with k < n_spines kills the reaction fully clears the blackhole:
+    # nothing is dark once the slowest policy has converged
+    last = fault.start_slot + detect + 6
+    assert rehash.blackhole_timeline[last + 1:].sum() == 0
+    assert backup.blackhole_timeline[fault.start_slot + detect + 1:
+                                     ].sum() == 0
 
 
 def test_compiled_scenario_tenant_partition_concrete():
