@@ -107,8 +107,10 @@ def compare_baseline(out: dict, base: Optional[dict]) -> dict:
     cmp = {"comparable": True, "reason": "",
            "baseline_warm_slots_per_s": ref,
            "warm_slots_per_s": cur, "ratio": cur / ref}
-    # informational: the giga-scale point's trajectory, when both the
-    # run and the snapshot carry one for the same scenario/shape
+    # the giga-scale point's trajectory, when both the run and the
+    # snapshot carry one for the same scenario/shape: warm-throughput
+    # ratio plus the wall-clock ratio CI gates (>= 0.8 — a fresh run
+    # may be at most 25% slower than the committed snapshot)
     lb, lo = base.get("large_scale"), out.get("large_scale")
     if lb and lo and lb.get("warm_slots_per_s") and (
             {k: lo.get(k) for k in ("scenario", "hosts", "flows",
@@ -117,6 +119,8 @@ def compare_baseline(out: dict, base: Optional[dict]) -> dict:
                                        "slots", "x64")}):
         cmp["large_ratio"] = (lo["warm_slots_per_s"]
                               / lb["warm_slots_per_s"])
+        if lb.get("wall_s") and lo.get("wall_s"):
+            cmp["large_wall_ratio"] = lb["wall_s"] / lo["wall_s"]
     return cmp
 
 
@@ -141,9 +145,9 @@ def run_large(scenario: str = LARGE_SCENARIO,
     n_flows = len(compiled.flows)
     topo = spec.topo
     reset_dispatch_stats()
-    t0 = time.perf_counter()
+    t_all = time.perf_counter()
     execute_points([spec], backend="jax", jx_dispatch="megabatch")
-    cold = time.perf_counter() - t0
+    cold = time.perf_counter() - t_all
     stats = dispatch_stats()
     warm = _time_best(
         lambda: execute_points([spec], backend="jax",
@@ -155,14 +159,25 @@ def run_large(scenario: str = LARGE_SCENARIO,
            "agg_mode": agg_mode_default(topo.n_hosts, topo.n_leaves,
                                         topo.n_paths, topo.n_planes),
            "cold_s": cold, "warm_s": warm,
+           "wall_s": time.perf_counter() - t_all,
+           "peak_rss_mb": peak_rss_mb(),
            "dispatches": stats["dispatches"],
            "compiles": stats["compiles"],
            "warm_slots_per_s": spec.sim.slots / max(warm, 1e-9)}
     emit(f"backend_bench.large.{scenario}", warm * 1e6,
          f"hosts={topo.n_hosts},flows={n_flows},cold_s={cold:.2f},"
          f"warm_s={warm:.2f},agg={row['agg_mode']},"
-         f"slots_per_s={row['warm_slots_per_s']:.1f}")
+         f"slots_per_s={row['warm_slots_per_s']:.1f},"
+         f"rss_mb={row['peak_rss_mb']:.0f}")
     return row
+
+
+def peak_rss_mb() -> float:
+    """Peak resident set of this process in MiB (`ru_maxrss` is KiB on
+    Linux but bytes on macOS)."""
+    unit = 1 if sys.platform == "darwin" else 1024
+    return (resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * unit
+            / 2**20)
 
 
 def _time_best(fn, iters: int) -> float:
@@ -261,10 +276,7 @@ def run(scenario: str = DEFAULT_SCENARIO,
         out["speedup_warm_vs_numpy"] = (
             out["numpy_pool"]["warm_s"] / max(out["megabatch"]["warm_s"],
                                               1e-9))
-    # ru_maxrss is KiB on Linux but bytes on macOS
-    rss_unit = 1 if sys.platform == "darwin" else 1024
-    out["peak_rss_bytes"] = (
-        resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * rss_unit)
+    out["peak_rss_bytes"] = int(peak_rss_mb() * 2**20)
     emit(f"backend_bench.{scenario}.speedup", 0.0,
          f"megabatch_vs_per_group={out['speedup_warm_vs_per_group']:.2f}x"
          + (f",megabatch_vs_numpy={out['speedup_warm_vs_numpy']:.2f}x"

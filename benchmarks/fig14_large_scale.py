@@ -13,7 +13,13 @@ composition) — pure composition math, no fabric sim.
 multiplane point (`giga_fabric_storage`) through the JAX engine's sparse
 segment-summed aggregation path — the pristine fabric vs the same fabric
 with 8 concurrent random link kills, fig14a's degradation question asked
-of the full fluid simulation instead of the compositional proxy."""
+of the full fluid simulation instead of the compositional proxy.
+
+`--giga --full` widens (c) into the sweep the compositional method
+approximates: k ∈ {0, 2, 4, 8} concurrent kills × a seed axis, all 12
+giga-shape points fused by the streaming megabatch path into one
+dispatch (and one compile) per shape bucket — the pristine timeline and
+the faulted one — with host prep pipelined against device execution."""
 from __future__ import annotations
 
 import argparse
@@ -98,6 +104,64 @@ def run_giga(slots: int = 0) -> None:
          f"wall_s={wall:.1f}")
 
 
+def run_giga_full(slots: int = 0, seeds=(0, 1, 2),
+                  ks=(0, 2, 4, 8)) -> dict:
+    """(c) at full sweep width: fig14a's k-concurrent-failure question
+    asked of the directly simulated giga point.  k ∈ {0, 2, 4, 8}
+    random fabric link kills × a fault/ECMP seed axis, every point at
+    4096 hosts / 102,400 flows, fused by the megabatch path into one
+    dispatch per shape bucket (the pristine timeline and the faulted
+    one) with host prep pipelined against device execution.  Returns
+    the summary dict it emits, so the CI smoke can assert on it."""
+    from dataclasses import replace
+
+    from repro.scenarios import get_scenario
+
+    spec = get_scenario("giga_fabric_storage")
+    if slots:
+        spec = spec.with_sim(slots=slots)
+    points = []
+    for k in ks:
+        for s in seeds:
+            p = spec.with_sim(seed=s)
+            # `random_fail` count=0 means "fail each link independently
+            # with probability frac", not "zero concurrent failures" —
+            # the pristine point drops the fault instead
+            points.append(replace(
+                p, faults=() if k == 0 else
+                (replace(spec.faults[0], count=k),)))
+    flight = {}
+    t0 = time.perf_counter()
+    out = execute_points(points, backend="jax", jx_dispatch="megabatch",
+                         flight=flight)
+    wall = time.perf_counter() - t0
+    by_k = {}
+    for p, m in zip(points, out):
+        k = p.faults[0].count if p.faults else 0
+        by_k.setdefault(k, []).append(m.mean_goodput)
+    g0 = float(np.mean(by_k[ks[0]]))
+    for k in ks:
+        gk = float(np.mean(by_k[k]))
+        emit(f"fig14c.giga_full.k{k}", wall * 1e6 / len(points),
+             f"goodput={gk:.4f},degradation={gk / g0:.4f},"
+             f"seeds={len(seeds)}")
+    stats = flight.get("dispatch_stats", {})
+    pipe = flight.get("pipeline", {})
+    summary = {"points": len(points), "wall_s": wall,
+               "dispatches": stats.get("dispatches"),
+               "compiles": stats.get("compiles"),
+               "launches": pipe.get("launches"),
+               "pipelined": bool(pipe.get("pipelined")),
+               "degradation": {k: float(np.mean(by_k[k]) / g0)
+                               for k in ks}}
+    emit("fig14c.giga_full.sweep", wall * 1e6,
+         f"points={len(points)},wall_s={wall:.1f},"
+         f"dispatches={summary['dispatches']},"
+         f"compiles={summary['compiles']},"
+         f"pipelined={summary['pipelined']}")
+    return summary
+
+
 def main(argv=None) -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--giga", action="store_true",
@@ -107,11 +171,18 @@ def main(argv=None) -> None:
                    help="skip (a)/(b); just the giga sim point")
     p.add_argument("--giga-slots", type=int, default=0,
                    help="override the giga point's slot count")
+    p.add_argument("--full", action="store_true",
+                   help="with --giga: the full k x seed sweep (k in "
+                        "{0,2,4,8} x 3 seeds), one pipelined megabatch "
+                        "dispatch per shape bucket")
     args = p.parse_args(argv)
     if not args.giga_only:
         run()
     if args.giga or args.giga_only:
-        run_giga(slots=args.giga_slots)
+        if args.full:
+            run_giga_full(slots=args.giga_slots)
+        else:
+            run_giga(slots=args.giga_slots)
 
 
 if __name__ == "__main__":

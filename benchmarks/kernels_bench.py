@@ -3,59 +3,120 @@
 On this CPU container the kernels run in interpret mode, so the µs numbers
 measure the oracle and the kernel-structure dispatch — the artifact that
 matters for TPU is the BlockSpec tiling, benchmarked here for shape
-coverage and numerics only."""
+coverage and numerics only.
+
+`benchmarks/run.py` invokes this with a JSON artifact path, so every CI
+bench run leaves a machine-readable `BENCH_kernels.json` next to the CSV
+stream (schema: one `{name, us_per_call, derived}` row per kernel)."""
 from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops, ref
+from repro.kernels import link_load, ops, ref
 
 from .common import emit, timeit
 
+DEFAULT_JSON = "BENCH_kernels.json"
+SCHEMA = 1
 
-def run() -> None:
+
+def run(json_out: Optional[str] = None) -> List[dict]:
+    rows: List[dict] = []
+
+    def bench(name: str, fn, iters: int, derived: str) -> None:
+        us = timeit(lambda: jax.block_until_ready(fn()), iters=iters)
+        emit(name, us, derived)
+        rows.append({"name": name, "us_per_call": us, "derived": derived})
+
     key = jax.random.PRNGKey(0)
     B, H, S, D = 1, 4, 512, 128
     q = jax.random.normal(key, (B, H, S, D), jnp.float32)
     k = jax.random.normal(jax.random.fold_in(key, 1), (B, H, S, D))
     v = jax.random.normal(jax.random.fold_in(key, 2), (B, H, S, D))
 
-    us = timeit(lambda: jax.block_until_ready(
-        ref.flash_attention_ref(q, k, v)), iters=3)
-    emit("kernels.flash_attention.ref_jnp", us, f"B{B}H{H}S{S}D{D}")
-    us = timeit(lambda: jax.block_until_ready(
-        ops.flash_attention(q, k, v, bq=128, bk=128)), iters=1)
-    emit("kernels.flash_attention.pallas_interpret", us, "bq128_bk128")
+    bench("kernels.flash_attention.ref_jnp",
+          lambda: ref.flash_attention_ref(q, k, v), 3, f"B{B}H{H}S{S}D{D}")
+    bench("kernels.flash_attention.pallas_interpret",
+          lambda: ops.flash_attention(q, k, v, bq=128, bk=128), 1,
+          "bq128_bk128")
 
     lengths = jnp.full((B,), S, jnp.int32)
-    us = timeit(lambda: jax.block_until_ready(
-        ops.decode_attention(q[:, :, :1], k, v, lengths, bk=256)), iters=1)
-    emit("kernels.decode_attention.pallas_interpret", us, "bk256")
+    bench("kernels.decode_attention.pallas_interpret",
+          lambda: ops.decode_attention(q[:, :, :1], k, v, lengths, bk=256),
+          1, "bk256")
 
     queues = jax.random.uniform(key, (256,))
     up = jnp.ones(256)
     w = jnp.ones(256)
     h = jax.random.randint(key, (4096,), 0, 1 << 30).astype(jnp.uint32)
-    us = timeit(lambda: jax.block_until_ready(
-        ops.jsq_route(queues, up, w, h)), iters=2)
-    emit("kernels.jsq_route.pallas_interpret", us, "ports256_pkts4096")
+    bench("kernels.jsq_route.pallas_interpret",
+          lambda: ops.jsq_route(queues, up, w, h), 2, "ports256_pkts4096")
 
     ra = jnp.ones(4) * 0.8
     el = jnp.ones(4)
     lq = jax.random.uniform(key, (4,))
     tx = jnp.full((4096,), 0.25)
-    us = timeit(lambda: jax.block_until_ready(
-        ops.plb_select(ra, el, lq, tx, h)), iters=2)
-    emit("kernels.plb_select.pallas_interpret", us, "planes4_pkts4096")
+    bench("kernels.plb_select.pallas_interpret",
+          lambda: ops.plb_select(ra, el, lq, tx, h), 2, "planes4_pkts4096")
 
     x = jax.random.normal(key, (4096, 512))
     noise = jax.random.uniform(jax.random.fold_in(key, 3), x.shape,
                                minval=-0.5, maxval=0.5)
-    us = timeit(lambda: jax.block_until_ready(
-        ops.int8_encode(x, noise)), iters=2)
-    emit("kernels.int8_encode.pallas_interpret", us, "4096x512")
+    bench("kernels.int8_encode.pallas_interpret",
+          lambda: ops.int8_encode(x, noise), 2, "4096x512")
+
+    # the simulator's sparse flow->link accumulation hot path: one
+    # monolithic segment_sum over a giga-sized flow axis vs the same
+    # population streamed through the chunked scatter-add
+    F, P, n_links = 102_400, 2, 8192
+    vals = jax.random.uniform(jax.random.fold_in(key, 4), (F, P))
+    keys_fl = jax.random.randint(jax.random.fold_in(key, 5), (F, P), 0,
+                                 n_links).astype(jnp.int32)
+    seg = jax.jit(lambda a, b: link_load.segment_load(a, b, n_links))
+    bench("kernels.segment_load.monolithic",
+          lambda: seg(vals, keys_fl), 3, f"F{F}P{P}links{n_links}")
+    ch = 4096
+    vc = vals.reshape(F // ch, ch, P)
+    kc = keys_fl.reshape(F // ch, ch, P)
+
+    @jax.jit
+    def chunked(vc, kc):
+        acc = jnp.zeros((n_links,), vals.dtype)
+        return jax.lax.scan(
+            lambda a, xs: (link_load.segment_load_chunk(a, *xs), None),
+            acc, (vc, kc))[0]
+
+    bench("kernels.segment_load.chunked_scan",
+          lambda: chunked(vc, kc), 3, f"chunk{ch}")
+
+    cap = jnp.ones((P, n_links))
+    load = jax.random.uniform(jax.random.fold_in(key, 6), (P, n_links))
+    bot = jax.jit(lambda c, l: link_load.bottleneck(
+        c, l, eps=1e-12, use_pallas=False))
+    bench("kernels.bottleneck.ref_jnp", lambda: bot(cap, load), 3,
+          f"P{P}links{n_links}")
+
+    if json_out:
+        with open(json_out, "w", encoding="utf-8") as f:
+            json.dump({"schema": SCHEMA, "rows": rows}, f, indent=2)
+        print(f"# bench json: {json_out}", flush=True)
+    return rows
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--json-out", default=DEFAULT_JSON,
+                   help="machine-readable artifact path ('' disables)")
+    args = p.parse_args(argv)
+    print("name,us_per_call,derived")
+    run(json_out=args.json_out or None)
 
 
 if __name__ == "__main__":
-    run()
+    main(sys.argv[1:])

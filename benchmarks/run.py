@@ -16,26 +16,29 @@ def main() -> None:
                    fig_train_comms, kernels_bench, roofline,
                    scenario_sweep)
     print("name,us_per_call,derived")
+    # entries are callables so modules with artifacts can be passed
+    # their output path (kernels_bench leaves BENCH_kernels.json)
     modules = [
-        ("fig1a", fig1a_latency_all2all),
-        ("fig1b", fig1b_lb_delay_queue),
-        ("fig1c", fig1c_maxflow_failures),
-        ("fig8", fig8_bisection),
-        ("fig9/10", fig9_isolation),
-        ("fig11", fig11_static_resiliency),
-        ("fig12", fig12_flap_recovery),
-        ("fig14", fig14_large_scale),
-        ("fig15", fig15_plane_lb),
-        ("train_comms", fig_train_comms),
-        ("reroute", fig_reroute_reaction),
-        ("kernels", kernels_bench),
-        ("roofline", roofline),
-        ("scenarios", scenario_sweep),
+        ("fig1a", fig1a_latency_all2all.run),
+        ("fig1b", fig1b_lb_delay_queue.run),
+        ("fig1c", fig1c_maxflow_failures.run),
+        ("fig8", fig8_bisection.run),
+        ("fig9/10", fig9_isolation.run),
+        ("fig11", fig11_static_resiliency.run),
+        ("fig12", fig12_flap_recovery.run),
+        ("fig14", fig14_large_scale.run),
+        ("fig15", fig15_plane_lb.run),
+        ("train_comms", fig_train_comms.run),
+        ("reroute", fig_reroute_reaction.run),
+        ("kernels", lambda: kernels_bench.run(
+            json_out=kernels_bench.DEFAULT_JSON)),
+        ("roofline", roofline.run),
+        ("scenarios", scenario_sweep.run),
     ]
     failed = []
-    for name, mod in modules:
+    for name, fn in modules:
         try:
-            mod.run()
+            fn()
         except Exception:                                  # noqa: BLE001
             failed.append(name)
             traceback.print_exc()

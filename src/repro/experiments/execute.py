@@ -4,9 +4,11 @@
 'numpy' fans points out over a process pool; 'jax' dispatches the whole
 grid through the megabatch path by default — every structurally
 compatible point (any mix of routing / nic / fault / seed axes) stacks
-into ONE fused `jit(vmap)`/pmap launch that compiles once
-(`repro.netsim.jx.megabatch`) — or, with `jx_dispatch="group"`, through
-the legacy per-(scenario, routing, nic) grouped-vmap path.  Either way
+into ONE fused `jit(vmap)` launch (mesh-sharded over multiple devices)
+that compiles once (`repro.netsim.jx.megabatch`), with host prep of
+bucket k+1 pipelined against device execution of bucket k — or, with
+`jx_dispatch="group"`, through the legacy per-(scenario, routing, nic)
+grouped-vmap path.  Either way
 completed rows stream back through `on_result(index, metrics)` as they
 finish — per future on the pool path, per finalized batch/group on the
 JAX paths — which is what lets `run_experiment` write the cache and
@@ -24,7 +26,8 @@ import multiprocessing
 import os
 import sys
 import time
-from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
+from concurrent.futures import (FIRST_COMPLETED, ProcessPoolExecutor,
+                                ThreadPoolExecutor, wait)
 from dataclasses import replace
 from functools import partial
 from typing import Callable, Dict, List, Optional
@@ -119,9 +122,10 @@ def execute_points(points: List[ScenarioSpec],
             raise ValueError(
                 f"unknown jx_dispatch {mode!r}; expected one of "
                 f"{JX_DISPATCH_MODES}")
-        out, stats, overflows = _execute_jax(points, derive, emit, mode,
-                                             point_walls)
-        _done(mode, dispatch_stats=stats, f32_overflows=overflows)
+        out, stats, overflows, pipeline = _execute_jax(
+            points, derive, emit, mode, point_walls)
+        _done(mode, dispatch_stats=stats, f32_overflows=overflows,
+              pipeline=pipeline)
         return out
     if backend != "numpy":
         raise ValueError(
@@ -203,9 +207,12 @@ def _execute_jax(points: List[ScenarioSpec], derive: Optional[Callable],
 
     'megabatch' (default): every structurally compatible point — any
     mix of routing, nic, fault, and seed axes — stacks into ONE fused
-    `jit(vmap)`/pmap launch that compiles once; heterogeneous flow
-    counts and fault timelines share programs via shape buckets
-    (`repro.netsim.jx.megabatch`).
+    `jit(vmap)` launch that compiles once; heterogeneous flow counts
+    and fault timelines share programs via shape buckets
+    (`repro.netsim.jx.megabatch`).  Dispatch is pipelined: a single
+    prep worker runs the memoized host prep + launch of shape bucket
+    k+1 while the device executes bucket k, and the main thread
+    finalizes each bucket's rows as it retires.
 
     'group' (the PR 3 path, kept for A/B benchmarking and parity
     pinning): group grid points that share structure (same scenario
@@ -240,17 +247,51 @@ def _execute_jax(points: List[ScenarioSpec], derive: Optional[Callable],
     # collect_dispatch attributes launches to THIS sweep: the
     # before/after global-counter delta it replaces misattributed any
     # launches concurrent executors made on other threads
+    pipeline: Dict = {}
     with collect_dispatch() as counter:
         if mode == "megabatch":
-            from repro.netsim.jx.megabatch import (dispatch_megabatch,
-                                                   finalize_group)
+            from repro.netsim.jx.engine import (adopt_dispatch,
+                                                current_collectors)
+            from repro.netsim.jx.megabatch import (dispatch_planned,
+                                                   finalize_group,
+                                                   plan_megabatch)
+
+            import jax
+            from jax.experimental import disable_x64, enable_x64
 
             compiled = [compile_scenario(p) for p in points]
-            for idxs, handle in dispatch_megabatch(compiled):
-                tg = time.perf_counter()
-                for i, r in zip(idxs, finalize_group(handle)):
-                    deliver(i, compiled[i], r)
-                record_group(idxs, time.perf_counter() - tg)
+            caches, planned = plan_megabatch(compiled)
+            collectors = current_collectors()
+            x64 = bool(jax.config.jax_enable_x64)
+
+            def prep(group):
+                # the worker thread runs outside the main thread's
+                # collect_dispatch scope AND its thread-local jax
+                # config overrides (`enable_x64()` contexts): adopt the
+                # counters and re-assert the caller's x64 state so the
+                # launch traces with the caller's dtypes
+                with adopt_dispatch(collectors), \
+                        (enable_x64() if x64 else disable_x64()):
+                    return dispatch_planned(group, caches)
+
+            launches = 0
+            # single prep worker: host prep (memoized flow arrays,
+            # fault timelines, ECMP replays) of bucket k+1 overlaps
+            # device execution of bucket k (JAX dispatch is async);
+            # the main thread finalizes rows as buckets retire
+            with ThreadPoolExecutor(max_workers=1) as pool:
+                futs = [pool.submit(prep, g) for g in planned]
+                for fut in futs:
+                    for idxs, handle in fut.result():
+                        launches += 1
+                        tg = time.perf_counter()
+                        for i, r in zip(idxs, finalize_group(handle)):
+                            deliver(i, compiled[i], r)
+                        record_group(idxs, time.perf_counter() - tg)
+            # >1 launch means prep/execute/finalize actually overlapped
+            # (launch k+1's host prep runs while the device executes k)
+            pipeline = {"groups": len(planned), "launches": launches,
+                        "pipelined": launches > 1}
         else:
             from repro.netsim.jx.engine import (dispatch_compiled_batch,
                                                 finalize_batch)
@@ -279,4 +320,4 @@ def _execute_jax(points: List[ScenarioSpec], derive: Optional[Callable],
                     deliver(i, c, r)
                 record_group(idxs, time.perf_counter() - tg)
     overflows = list(f32_overflow_log()[n_overflows0:])
-    return results, counter.snapshot(), overflows
+    return results, counter.snapshot(), overflows, pipeline

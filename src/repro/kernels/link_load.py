@@ -146,3 +146,17 @@ def segment_load(vals: jax.Array, keys: jax.Array,
     bit-exactness contract the engine's parity mode relies on."""
     return jax.ops.segment_sum(vals.reshape(-1), keys.reshape(-1),
                                num_segments=num_segments)
+
+
+def segment_load_chunk(acc: jax.Array, vals: jax.Array,
+                       keys: jax.Array) -> jax.Array:
+    """One streaming step of `segment_load`: add this chunk's `vals`
+    into the flat accumulator `acc` (shape `(num_segments,)`), keyed by
+    `keys`.  Both this scatter-add and `segment_sum` apply duplicate
+    updates in index (= flow) order on the XLA CPU f64 expander, so
+    folding chunks left-to-right reproduces the monolithic call's
+    per-bucket addition chain bit for bit — the invariant the chunked
+    engine's x64 parity tests pin.  Pad flows must carry exact +0.0
+    values (the engine's inert-pad contract), which cannot perturb any
+    partial sum of non-negative rates."""
+    return acc.at[keys.reshape(-1)].add(vals.reshape(-1))

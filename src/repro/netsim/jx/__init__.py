@@ -18,13 +18,15 @@ from .events import FaultTimeline, compile_fault_timeline, has_static_timeline
 from .engine import (JxConfig, JxSimResult, StackIdx, dispatch_stats,
                      reset_dispatch_stats, run_compiled,
                      run_compiled_batch)
-from .megabatch import dispatch_megabatch, finalize_group, run_megabatch
+from .megabatch import (dispatch_megabatch, dispatch_planned,
+                        finalize_group, plan_megabatch, run_megabatch)
 from .state import FlowBatch, NicCarry, SimCarry
 
 __all__ = [
     "FaultTimeline", "compile_fault_timeline", "has_static_timeline",
     "JxConfig", "JxSimResult", "StackIdx", "run_compiled",
     "run_compiled_batch", "run_megabatch", "dispatch_megabatch",
-    "finalize_group", "dispatch_stats", "reset_dispatch_stats",
+    "plan_megabatch", "dispatch_planned", "finalize_group",
+    "dispatch_stats", "reset_dispatch_stats",
     "FlowBatch", "NicCarry", "SimCarry",
 ]

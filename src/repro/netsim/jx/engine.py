@@ -124,6 +124,40 @@ def compact_carry_default() -> bool:
     return bool(_env_flag("REPRO_JX_COMPACT"))
 
 
+# per-flow working-set arrays live per (flow, plane) cell in the chunked
+# estimate: 5 NicCarry leaves + offered/fabric_rate/through/qmean/
+# achieved_pp/rtt/ecn intermediates
+_FLOW_WORKING_ARRAYS = 12
+
+
+def flow_chunk_default(n_flows: int, n_planes: int,
+                       agg_mode: str) -> int:
+    """Chunk length for streaming the flow axis through `_slot_step`'s
+    sparse path, or 0 to keep the monolithic layout.  Auto-enables when
+    the per-flow working set (roughly `_FLOW_WORKING_ARRAYS` live
+    (F, P) arrays) exceeds `REPRO_JX_FLOW_BUDGET_MB` (default 8192 —
+    one device's comfortable share); `REPRO_JX_FLOW_CHUNK=<n>` forces a
+    chunk length (0 disables) regardless of the budget.  Chunking is a
+    sparse-aggregation feature: callers that enable it coerce
+    `agg_mode="sparse"` (the dense gather plans are exactly the
+    monolithic layout chunking exists to avoid)."""
+    env = os.environ.get("REPRO_JX_FLOW_CHUNK")
+    if env is not None:
+        return max(0, int(env))
+    if agg_mode != "sparse" or n_flows <= 0:
+        return 0
+    itemsize = 8 if jax.config.jax_enable_x64 else 4
+    per_flow = max(1, n_planes) * itemsize * _FLOW_WORKING_ARRAYS
+    budget = float(os.environ.get("REPRO_JX_FLOW_BUDGET_MB", 8192))
+    if n_flows * per_flow <= budget * 2**20:
+        return 0
+    chunk = int(budget * 2**20 // per_flow)
+    # pow2 floor (shape-bucket friendly), never below 1024 — tiny
+    # chunks would make the inner scan longer than the flow axis wins
+    chunk = max(1024, 1 << max(0, chunk.bit_length() - 1))
+    return min(chunk, n_flows)
+
+
 @dataclass(frozen=True)
 class JxConfig:
     """Static (hashable) simulation parameters: everything `lax.scan`
@@ -163,6 +197,13 @@ class JxConfig:
     agg_mode: str = "dense"
     # float32 runs only: int8 probe counters in the scan carry
     compact_carry: bool = False
+    # Sparse mode only: >0 streams the flow axis through the slot step
+    # in chunks of this length (an inner `lax.scan` accumulates the
+    # per-chunk scatter-adds in flow order, so x64 results stay
+    # bit-identical to the monolithic layout) — populations larger than
+    # one device's memory budget still run.  0 = monolithic (see
+    # `flow_chunk_default`).
+    flow_chunk: int = 0
     # Schedule workloads: number of demand-multiplier lanes in the
     # per-segment phase timeline (0 = no timeline; the multiply is
     # compiled out and program identity matches pre-schedule HLO).
@@ -325,6 +366,33 @@ def collect_dispatch():
         yield counter
     finally:
         stack.remove(counter)
+
+
+def current_collectors() -> Tuple["DispatchCounter", ...]:
+    """Snapshot of the collectors active on *this* thread — capture it
+    before handing work to a helper thread, then `adopt_dispatch` the
+    snapshot there so `collect_dispatch` scopes survive the hop."""
+    return tuple(getattr(_COLLECTORS, "stack", None) or ())
+
+
+@contextmanager
+def adopt_dispatch(collectors: Tuple["DispatchCounter", ...]):
+    """Attribute this thread's launches to collectors captured on
+    another thread (via `current_collectors`).  The pipelined megabatch
+    executor dispatches from a worker thread while the caller's
+    `collect_dispatch` scope lives on the main thread — without
+    adoption those launches would vanish from the sweep's own counter.
+    Collectors already active on this thread are not double-counted."""
+    stack = getattr(_COLLECTORS, "stack", None)
+    if stack is None:
+        stack = _COLLECTORS.stack = []
+    adopted = [c for c in collectors if c not in stack]
+    stack.extend(adopted)
+    try:
+        yield
+    finally:
+        for c in adopted:
+            stack.remove(c)
 
 
 def _device_fingerprint() -> Tuple:
@@ -1036,6 +1104,15 @@ def _simulate(cfg: JxConfig, fb: FlowBatch, seg_up, seg_down, seg_acc,
               seg_up2, seg_down2, seg_dem, seg_vup, seg_vdown, seg_vup2,
               seg_vdown2, assign_segments, aggs, seg_id,
               stack=None, carry0=None, ecmp_table=None, uid=None):
+    if cfg.flow_chunk:
+        # streaming path: the flow axis runs through the slot step in
+        # fixed-size chunks (sparse aggregation only — `aggs`/the ECMP
+        # plan table are never gathered there)
+        from . import chunked
+        return chunked.simulate_chunked(
+            cfg, fb, seg_up, seg_down, seg_acc, seg_up2, seg_down2,
+            seg_dem, seg_vup, seg_vdown, seg_vup2, seg_vdown2,
+            assign_segments, seg_id, stack=stack, carry0=carry0)
     if carry0 is None:
         carry0 = init_carry(fb, cfg)
     if ecmp_table is None:
@@ -1118,14 +1195,29 @@ def _jitted(cfg: JxConfig, batched: bool, n_shards: int = 1):
     return fn
 
 
+def lane_mesh(n_shards: int) -> "jax.sharding.Mesh":
+    """1-D device mesh over the megabatch lane (batch) axis.  Today the
+    axis spans local host devices; under `jax.distributed` the same
+    `Mesh(("lane",))` layout extends to multi-process global devices —
+    `_jitted_mb`'s NamedSharding code path is written against the mesh,
+    not the device list, so only this constructor changes."""
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices()[:n_shards]), ("lane",))
+
+
 def _jitted_mb(cfg: JxConfig, n_shards: int = 1,
                lanes: Optional[Tuple[Tuple[int, int], ...]] = None):
-    """Compiled megabatch entry point: one `jit(vmap)` (or pmap over
-    host devices) covering every (routing, nic) via traced `StackIdx`,
-    with the initial scan carry donated — the step rewrites it wholesale,
-    so XLA reuses its buffers instead of allocating a second batch.
+    """Compiled megabatch entry point: one `jit(vmap)` covering every
+    (routing, nic) via traced `StackIdx`, with the initial scan carry
+    donated — the step rewrites it wholesale, so XLA reuses its buffers
+    instead of allocating a second batch.  With `n_shards > 1` the
+    batch axis is `jax.sharding`-partitioned over a 1-D "lane" device
+    mesh (`lane_mesh`): operands arrive flat `(B, ...)`, `in_shardings`
+    places them, and the per-shard computation stays device-local via a
+    shard-axis `vmap` — the modern replacement for the old device-major
+    `pmap` layout, structured to extend to `jax.distributed` meshes.
 
-    `lanes` is the dispatcher's static per-device layout: a tuple of
+    `lanes` is the dispatcher's static per-shard layout: a tuple of
     `(route_index, n_elements)` runs.  Elements are lane-sorted by the
     dispatcher, so within a run the route index is concrete and only
     that routing branch is traced; `None` falls back to the fully
@@ -1164,8 +1256,37 @@ def _jitted_mb(cfg: JxConfig, n_shards: int = 1,
     if n_shards == 1:
         fn = jax.jit(body, donate_argnums=(1,))
     else:
-        fn = jax.pmap(body, in_axes=(0,) * 17 + (None,),
-                      donate_argnums=(1,))
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        mesh = lane_mesh(n_shards)
+        lane = NamedSharding(mesh, PartitionSpec("lane"))
+        repl = NamedSharding(mesh, PartitionSpec())
+        tm = jax.tree_util.tree_map
+
+        def sharded(*args):
+            # flat (B, ...) operands -> (shards, per, ...) so the lanes
+            # body (whose run lengths are per-shard) vmaps over the
+            # shard axis with device-local data; outputs flatten back.
+            # The reshape splits the already-lane-sharded leading axis
+            # evenly, so no resharding happens at either end.
+            mapped, table = args[:-1], args[-1]
+            per = np.shape(jax.tree_util.tree_leaves(
+                mapped[0])[0])[0] // n_shards
+
+            def split(x):
+                return jnp.reshape(
+                    x, (n_shards, per) + tuple(x.shape[1:]))
+
+            out = jax.vmap(body, in_axes=(0,) * 17 + (None,))(
+                *tm(split, mapped), table)
+            return tm(lambda x: jnp.reshape(
+                x, (n_shards * per,) + tuple(x.shape[2:])), out)
+
+        fn = jax.jit(
+            sharded,
+            in_shardings=(lane,) * 17 + (repl,),
+            out_shardings=lane,
+            donate_argnums=(1,))
     _JIT_CACHE[key] = fn
     return fn
 
@@ -1245,6 +1366,12 @@ def _prepared(compiled
         cfg = replace(cfg, react=True)
         lag = reaction_lag(r, spec.sim.routing)
         vtl = lagged_timeline(tl, lag) if lag > 0 else tl
+    chunk = flow_chunk_default(len(fa), cfg.n_planes, cfg.agg_mode)
+    if chunk and not cfg.trace.enabled:
+        # chunked streaming implies sparse aggregation (a forced
+        # REPRO_JX_FLOW_CHUNK coerces it; the auto heuristic only fires
+        # on already-sparse shapes)
+        cfg = replace(cfg, agg_mode="sparse", flow_chunk=chunk)
     return cfg, fa, tl, pm, vtl
 
 

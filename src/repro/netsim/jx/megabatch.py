@@ -4,8 +4,9 @@ The per-group path (`engine.dispatch_compiled_batch`) batches only the
 seed axis: every distinct (scenario, routing, nic, fault) structure is
 its own compiled program and its own launch, so a routing × nic × fault
 grid pays tens of compiles and serialized dispatches.  This module
-instead stacks *every* point of a grid into one `jit(vmap)` / `pmap`
-launch:
+instead stacks *every* point of a grid into one `jit(vmap)` launch —
+sharded over the lane axis with a `jax.sharding` Mesh/NamedSharding
+when multiple devices are visible:
 
   * `routing` / `nic` become per-element `StackIdx` branch selectors,
     resolved by `lax.switch` inside the traced program (the engine's
@@ -31,6 +32,19 @@ count, record cadence, … or a different shape bucket) split into
 multiple launches — still one per *structure*, never one per point.
 Row-identity with the per-group path (1e-5, x64) is pinned by
 `tests/test_megabatch.py`.
+
+Multi-device runs hand the batch to `engine._jitted_mb` as flat
+`(B, ...)` arrays with lane-axis `NamedSharding`s; the jitted program
+reshapes to `(shards, B//shards, ...)` internally so each mesh device
+sees the same static per-shard lane layout the old `pmap` path used.
+The mesh is 1-D over `jax.devices()`, so the same code path extends to
+multi-process `jax.distributed` meshes later.
+
+`plan_megabatch` / `dispatch_planned` split the grouping (cheap,
+structural) from the host prep + launch (expensive, memoized) so
+`experiments/execute.py` can pipeline: prep bucket k+1 on a worker
+thread while the device executes bucket k.  `dispatch_megabatch` is the
+sequential composition of the two.
 """
 from __future__ import annotations
 
@@ -98,8 +112,17 @@ def _struct_cfg(compiled) -> JxConfig:
     n_phases = _bucket(pm.shape[1]) if pm is not None else 0
     r = compiled.spec.reaction
     react = r is not None and r.enabled
-    return replace(base, routing="*", nic="*", sw_lb_delay_slots=delay,
-                   n_phases=n_phases, react=react)
+    cfg = replace(base, routing="*", nic="*", sw_lb_delay_slots=delay,
+                  n_phases=n_phases, react=react)
+    # chunked flow streaming: size the chunk off the point's flow
+    # *bucket* (not the raw count) so every point of a shape bucket
+    # lands in the same structural group with the same chunk length
+    chunk = engine.flow_chunk_default(
+        _bucket(len(compiled.flows), FLOW_BUCKET_MIN), cfg.n_planes,
+        cfg.agg_mode)
+    if chunk and not cfg.trace.enabled:
+        cfg = replace(cfg, agg_mode="sparse", flow_chunk=chunk)
+    return cfg
 
 
 def _prepare(index: int, compiled, caches: Dict) -> _Point:
@@ -252,6 +275,11 @@ def _dispatch_group(cfg: JxConfig, pts: List[_Point], caches: Dict):
     replicas of its last element; `finalize_group` drops them."""
     from .state import FlowBatch
     F_b = _bucket(max(len(p.fa) for p in pts), FLOW_BUCKET_MIN)
+    if cfg.flow_chunk:
+        # chunked runs reshape the flow axis to (chunks, chunk): round
+        # the bucket up to a chunk multiple so the streamed scan needs
+        # no extra tail pad (the rounding pad is the usual inert kind)
+        F_b = -(-F_b // cfg.flow_chunk) * cfg.flow_chunk
     seg_b = _bucket(max(len(p.boundaries) for p in pts))
     widths = tuple(_bucket(m) for m in
                    map(max, zip(*(p.widths for p in pts))))
@@ -370,10 +398,9 @@ def _dispatch_group(cfg: JxConfig, pts: List[_Point], caches: Dict):
               np.stack([e["assign"] for e in seq]), aggs,
               np.array([e["uid"] for e in seq], np.int32),
               np.stack([e["caps"][6] for e in seq]))
-    if shards > 1:
-        mapped = jax.tree_util.tree_map(
-            lambda a: np.asarray(a).reshape(
-                (shards, B // shards) + np.shape(a)[1:]), mapped)
+    # multi-shard groups stay flat (B, ...): the mesh-sharded program
+    # reshapes to (shards, B//shards, ...) internally, and `seq` is
+    # already dealt device-major so the flat order is shard-major
     engine._record_launch("mega", (cfg, shards, lanes_static),
                           mapped + (table,))
     with warnings.catch_warnings():
@@ -388,29 +415,62 @@ def _dispatch_group(cfg: JxConfig, pts: List[_Point], caches: Dict):
     return cfg, metas, [p.index for p in pts], shards, out
 
 
+def plan_megabatch(points: List) -> Tuple[Dict, List[List[Tuple]]]:
+    """Cheap structural pre-grouping of `CompiledScenario`s: bucket by
+    `(struct cfg, flow bucket)` *without* building flow arrays or fault
+    timelines.  Returns `(caches, planned)` where each planned group is
+    `[(point_index, compiled), ...]` ready for `dispatch_planned` —
+    this is the unit the executor pipelines (host prep of group k+1
+    overlapping device execution of group k)."""
+    engine._BACKEND_USED = True
+    caches: Dict = {}
+    groups: Dict[Tuple, List[Tuple]] = {}
+    order: List[Tuple] = []
+    for i, c in enumerate(points):
+        key = (_struct_cfg(c), _bucket(len(c.flows), FLOW_BUCKET_MIN))
+        if key not in groups:
+            groups[key] = []
+            order.append(key)
+        groups[key].append((i, c))
+    return caches, [groups[k] for k in order]
+
+
+def dispatch_planned(group: List[Tuple], caches: Dict) -> List:
+    """Full host prep + launch for one planned group.  Runs the
+    memoized `_prepare` for each member, sub-splits by the complete
+    structural key (fault-timeline segment counts only become known
+    here), and launches each sub-group.  Returns `[(point_indices,
+    handle)]` entries for `finalize_group`."""
+    prepared = [_prepare(i, c, caches) for i, c in group]
+    sub: Dict[Tuple, List[_Point]] = {}
+    order: List[Tuple] = []
+    for p in prepared:
+        key = (p.cfg, _bucket(len(p.fa), FLOW_BUCKET_MIN),
+               _bucket(len(p.boundaries)))
+        if key not in sub:
+            sub[key] = []
+            order.append(key)
+        sub[key].append(p)
+    out = []
+    for key in order:
+        pts = sub[key]
+        handle = _dispatch_group(key[0], pts, caches)
+        out.append(([p.index for p in pts], handle))
+    return out
+
+
 def dispatch_megabatch(points: List) -> List:
     """Group `CompiledScenario`s by structural key and launch each group
     as ONE fused program (all groups dispatched before any is awaited —
     JAX CPU execution is async).  Returns `[(point_indices, handle)]`
     for `finalize_group`.  A homogeneous-topology grid — however many
-    routing/nic/fault/seed axes it sweeps — is a single group."""
-    engine._BACKEND_USED = True
-    caches: Dict = {}
-    prepared = [_prepare(i, c, caches) for i, c in enumerate(points)]
-    groups: Dict[Tuple, List[_Point]] = {}
-    order: List[Tuple] = []
-    for p in prepared:
-        key = (p.cfg, _bucket(len(p.fa), FLOW_BUCKET_MIN),
-               _bucket(len(p.boundaries)))
-        if key not in groups:
-            groups[key] = []
-            order.append(key)
-        groups[key].append(p)
-    out = []
-    for key in order:
-        pts = groups[key]
-        handle = _dispatch_group(key[0], pts, caches)
-        out.append(([p.index for p in pts], handle))
+    routing/nic/fault/seed axes it sweeps — is a single group.  This is
+    the sequential composition of `plan_megabatch` + `dispatch_planned`;
+    the executor's pipelined path calls the two halves itself."""
+    caches, planned = plan_megabatch(points)
+    out: List = []
+    for group in planned:
+        out.extend(dispatch_planned(group, caches))
     return out
 
 
@@ -420,8 +480,6 @@ def finalize_group(handle) -> List[JxSimResult]:
     the lane sort (results come back in the group's point order)."""
     cfg, metas, order, shards, out = handle
     outs = [np.asarray(o) for o in out]
-    if shards > 1:
-        outs = [o.reshape((-1,) + o.shape[2:]) for o in outs]
     by_index = {}
     for b, (index, fa) in enumerate(metas):
         if index < 0 or index in by_index:      # lane pad replica
